@@ -1,0 +1,79 @@
+"""Shared benchmark plumbing: sizes, timers, CSV/markdown emitters.
+
+Every benchmark prints a short CSV block (stable, grep-able) followed by a
+human summary with the paper's target numbers next to the measured ones.
+``--full`` runs the paper-scale protocol (65 536 columns, 8 192 trials);
+the default is a 16 384-column subsample whose ECR estimates carry ~0.3 %
+sampling error — enough for every comparison made here, ~10x faster on the
+single-CPU container.
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import dataclasses
+import json
+import pathlib
+import time
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+
+
+@dataclasses.dataclass
+class BenchScale:
+    n_cols: int = 16384
+    n_trials_maj5: int = 8192
+    n_cols_arith: int = 2048
+    n_trials_arith: int = 512
+    full: bool = False
+
+
+def parse_scale(argv=None, description: str = "") -> BenchScale:
+    ap = argparse.ArgumentParser(description=description)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale protocol (65536 cols, slower)")
+    ap.add_argument("--n-cols", type=int, default=None)
+    args = ap.parse_args(argv)
+    s = BenchScale()
+    if args.full:
+        s = BenchScale(n_cols=65536, n_cols_arith=4096, full=True)
+    if args.n_cols:
+        s = dataclasses.replace(s, n_cols=args.n_cols)
+    return s
+
+
+@contextlib.contextmanager
+def timed(label: str):
+    t0 = time.time()
+    yield
+    print(f"  [{label}: {time.time() - t0:.1f}s]", flush=True)
+
+
+def emit(name: str, rows: list[dict], header: str | None = None) -> None:
+    """Print a CSV block and persist it under artifacts/bench/<name>.json."""
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / f"{name}.json").write_text(json.dumps(rows, indent=1, default=str))
+    if not rows:
+        return
+    cols = list(rows[0])
+    print(f"\n#csv {name}")
+    if header:
+        print(f"# {header}")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(_fmt(r[c]) for c in cols))
+    print()
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def ratio_line(label: str, measured: float, target: float,
+               tol: float = 0.15) -> str:
+    ok = abs(measured - target) <= tol * abs(target)
+    flag = "OK " if ok else "DEV"
+    return (f"  {flag} {label}: measured {measured:.3f} vs paper "
+            f"{target:.3f} ({measured / target:.2f}x of target)")

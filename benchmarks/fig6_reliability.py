@@ -1,0 +1,42 @@
+"""Paper Fig. 6: reliability of fixed T_{2,1,0} calibration under temperature
+(40-100 C) and time (1 week) drift.
+
+Metric is *new ECR*: columns error-free at calibration time that become
+error-prone under the drifted condition. Paper: < 0.14 % across temperature,
+< 0.27 % across one week.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.reliability import reliability_sweep
+
+from .common import emit, parse_scale, timed
+
+
+def run(scale, key=jax.random.key(11)) -> tuple[list[dict], list[dict]]:
+    with timed("fig6 sweep"):
+        temp_pts, time_pts = reliability_sweep(
+            key, "T210", n_cols=scale.n_cols,
+            n_trials=scale.n_trials_maj5)
+    temps = [{"temp_c": p.condition, "ecr_pct": 100 * p.ecr,
+              "new_ecr_pct": 100 * p.new_ecr} for p in temp_pts]
+    times = [{"days": p.condition, "ecr_pct": 100 * p.ecr,
+              "new_ecr_pct": 100 * p.new_ecr} for p in time_pts]
+    return temps, times
+
+
+def main(scale=None) -> None:
+    scale = scale or parse_scale(description=__doc__)
+    temps, times = run(scale)
+    emit("fig6_temperature", temps)
+    emit("fig6_time", times)
+    max_t = max(r["new_ecr_pct"] for r in temps)
+    max_d = max(r["new_ecr_pct"] for r in times)
+    print("Fig. 6 validation vs paper:")
+    print(f"  new ECR over 40-100C: max {max_t:.3f}%  (paper < 0.14%)")
+    print(f"  new ECR over 1 week:  max {max_d:.3f}%  (paper < 0.27%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Beyond-paper: the MVDRAM serving table — end-to-end PUD decode rates for
+every assigned architecture, baseline vs PUDTune calibration (Eq. 1 applied
+to the bit-serial MAC schedule of pud/bitserial.py priced on DDR4-2133).
+
+This is the paper's own motivation ("MVDRAM accelerates matrix-vector
+multiplication for LLM inference") quantified per model: tokens/s a
+4-channel DDR4 PUD system sustains for batch-1 decode with 8-bit weights,
+and how much of that rate PUDTune's extra error-free columns buy.
+"""
+from __future__ import annotations
+
+from repro.configs import all_archs, get
+from repro.pud.gemv import PUDPerfModel
+
+from .common import emit, parse_scale
+
+# Table-I operating points (measured in benchmarks/table1.py)
+ECR_BASELINE = 0.466
+ECR_PUDTUNE = 0.033
+
+
+def run(scale=None) -> list[dict]:
+    base = PUDPerfModel(error_free_frac=1 - ECR_BASELINE)
+    tune = PUDPerfModel(error_free_frac=1 - ECR_PUDTUNE)
+    rows = []
+    for arch in all_archs():
+        spec = get(arch)
+        flops_tok = 2 * spec.n_active_params
+        rows.append({
+            "arch": arch,
+            "active_params_B": spec.n_active_params / 1e9,
+            "baseline_tok_s": base.tokens_per_second(flops_tok),
+            "pudtune_tok_s": tune.tokens_per_second(flops_tok),
+            "gain": tune.speedup_vs(base),
+        })
+    return rows
+
+
+def main(scale=None) -> None:
+    rows = run(scale)
+    emit("mvdram_serving", rows,
+         header="batch-1 decode on 4-channel DDR4 PUD, 8-bit weights")
+    print("MVDRAM serving model (Eq. 1, per calibrated device):")
+    for r in rows:
+        print(f"  {r['arch']:<26s} {r['active_params_B']:6.2f}B active: "
+              f"{r['baseline_tok_s']:7.3f} -> {r['pudtune_tok_s']:7.3f} tok/s"
+              f"  ({r['gain']:.2f}x)")
+    print("  (PUDTune's column gain converts 1:1 into serving throughput "
+          "for every arch)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/<mesh>/<arch>__<shape>[__<variant>].json (written by
+``python -m repro.launch.dryrun``) and derives, per cell:
+
+    compute term    = HLO_FLOPs_per_device / 197e12        [s]
+    memory term     = HLO_bytes_per_device / 819e9         [s]
+    collective term = collective_bytes_per_device / 50e9   [s]
+
+All three use per-device quantities (the dry-run compiles the SPMD-partitioned
+per-device module), which equals the brief's global/(chips*rate) form.
+The collective term conservatively assumes ONE 50 GB/s link-equivalent per
+chip; v5e's 2D torus has more, so this is an upper bound on collective time.
+
+MODEL_FLOPS uses 6*N*D for training (fwd+bwd) and 2*N*D for inference cells
+(forward only), N = active params, D = tokens processed by the step.
+useful_ratio = MODEL_FLOPS / (HLO_FLOPs * chips) — remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.configs import SHAPES, get
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+PEAK_FLOPS = 197e12     # bf16 / chip (TPU v5e)
+HBM_BW = 819e9          # B/s / chip
+LINK_BW = 50e9          # B/s / link, 1 link-equivalent per chip (conservative)
+
+
+def model_flops_per_device(arch: str, shape: str, n_devices: int) -> float:
+    spec = get(arch)
+    cell = SHAPES[shape]
+    n = spec.n_active_params
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        mult = 6.0
+    elif cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        mult = 2.0
+    else:  # decode: one token per sequence
+        tokens = cell.global_batch
+        mult = 2.0
+    return mult * n * tokens / n_devices
+
+
+def analyze_record(rec: dict) -> dict:
+    arch, shape = rec["arch"], rec["shape"]
+    nd = rec["n_devices"]
+    flops = rec.get("flops_per_device", 0.0)
+    bytes_ = rec.get("bytes_per_device", 0.0)
+    coll = rec.get("collectives", {}).get("total_bytes", 0.0)
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_ / HBM_BW
+    t_x = coll / LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    mf = model_flops_per_device(arch, shape, nd)
+    bound = max(terms.values())
+    return {
+        "arch": arch, "shape": shape,
+        "variant": rec.get("variant", "base"),
+        "mesh": rec["mesh"], "chips": nd,
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom,
+        "model_flops_per_dev": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        # roofline fraction: ideal compute time at peak on *model* flops over
+        # the modeled step time (= dominant term; terms overlap on TPU).
+        "roofline_frac": (mf / PEAK_FLOPS) / bound if bound else 0.0,
+        "peak_gib": rec.get("peak_bytes_per_device", 0) / 2**30,
+    }
+
+
+def load(mesh: str, variant: str | None = None) -> list[dict]:
+    rows = []
+    for p in sorted((ART / mesh).glob("*.json")):
+        if p.name.endswith(".error.json"):
+            continue
+        rec = json.loads(p.read_text())
+        if not rec.get("ok"):
+            continue
+        v = rec.get("variant", "base")
+        if variant is not None and v != variant:
+            continue
+        rows.append(analyze_record(rec))
+    return rows
+
+
+def fmt_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | variant | compute_s | memory_s | collective_s | "
+           "dominant | useful | roofline |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['variant']} "
+            f"| {r['compute_s']:.3g} | {r['memory_s']:.3g} "
+            f"| {r['collective_s']:.3g} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_frac']:.2f} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--variant", default="base",
+                    help="'base' (default), a variant name, or 'all'")
+    args = ap.parse_args()
+    variant = None if args.variant == "all" else args.variant
+    rows = load(args.mesh, variant)
+    if not rows:
+        print(f"no dry-run artifacts under {ART / args.mesh} — run "
+              "PYTHONPATH=src python -m repro.launch.dryrun first")
+        return
+    print(fmt_table(rows))
+    worst = min(rows, key=lambda r: r["roofline_frac"])
+    coll = max(rows, key=lambda r: r["collective_s"])
+    print(f"\nworst roofline fraction: {worst['arch']}/{worst['shape']} "
+          f"({worst['roofline_frac']:.2f})")
+    print(f"most collective-bound:  {coll['arch']}/{coll['shape']} "
+          f"({coll['collective_s']:.3g}s)")
+
+
+if __name__ == "__main__":
+    main()

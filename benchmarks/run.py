@@ -1,0 +1,75 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Order: offset ladders (Fig. 3) -> Table I -> Frac sensitivity (Fig. 5) ->
+reliability (Fig. 6) -> Algorithm-1 convergence -> Pallas kernels ->
+roofline summary (reads dry-run artifacts if present).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from .common import BenchScale
+
+BENCHES = ("fig3", "table1", "fig5", "fig6", "convergence", "kernels",
+           "serving", "majx", "roofline")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale protocol (65536 columns; slower)")
+    ap.add_argument("--only", default=None, choices=BENCHES)
+    args = ap.parse_args()
+    scale = (BenchScale(n_cols=65536, n_cols_arith=4096, full=True)
+             if args.full else BenchScale())
+
+    t0 = time.time()
+    names = [args.only] if args.only else list(BENCHES)
+    for name in names:
+        print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}", flush=True)
+        if name == "fig3":
+            from . import fig3_offsets
+            fig3_offsets.main(scale)
+        elif name == "table1":
+            from . import table1
+            table1.main(scale)
+        elif name == "fig5":
+            from . import fig5_frac_sensitivity
+            fig5_frac_sensitivity.main(scale)
+        elif name == "fig6":
+            from . import fig6_reliability
+            fig6_reliability.main(scale)
+        elif name == "convergence":
+            from . import calibration_convergence
+            calibration_convergence.main(scale)
+        elif name == "kernels":
+            from . import kernel_bench
+            kernel_bench.main(scale)
+        elif name == "serving":
+            from . import mvdram_serving
+            mvdram_serving.main(scale)
+        elif name == "majx":
+            from . import majx_general
+            majx_general.main(scale)
+        elif name == "roofline":
+            from . import roofline
+            for mesh in ("single", "multi"):
+                try:
+                    rows = roofline.load(mesh, "base")
+                except FileNotFoundError:
+                    rows = []
+                if rows:
+                    print(f"\n-- mesh: {mesh} ({len(rows)} cells)")
+                    print(roofline.fmt_table(rows))
+                else:
+                    print(f"\n-- mesh: {mesh}: no dry-run artifacts yet")
+    print(f"\nall benchmarks done in {time.time() - t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

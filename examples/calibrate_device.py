@@ -1,0 +1,40 @@
+"""Algorithm 1 walkthrough: watch the per-column bias-feedback walk converge
+and inspect what the calibration actually learned.
+
+    PYTHONPATH=src python examples/calibrate_device.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibrate import CalibrationConfig, calibration_history
+from repro.core.offsets import make_ladder, neutral_level
+from repro.pud.physics import PhysicsParams
+
+N_COLS = 4096
+params = PhysicsParams()
+ladder = make_ladder((2, 1, 0), params)
+
+k_mfg, k_cal = jax.random.split(jax.random.key(42))
+sense = params.sigma_static * jax.random.normal(k_mfg, (N_COLS,), jnp.float32)
+
+levels, history = calibration_history(
+    k_cal, sense, ladder, params, CalibrationConfig(n_iterations=20))
+
+print("per-iteration mean |bias| (Algorithm 1's feedback signal):")
+for i, b in enumerate(history):
+    bar = "#" * int(400 * b)
+    print(f"  iter {i + 1:2d}: {b:.4f} {bar}")
+
+# What did it learn? The chosen offset should track the sense offset.
+offs = np.asarray(ladder.offsets_volts(params))[np.asarray(levels)]
+corr = np.corrcoef(np.asarray(sense), offs)[0, 1]
+print(f"\ncorr(sense offset, applied calibration offset) = {corr:.3f} "
+      "(the walk finds each column's deviation)")
+
+print("\nlevel histogram (start = neutral level "
+      f"{neutral_level(ladder)}):")
+for lvl in range(ladder.n_levels):
+    n = int((np.asarray(levels) == lvl).sum())
+    print(f"  level {lvl} (offset {ladder.offsets_units[lvl]:+.3f}): "
+          f"{'#' * (80 * n // N_COLS)} {n}")

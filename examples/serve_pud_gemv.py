@@ -1,0 +1,26 @@
+"""Low-bit serving through the PUD bit-plane path (the MVDRAM application
+PUDTune enables), on a small model end to end:
+
+  pack FFN + unembed weights into 4-bit bit-planes (the DRAM layout) ->
+  greedy-decode through the Pallas bit-plane kernel -> compare numerics with
+  the bf16 path -> price the real-DRAM serving rate with and without
+  PUDTune's calibration (Eq. 1).
+
+    PYTHONPATH=src python examples/serve_pud_gemv.py [--arch granite-8b]
+"""
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch import serve  # noqa: E402
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="granite-8b")
+args = ap.parse_args()
+
+sys.exit(serve.main([
+    "--arch", args.arch, "--preset", "smoke", "--batch", "2",
+    "--prompt-len", "16", "--gen", "8", "--pud-gemv", "--weight-bits", "4",
+]))

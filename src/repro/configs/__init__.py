@@ -1,0 +1,3 @@
+"""Architecture configs (one per assigned arch) + shape grid."""
+from .registry import (ALL_SHAPES, SHAPES, ArchSpec, ShapeCell, all_archs,  # noqa: F401
+                       get, grid)

@@ -1,0 +1,115 @@
+"""Architecture registry: the 10 assigned configs, their input shapes, and
+reduced smoke-test variants.
+
+Each ArchSpec provides:
+  * model()         — full-size model object (Model protocol)
+  * smoke_model()   — reduced same-family config for CPU smoke tests
+  * input_specs(shape) — ShapeDtypeStruct stand-ins for every model input of
+    the given shape cell (the dry-run lowers against these; nothing is
+    allocated)
+  * shapes          — which of the 4 assigned cells apply (long_500k only for
+    sub-quadratic-decode families, per the brief; see DESIGN.md)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str            # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+ALL_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+QUADRATIC_SHAPES = ("train_4k", "prefill_32k", "decode_32k")
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str
+    make_model: Callable[[], Any]
+    make_smoke: Callable[[], Any]
+    shapes: tuple[str, ...]
+    # approx parameter counts for MODEL_FLOPS = 6*N*D (total, active)
+    n_params: float = 0.0
+    n_active_params: float = 0.0
+    microbatch: dict[str, int] = dataclasses.field(default_factory=dict)
+    notes: str = ""
+
+    def input_specs(self, shape_name: str) -> dict:
+        """ShapeDtypeStruct inputs for (this arch x the shape cell)."""
+        cell = SHAPES[shape_name]
+        b, s = cell.global_batch, cell.seq_len
+        i32 = jnp.int32
+        tok = lambda bb, ss: jax.ShapeDtypeStruct((bb, ss), i32)
+
+        extras = {}
+        text_len = s
+        if self.family == "vlm":
+            n_patch, d_vit = 256, 1024
+            extras["patches"] = jax.ShapeDtypeStruct((b, n_patch, d_vit),
+                                                     jnp.bfloat16)
+            text_len = s - n_patch
+        if self.family == "encdec":
+            extras["frames"] = jax.ShapeDtypeStruct((b, 1500, 1280),
+                                                    jnp.bfloat16)
+
+        if cell.kind == "train":
+            return {"tokens": tok(b, text_len), "labels": tok(b, text_len),
+                    **extras}
+        if cell.kind == "prefill":
+            return {"tokens": tok(b, text_len), **extras}
+        # decode: one new token against a cache of seq_len
+        return {"tokens": tok(b, 1),
+                "cur_len": jax.ShapeDtypeStruct((), i32)}
+
+    def cache_specs(self, shape_name: str):
+        """Abstract decode-cache structs for the dry-run."""
+        from repro.models.params import abstract_params
+        cell = SHAPES[shape_name]
+        model = self.make_model()
+        return abstract_params(
+            model.cache_defs(cell.global_batch, cell.seq_len))
+
+
+_REGISTRY: dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    _REGISTRY[spec.arch_id] = spec
+    return spec
+
+
+def get(arch_id: str) -> ArchSpec:
+    from . import archs  # noqa: F401  (populate on first use)
+    return _REGISTRY[arch_id]
+
+
+def all_archs() -> list[str]:
+    from . import archs  # noqa: F401
+    return sorted(_REGISTRY)
+
+
+def grid() -> list[tuple[str, str]]:
+    """All (arch, shape) dry-run cells (skips documented in DESIGN.md)."""
+    from . import archs  # noqa: F401
+    cells = []
+    for a in sorted(_REGISTRY):
+        for s in _REGISTRY[a].shapes:
+            cells.append((a, s))
+    return cells

@@ -1,0 +1,108 @@
+"""Calibration data identification — the paper's Algorithm 1.
+
+For each iteration: run MAJ5 on random input patterns, compute the per-column
+*bias* (proportion of '1' outputs minus the true-majority proportion), and
+step the column one level down/up the offset ladder when the bias exceeds
++-threshold.  A positive bias means the column reads '1' too often (its sense
+threshold sits low), so the calibration offset must move DOWN — i.e.
+``decrement_level`` — and vice versa, exactly as in Algorithm 1.
+
+The loop is a ``lax.scan`` over iterations; each iteration vmaps over sample
+chunks, so identifying a 65 536-column subarray takes seconds on CPU (the
+paper's Python-on-DRAM-Bender implementation takes ~1 minute per subarray).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.pud.device import maj_outputs
+from repro.pud.physics import PhysicsParams
+from .offsets import OffsetLadder, levels_to_charges, neutral_level
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationConfig:
+    n_iterations: int = 20      # paper Sec. IV-A
+    n_samples: int = 512        # random samples per iteration (paper Sec. IV-A)
+    # Bias threshold of Algorithm 1.  Must sit below 1/n_samples so that a
+    # single observed error already triggers a level step: near convergence
+    # the residual error rates are ~1e-3/trial, and a threshold of several
+    # errors per iteration stalls the walk one level short (measured: ECR
+    # 14% -> 4% by lowering tau; see EXPERIMENTS.md §Paper).
+    threshold: float = 0.0009
+    maj_inputs: int = 5
+    # constant (non-operand, non-calibration) rows: MAJ3 uses a 0/1 pair
+    const_charge_sum: float = 0.0
+    const_swing_sq: float = 0.0
+
+
+@functools.partial(jax.jit, static_argnames=("ladder", "params", "config"))
+def identify_calibration(
+    key: jax.Array,
+    sense_offset: jax.Array,          # [n_cols]
+    ladder: OffsetLadder,
+    params: PhysicsParams,
+    config: CalibrationConfig = CalibrationConfig(),
+) -> jax.Array:
+    """Run Algorithm 1; returns per-column ladder level indices [n_cols] int32."""
+    n_cols = sense_offset.shape[0]
+    init_levels = jnp.full((n_cols,), neutral_level(ladder), jnp.int32)
+
+    def iteration(levels, it_key):
+        k_in, k_noise = jax.random.split(it_key)
+        inputs = jax.random.bernoulli(
+            k_in, 0.5, (config.n_samples, config.maj_inputs, n_cols)
+        ).astype(jnp.float32)
+        calib = levels_to_charges(ladder, levels, params)
+        out = maj_outputs(
+            inputs, calib, sense_offset, k_noise, params, ladder.n_fracs,
+            const_charge_sum=config.const_charge_sum,
+            const_swing_sq=config.const_swing_sq,
+        )
+        truth = (inputs.sum(axis=-2) > config.maj_inputs // 2).astype(jnp.float32)
+        bias = (out - truth).mean(axis=0)  # [n_cols]
+        step = jnp.where(bias > config.threshold, -1, 0) + jnp.where(
+            bias < -config.threshold, 1, 0
+        )
+        levels = jnp.clip(levels + step, 0, ladder.n_levels - 1)
+        return levels, bias
+
+    keys = jax.random.split(key, config.n_iterations)
+    levels, biases = jax.lax.scan(iteration, init_levels, keys)
+    return levels
+
+
+def calibration_history(
+    key: jax.Array,
+    sense_offset: jax.Array,
+    ladder: OffsetLadder,
+    params: PhysicsParams,
+    config: CalibrationConfig = CalibrationConfig(),
+):
+    """Like identify_calibration but also returns per-iteration mean |bias|
+    (for the convergence benchmark)."""
+    n_cols = sense_offset.shape[0]
+    levels = jnp.full((n_cols,), neutral_level(ladder), jnp.int32)
+    history = []
+    for it_key in jax.random.split(key, config.n_iterations):
+        k_in, k_noise = jax.random.split(it_key)
+        inputs = jax.random.bernoulli(
+            k_in, 0.5, (config.n_samples, config.maj_inputs, n_cols)
+        ).astype(jnp.float32)
+        calib = levels_to_charges(ladder, levels, params)
+        out = maj_outputs(
+            inputs, calib, sense_offset, k_noise, params, ladder.n_fracs
+        )
+        truth = (inputs.sum(axis=-2) > config.maj_inputs // 2).astype(
+            jnp.float32)
+        bias = (out - truth).mean(axis=0)
+        history.append(float(jnp.abs(bias).mean()))
+        step = jnp.where(bias > config.threshold, -1, 0) + jnp.where(
+            bias < -config.threshold, 1, 0
+        )
+        levels = jnp.clip(levels + step, 0, ladder.n_levels - 1)
+    return levels, history

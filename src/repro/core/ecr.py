@@ -1,0 +1,168 @@
+"""Error-prone column ratio (ECR) measurement (paper Sec. IV-A).
+
+A column is *error-free* iff it produces zero errors across the whole test
+campaign (the paper uses 8 192 random inputs per bank).  We provide:
+
+  * ``measure_ecr_maj5``  — Monte-Carlo, chunked over trials (paper protocol).
+  * ``measure_ecr_graph`` — same protocol over a compound MAJ graph
+    (ADD8 / MUL8), whose error-free set is the intersection over every MAJX
+    in the graph — this is what makes arithmetic gains exceed the bare
+    column gain.
+  * ``expected_ecr_maj5`` — smooth closed-form E[1-(1-p)^N] used by the
+    one-time noise-constant fit (repro/core/fit.py); not used for reporting.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.stats import norm
+
+from repro.pud.bitserial import (MajContext, add_n, bits_to_int, int_to_bits,
+                                 mul8_truncated)
+from repro.pud.device import maj_outputs
+from repro.pud.physics import PhysicsParams
+
+N_TRIALS_PAPER = 8192
+
+
+@functools.partial(
+    jax.jit, static_argnames=("params", "n_fracs", "n_trials", "chunk",
+                              "n_inputs", "const_charge_sum",
+                              "const_swing_sq"))
+def _majx_error_mask(key, sense_offset, calib_charge, params, n_fracs,
+                     n_trials, chunk, n_inputs=5, const_charge_sum=0.0,
+                     const_swing_sq=0.0):
+    n_cols = sense_offset.shape[0]
+
+    def body(any_err, k):
+        k_in, k_noise = jax.random.split(k)
+        inputs = jax.random.bernoulli(
+            k_in, 0.5, (chunk, n_inputs, n_cols)).astype(jnp.float32)
+        out = maj_outputs(
+            inputs, calib_charge, sense_offset, k_noise, params, n_fracs,
+            const_charge_sum=const_charge_sum,
+            const_swing_sq=const_swing_sq)
+        truth = (inputs.sum(axis=-2) > n_inputs // 2).astype(jnp.float32)
+        err = (out != truth).any(axis=0)
+        return any_err | err, None
+
+    keys = jax.random.split(key, n_trials // chunk)
+    any_err, _ = jax.lax.scan(body, jnp.zeros((n_cols,), bool), keys)
+    return any_err
+
+
+def measure_ecr_maj5(
+    key: jax.Array,
+    sense_offset: jax.Array,
+    calib_charge: jax.Array,
+    params: PhysicsParams,
+    n_fracs: int,
+    n_trials: int = N_TRIALS_PAPER,
+    chunk: int = 256,
+) -> tuple[float, jax.Array]:
+    """Returns (ECR in [0,1], per-column error-prone mask)."""
+    mask = _majx_error_mask(
+        key, sense_offset, calib_charge, params, n_fracs, n_trials, chunk)
+    return float(mask.mean()), mask
+
+
+def measure_ecr_majx(
+    key: jax.Array,
+    sense_offset: jax.Array,
+    calib_charge: jax.Array,
+    params: PhysicsParams,
+    n_fracs: int,
+    n_inputs: int,
+    const_charge_sum: float = 0.0,
+    const_swing_sq: float = 0.0,
+    n_trials: int = N_TRIALS_PAPER,
+    chunk: int = 256,
+) -> tuple[float, jax.Array]:
+    """MAJX ECR for any input count (paper Sec. III-D extension).
+
+    MAJ3 = 3 inputs + 0/1 constant pair (const_charge_sum=1, swing_sq=2)
+    + 3 calibration rows; MAJ7 = 7 inputs + 1 calibration row.  Opened rows
+    must total params.n_simra_rows.
+    """
+    mask = _majx_error_mask(
+        key, sense_offset, calib_charge, params, n_fracs, n_trials, chunk,
+        n_inputs=n_inputs, const_charge_sum=const_charge_sum,
+        const_swing_sq=const_swing_sq)
+    return float(mask.mean()), mask
+
+
+def measure_ecr_graph(
+    key: jax.Array,
+    ctx: MajContext,
+    op: str,                       # "add8" | "mul8"
+    n_trials: int = 1024,
+    chunk: int = 64,
+) -> tuple[float, jax.Array]:
+    """ECR of a compound arithmetic graph under the paper's protocol.
+
+    Random 8-bit operand pairs per column per trial; a column is error-prone
+    if any trial's full result deviates from exact integer arithmetic.
+    """
+    n_cols = ctx.sense_offset.shape[0]
+
+    def run_chunk(k):
+        k_a, k_b, k_g = jax.random.split(k, 3)
+        a = jax.random.randint(k_a, (chunk, n_cols), 0, 256, jnp.int32)
+        b = jax.random.randint(k_b, (chunk, n_cols), 0, 256, jnp.int32)
+        ab_, bb_ = int_to_bits(a, 8), int_to_bits(b, 8)
+        abar, bbar = 1.0 - ab_, 1.0 - bb_
+        if op == "add8":
+            s, _, cout, _ = add_n(ctx, ab_, abar, bb_, bbar, k_g)
+            got = bits_to_int(s) + (cout.astype(jnp.int32) << 8)
+            want = a + b
+        elif op == "mul8":
+            s = mul8_truncated(ctx, ab_, abar, bb_, bbar, k_g)
+            got = bits_to_int(s)
+            want = (a * b) & 0xFF
+        else:
+            raise ValueError(op)
+        return (got != want).any(axis=0)
+
+    run_chunk = jax.jit(run_chunk)
+    any_err = jnp.zeros((n_cols,), bool)
+    for k in jax.random.split(key, max(1, n_trials // chunk)):
+        any_err = any_err | run_chunk(k)
+    return float(any_err.mean()), any_err
+
+
+# ---------------------------------------------------------------------------
+# Closed-form expectation for fitting.
+# ---------------------------------------------------------------------------
+
+
+def _trial_fail_prob(residual, sigma_eff, margin):
+    """P(one random-MAJ5 trial errs | signed offset residual).
+
+    Pattern probabilities for 5 uniform bits: the two margin-critical charge
+    sums (3-of-5 / 2-of-5) each occur w.p. 10/32; patterns two margins out
+    (4-of-5 / 1-of-5) w.p. 5/32 each; extremes are safe.
+    """
+    m = margin
+    p_hi = norm.cdf(-(m - residual) / sigma_eff)     # true-1 read as 0
+    p_lo = norm.cdf(-(m + residual) / sigma_eff)     # true-0 read as 1
+    p_hi2 = norm.cdf(-(3 * m - residual) / sigma_eff)
+    p_lo2 = norm.cdf(-(3 * m + residual) / sigma_eff)
+    return (10 / 32) * (p_hi + p_lo) + (5 / 32) * (p_hi2 + p_lo2)
+
+
+def expected_ecr_maj5(
+    sense_offset: jax.Array,
+    calib_offset_units: jax.Array,   # per-column applied offset, charge units
+    params: PhysicsParams,
+    n_fracs: int,
+    sum_swing_sq: float,
+    n_trials: int = N_TRIALS_PAPER,
+) -> jax.Array:
+    """E[ECR] under the analytic per-trial failure model (smooth in params)."""
+    residual = sense_offset - calib_offset_units * params.cell_weight
+    sigma_eff = params.sensing_sigma(
+        jnp.float32(n_fracs), jnp.float32(sum_swing_sq))
+    p = _trial_fail_prob(residual, sigma_eff, params.maj_margin)
+    return (1.0 - (1.0 - p) ** n_trials).mean()

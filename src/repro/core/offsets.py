@@ -1,0 +1,106 @@
+"""Multi-level charging offset ladders (paper Sec. III-C/D, Fig. 3).
+
+A MAJ5 with 8-row SiMRA leaves 3 non-operand rows.  PUDTune stores a
+per-column bit b_i in each and applies f_i Frac ops to row i, so row i's
+charge is 0.5 + (b_i - 0.5) * alpha^f_i — an offset of +-0.5 * alpha^f_i
+cell-charge units around neutral.  The 2^3 sign patterns give the *offset
+ladder* of configuration T_{f1,f2,f3}:
+
+    T_{0,0,0}: +-0.5 +-0.5 +-0.5   -> 4 distinct levels, coarse (step 1.0)
+    T_{2,2,2}: +-.125 x3           -> 4 levels, fine (step 0.25) but narrow
+    T_{2,1,0}: +-.125 +-.25 +-.5   -> 8 levels, fine (step 0.25) AND wide
+
+Baseline B_{x,0,0} stores a constant 1 Frac'd x times plus a 0/1 constant
+pair — a single fixed (near-zero) offset, no per-column freedom.
+
+Conversion to volts: one cell-charge unit shifts the 8-row SiMRA bitline by
+C_cell / (8 C_cell + C_bl) = 1/17 V_DD (physics.cell_weight * 2... the ladder
+is stored in charge units; multiply by ``params.cell_weight`` for volts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.pud.physics import NEUTRAL, PhysicsParams
+
+
+@dataclasses.dataclass(frozen=True)
+class OffsetLadder:
+    """Static description of a T_{x,y,z,...} configuration's offset ladder.
+
+    Generic in the number of calibration rows (paper Sec. III-D: "PUDTune
+    can be naturally extended to MAJX operations with different input
+    sizes"): MAJ3/MAJ5 leave 3 non-operand rows in an 8-row SiMRA, MAJ7
+    leaves 1 — the ladder then has 2^1 = 2 levels, which is exactly why
+    calibration buys less there (benchmarks/majx_general.py).
+    """
+
+    frac_counts: tuple[int, ...]
+    offsets_units: tuple[float, ...]     # sorted distinct offsets, charge units
+    bits_table: tuple[tuple[int, ...], ...]  # bit pattern per level
+    n_fracs: int
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.offsets_units)
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.frac_counts)
+
+    def offsets_volts(self, params: PhysicsParams) -> np.ndarray:
+        return np.asarray(self.offsets_units) * params.cell_weight
+
+    def row_charges(self, params: PhysicsParams) -> np.ndarray:
+        """[n_levels, n_rows] cell charge per calibration row per level."""
+        out = np.zeros((self.n_levels, self.n_rows), np.float32)
+        for lvl, bits in enumerate(self.bits_table):
+            for i, (b, f) in enumerate(zip(bits, self.frac_counts)):
+                out[lvl, i] = NEUTRAL + (b - NEUTRAL) * params.frac_alpha**f
+        return out
+
+
+def make_ladder(
+    frac_counts: tuple[int, ...], params: PhysicsParams
+) -> OffsetLadder:
+    """Enumerate the 2^n_rows sign patterns, dedupe, sort by offset."""
+    deltas = [0.5 * params.frac_alpha**f for f in frac_counts]
+    entries: dict[float, tuple[int, ...]] = {}
+    for bits in itertools.product((0, 1), repeat=len(frac_counts)):
+        off = sum((b - 0.5) * 2 * d for b, d in zip(bits, deltas))
+        off = round(off, 9)
+        entries.setdefault(off, bits)
+    offs = sorted(entries)
+    return OffsetLadder(
+        frac_counts=tuple(frac_counts),
+        offsets_units=tuple(offs),
+        bits_table=tuple(entries[o] for o in offs),
+        n_fracs=sum(frac_counts),
+    )
+
+
+def levels_to_charges(
+    ladder: OffsetLadder, levels: jax.Array, params: PhysicsParams
+) -> jax.Array:
+    """Per-column levels [n_cols] -> calibration row charges [n_rows, n_cols]."""
+    table = jnp.asarray(ladder.row_charges(params))  # [L, n_rows]
+    return table[levels].T                            # [n_rows, n_cols]
+
+
+def baseline_charges(
+    x_fracs: int, n_cols: int, params: PhysicsParams
+) -> jax.Array:
+    """B_{x,0,0}: one constant-1 row Frac'd x times, plus constants 0 and 1."""
+    neutralish = NEUTRAL + 0.5 * params.frac_alpha**x_fracs
+    col = jnp.array([neutralish, 0.0, 1.0], jnp.float32)
+    return jnp.broadcast_to(col[:, None], (3, n_cols))
+
+
+def neutral_level(ladder: OffsetLadder) -> int:
+    """Ladder index whose offset is closest to zero (calibration start)."""
+    return int(np.argmin(np.abs(np.asarray(ladder.offsets_units))))

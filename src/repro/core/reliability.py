@@ -1,0 +1,86 @@
+"""Reliability analysis under temperature and time drift (paper Fig. 6).
+
+Calibration data is identified once at nominal conditions (50 C, day 0) and
+then *held fixed* (the paper stores it in non-volatile memory).  The sense-amp
+thresholds drift with temperature and age; the metric is **new ECR** — the
+fraction of columns that were error-free at calibration time but become
+error-prone under the shifted condition.  The paper measures < 0.14 % across
+40-100 C and < 0.27 % over one week.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.pud.physics import PhysicsParams
+from .calibrate import CalibrationConfig, identify_calibration
+from .ecr import measure_ecr_maj5
+from .offsets import levels_to_charges, make_ladder
+
+
+@dataclasses.dataclass
+class ReliabilityPoint:
+    condition: float          # degC or days
+    ecr: float                # total ECR at the condition
+    new_ecr: float            # newly error-prone among calibration-time EF
+
+
+def _drifted_offsets(key, sense_offset, params, temp_c=None, days=None):
+    drift = jnp.zeros_like(sense_offset)
+    if temp_c is not None:
+        scale = params.sigma_temp_drift * jnp.abs(temp_c - params.temp_nominal_c)
+        drift = drift + scale * jax.random.normal(
+            key, sense_offset.shape, jnp.float32)
+    if days is not None:
+        scale = params.sigma_time_drift * jnp.sqrt(jnp.float32(days))
+        drift = drift + scale * jax.random.normal(
+            jax.random.fold_in(key, 1), sense_offset.shape, jnp.float32)
+    return sense_offset + drift
+
+
+def reliability_sweep(
+    key: jax.Array,
+    method: str = "T210",
+    temps_c: tuple[float, ...] = (40, 50, 60, 70, 80, 90, 100),
+    days: tuple[float, ...] = (1, 2, 3, 4, 5, 6, 7),
+    params: PhysicsParams = PhysicsParams(),
+    n_cols: int = 65536,
+    n_trials: int = 8192,
+    calib_config: CalibrationConfig = CalibrationConfig(),
+) -> tuple[list[ReliabilityPoint], list[ReliabilityPoint]]:
+    """Returns (temperature sweep, time sweep) for a PUDTune configuration."""
+    fc = tuple(int(c) for c in method[1:4])
+    k_mfg, k_cal, k_base, k_t, k_d = jax.random.split(key, 5)
+    sense_offset = params.sigma_static * jax.random.normal(
+        k_mfg, (n_cols,), jnp.float32)
+    ladder = make_ladder(fc, params)
+    levels = identify_calibration(
+        k_cal, sense_offset, ladder, params, calib_config)
+    calib = levels_to_charges(ladder, levels, params)
+
+    _, base_err = measure_ecr_maj5(
+        k_base, sense_offset, calib, params, ladder.n_fracs, n_trials=n_trials)
+    base_ef = ~base_err
+
+    def eval_at(k, offs):
+        ecr, err = measure_ecr_maj5(
+            k, offs, calib, params, ladder.n_fracs, n_trials=n_trials)
+        new_ecr = float((err & base_ef).mean())
+        return ecr, new_ecr
+
+    temp_points, time_points = [], []
+    for t in temps_c:
+        k_t, k = jax.random.split(k_t)
+        offs = _drifted_offsets(jax.random.fold_in(k, int(t)), sense_offset,
+                                params, temp_c=float(t))
+        ecr, new = eval_at(k, offs)
+        temp_points.append(ReliabilityPoint(float(t), ecr, new))
+    for d in days:
+        k_d, k = jax.random.split(k_d)
+        offs = _drifted_offsets(jax.random.fold_in(k, int(d * 100)),
+                                sense_offset, params, days=float(d))
+        ecr, new = eval_at(k, offs)
+        time_points.append(ReliabilityPoint(float(d), ecr, new))
+    return temp_points, time_points

@@ -1,0 +1,124 @@
+"""End-to-end method evaluation: ECR + Eq.-1 throughput (paper Table I).
+
+``evaluate_method`` runs the full pipeline for one MAJ5 implementation
+(baseline B_{x,0,0} or PUDTune T_{x,y,z}):
+
+    manufacture subarray -> [identify calibration data (Alg. 1)] ->
+    measure MAJ5 ECR (Monte-Carlo, paper protocol) ->
+    measure ADD8/MUL8 compound ECR on the MAJ graphs ->
+    price command sequences on the DDR4-2133 model -> Eq. 1 throughput.
+
+MAJ5 TOPS uses the standalone MAJ5 sequence; ADD/MUL use the staged
+arithmetic sequences (see pud/bitserial.py docstring).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.pud.bitserial import (MajContext, add8_counts,
+                                 maj5_standalone_counts, mul8_counts)
+from repro.pud.physics import PhysicsParams
+from repro.pud.timing import SystemConfig, throughput_ops, wave_latency_ns
+from .calibrate import CalibrationConfig, identify_calibration
+from .ecr import measure_ecr_graph, measure_ecr_maj5
+from .offsets import baseline_charges, levels_to_charges, make_ladder
+
+
+@dataclasses.dataclass
+class MethodResult:
+    name: str
+    ecr: float                    # MAJ5 error-prone column ratio
+    ecr_add: float
+    ecr_mul: float
+    maj5_tops: float
+    add8_gops: float
+    mul8_gops: float
+    maj5_latency_us: float
+    levels: jax.Array | None = None
+    error_free_mask: jax.Array | None = None   # per measured column
+
+    def row(self) -> str:
+        return (f"{self.name},{self.ecr:.4f},{self.maj5_tops / 1e12:.3f},"
+                f"{self.add8_gops / 1e9:.1f},{self.mul8_gops / 1e9:.2f}")
+
+
+def _parse_method(name: str) -> tuple[str, tuple[int, int, int]]:
+    """'B300' -> ('baseline', (3,0,0)); 'T210' -> ('pudtune', (2,1,0))."""
+    kind = "baseline" if name[0] == "B" else "pudtune"
+    fc = tuple(int(c) for c in name[1:4])
+    return kind, fc
+
+
+def evaluate_method(
+    key: jax.Array,
+    name: str,
+    params: PhysicsParams = PhysicsParams(),
+    sys: SystemConfig = SystemConfig(),
+    n_cols: int = 65536,
+    n_trials_maj5: int = 8192,
+    n_cols_arith: int = 4096,
+    n_trials_arith: int = 512,
+    calib_config: CalibrationConfig = CalibrationConfig(),
+    with_arith: bool = True,
+) -> MethodResult:
+    kind, fc = _parse_method(name)
+    k_mfg, k_cal, k_ecr, k_add, k_mul = jax.random.split(key, 5)
+    sense_offset = params.sigma_static * jax.random.normal(
+        k_mfg, (n_cols,), jnp.float32)
+
+    levels = None
+    if kind == "baseline":
+        calib_charge = baseline_charges(fc[0], n_cols, params)
+        n_fracs = fc[0]
+    else:
+        ladder = make_ladder(fc, params)
+        levels = identify_calibration(
+            k_cal, sense_offset, ladder, params, calib_config)
+        calib_charge = levels_to_charges(ladder, levels, params)
+        n_fracs = ladder.n_fracs
+
+    ecr5, err_mask = measure_ecr_maj5(
+        k_ecr, sense_offset, calib_charge, params, n_fracs,
+        n_trials=n_trials_maj5)
+    ef5 = (1.0 - ecr5) * sys.n_cols_per_subarray
+    maj5_cnt = maj5_standalone_counts(n_fracs)
+    maj5_tput = throughput_ops(maj5_cnt, ef5, sys)
+
+    ecr_add = ecr_mul = float("nan")
+    add_tput = mul_tput = float("nan")
+    if with_arith:
+        # Compound-graph ECR on a column subsample (the graphs are ~100x the
+        # MAJ count of a single MAJ5; same protocol, fewer columns/trials).
+        sub = slice(0, n_cols_arith)
+        ctx = MajContext(
+            params=params,
+            sense_offset=sense_offset[sub],
+            calib_charge=calib_charge[:, sub],
+            n_fracs=n_fracs,
+        )
+        ecr_add, _ = measure_ecr_graph(
+            k_add, ctx, "add8", n_trials=n_trials_arith)
+        ecr_mul, _ = measure_ecr_graph(
+            k_mul, ctx, "mul8", n_trials=max(64, n_trials_arith // 4))
+        add_tput = throughput_ops(
+            add8_counts(n_fracs),
+            (1.0 - ecr_add) * sys.n_cols_per_subarray, sys)
+        mul_tput = throughput_ops(
+            mul8_counts(n_fracs),
+            (1.0 - ecr_mul) * sys.n_cols_per_subarray, sys)
+
+    return MethodResult(
+        name=name,
+        ecr=ecr5,
+        ecr_add=ecr_add,
+        ecr_mul=ecr_mul,
+        maj5_tops=maj5_tput,
+        add8_gops=add_tput,
+        mul8_gops=mul_tput,
+        maj5_latency_us=wave_latency_ns(maj5_cnt, sys) / 1e3,
+        levels=levels,
+        error_free_mask=~err_mask,
+    )

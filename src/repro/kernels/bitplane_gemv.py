@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: bit-plane GeMV — the MVDRAM compute pattern on the MXU.
+
+MVDRAM [4] executes low-bit GeMV inside DRAM: weight bits live as *bit-planes*
+across 65 536 columns and the product accumulates bit-serially through
+MAJ-based adders.  PUDTune's calibration is what makes enough columns reliable
+for this to pay off.
+
+TPU adaptation (DESIGN.md §3): bit-serial column adders would waste the MXU.
+The TPU-native equivalent keeps the **same HBM data layout** — weights stored
+as WB bit-planes W_b in {0,1}, exactly what a PUD subarray would hold — and
+turns the bit-serial accumulation into matmuls:
+
+    y = x @ W - 2^{WB-1} * sum_k(x_k)        with  W = sum_b 2^b W_b
+      = sum_b 2^b (x @ W_b) - offset         (offset-binary signed weights)
+
+Two execution modes, both lowered by this kernel and oracled by ref.py:
+
+  * ``planes``  — faithful PUD schedule: one MXU pass per bit-plane,
+    partial products shifted and accumulated (what the DRAM does, made dense).
+  * ``folded``  — beyond-paper optimization: planes are folded to int8 inside
+    VMEM (sum_b 2^b W_b) and a single MXU pass per K-tile does the work —
+    WB x fewer MXU flops at identical numerics.
+
+Tiling: grid (N/Nb, K/Kb); K is the reduction axis, accumulated in the output
+block across grid steps (out block depends only on the N index).  Blocks:
+x [B, Kb] int8, planes [WB, Kb, Nb] int8, out [B, Nb] int32.  With
+Kb=256, Nb=256, WB=4: (4*256*256 + 8*256 + 8*256*4) B ~ 270 KiB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+K_BLOCK = 256
+N_BLOCK = 256
+
+
+def _gemv_kernel(x_ref, planes_ref, out_ref, *, mode: str, n_bits: int):
+    k_idx = pl.program_id(1)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.int32)              # [B, Kb]
+    if mode == "folded":
+        # Fold bit-planes to int8 weights in VMEM, single MXU pass.
+        w = jnp.zeros(planes_ref.shape[1:], jnp.int32)
+        for b in range(n_bits):
+            w = w + (planes_ref[b].astype(jnp.int32) << b)
+        acc = jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+    else:
+        # Faithful PUD schedule: one pass per plane, shift-accumulate.
+        acc = jnp.zeros(out_ref.shape, jnp.int32)
+        for b in range(n_bits):
+            part = jax.lax.dot_general(
+                x, planes_ref[b].astype(jnp.int32), (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            acc = acc + (part << b)
+    out_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "interpret"))
+def bitplane_gemv(
+    x: jax.Array,        # [B, K] int8 activations
+    planes: jax.Array,   # [WB, K, N] int8 in {0,1} — offset-binary weight bits
+    mode: str = "planes",
+    interpret: bool = True,
+) -> jax.Array:
+    """Offset-binary bit-plane GeMV; returns [B, N] int32 of x @ (W - 2^{WB-1}).
+
+    ``planes`` encode unsigned u = w + 2^{WB-1}; the signed correction
+    subtracts 2^{WB-1} * sum_k x_k per output.
+    """
+    b, k = x.shape
+    wb, k2, n = planes.shape
+    # Blocks adapt down for sub-block (smoke-scale) dims; full-size archs
+    # hit the MXU-aligned 256x256 tiles.
+    kb, nb = min(k, K_BLOCK), min(n, N_BLOCK)
+    assert k == k2 and k % kb == 0 and n % nb == 0, (x.shape, planes.shape)
+    grid = (n // nb, k // kb)
+    kernel = functools.partial(_gemv_kernel, mode=mode, n_bits=wb)
+    unsigned = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, kb), lambda jn, jk: (0, jk)),
+            pl.BlockSpec((wb, kb, nb), lambda jn, jk: (0, jk, jn)),
+        ],
+        out_specs=pl.BlockSpec((b, nb), lambda jn, jk: (0, jn)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
+        interpret=interpret,
+    )(x, planes)
+    sign_fix = (1 << (wb - 1)) * x.astype(jnp.int32).sum(axis=1, keepdims=True)
+    return unsigned - sign_fix

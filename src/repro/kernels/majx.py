@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: column-parallel SiMRA/MAJX charge-sharing sensing.
+
+This is the hot loop of calibration and ECR measurement: for a batch of
+SiMRA events (trials), share charge across the 8 opened rows of every column,
+add sensing noise, and compare against the per-column threshold.
+
+TPU mapping (hardware adaptation, DESIGN.md §3): a DRAM subarray's 65 536
+columns map to TPU lanes; one SiMRA event is a small reduction over the
+8-row axis.  The kernel tiles [trials × columns] into VMEM blocks of
+(TRIAL_BLOCK, 8, COL_BLOCK) charge + (TRIAL_BLOCK, COL_BLOCK) noise, with
+COL_BLOCK a multiple of 128 lanes.  All math is VPU elementwise + an 8-wide
+reduction — memory-bound by design, so the BlockSpec keeps each block's
+working set (8+2 planes * 4 B * COL_BLOCK) comfortably inside VMEM.
+
+Noise is passed in as standard-normal draws (host PRNG) so the kernel is
+deterministic and bit-exact against ref.py in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.pud.physics import NEUTRAL, PhysicsParams
+
+TRIAL_BLOCK = 8
+COL_BLOCK = 1024
+
+
+def _majx_kernel(charge_ref, offset_ref, noise_ref, out_ref, *,
+                 params: PhysicsParams, n_fracs: int):
+    charge = charge_ref[...]                      # [Tb, R, Cb]
+    offset = offset_ref[...]                      # [Cb]
+    noise = noise_ref[...]                        # [Tb, Cb]
+    n_rows = charge.shape[1]
+
+    q_sum = charge.sum(axis=1)                    # [Tb, Cb]
+    v = (q_sum * params.c_cell_ff + NEUTRAL * params.c_bitline_ff) / (
+        n_rows * params.c_cell_ff + params.c_bitline_ff)
+    swing_sq = ((2.0 * (charge - NEUTRAL)) ** 2).sum(axis=1)
+    var = (params.sigma_dynamic ** 2
+           + params.sigma_frac ** 2 * float(n_fracs)
+           + params.sigma_transfer ** 2 * swing_sq)
+    sigma = jnp.sqrt(var)
+    bits = (v + sigma * noise) > (NEUTRAL + offset[None, :])
+    out_ref[...] = bits.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "n_fracs", "interpret"))
+def majx_sense(
+    charge: jax.Array,        # [T, R, C] float32 cell charges (V_DD units)
+    sense_offset: jax.Array,  # [C] float32
+    noise: jax.Array,         # [T, C] float32 standard normal
+    params: PhysicsParams = PhysicsParams(),
+    n_fracs: int = 0,
+    interpret: bool = True,
+) -> jax.Array:
+    """Sensed bits [T, C] for T SiMRA events over C columns."""
+    t, r, c = charge.shape
+    assert t % TRIAL_BLOCK == 0 and c % COL_BLOCK == 0, (t, c)
+    grid = (t // TRIAL_BLOCK, c // COL_BLOCK)
+    kernel = functools.partial(_majx_kernel, params=params, n_fracs=n_fracs)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TRIAL_BLOCK, r, COL_BLOCK), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((COL_BLOCK,), lambda i, j: (j,)),
+            pl.BlockSpec((TRIAL_BLOCK, COL_BLOCK), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((TRIAL_BLOCK, COL_BLOCK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, c), jnp.float32),
+        interpret=interpret,
+    )(charge, sense_offset, noise)

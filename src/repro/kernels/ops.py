@@ -1,0 +1,44 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only; on real
+TPU hardware pass interpret=False (the BlockSpecs are TPU-shaped: 128-lane
+aligned columns, MXU-aligned matmul tiles).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .bitplane_gemv import bitplane_gemv
+from .majx import majx_sense
+
+__all__ = [
+    "majx_sense", "bitplane_gemv", "pud_gemv", "quantize_activations",
+]
+
+
+def quantize_activations(x: jax.Array, clip: float = 4.0) -> tuple[jax.Array, jax.Array]:
+    """Per-row symmetric int8 quantization for the PUD GeMV input."""
+    scale = jnp.maximum(jnp.abs(x).max(axis=-1, keepdims=True), 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def pud_gemv(
+    x: jax.Array,          # [B, K] float activations
+    planes: jax.Array,     # [WB, K, N] int8 bit-planes (offset-binary)
+    w_scale: jax.Array,    # [N] or scalar dequant scale
+    mode: str = "folded",
+    interpret: bool = True,
+) -> jax.Array:
+    """Quantize -> bit-plane GeMV -> dequantize. Returns [B, N] float32."""
+    xq, x_scale = quantize_activations(x)
+    acc = bitplane_gemv(xq, planes, mode=mode, interpret=interpret)
+    return acc.astype(jnp.float32) * x_scale * w_scale
+
+
+def pud_gemv_ref(x, planes, w_scale):
+    xq, x_scale = quantize_activations(x)
+    acc = ref.bitplane_gemv_ref(xq, planes)
+    return acc.astype(jnp.float32) * x_scale * w_scale

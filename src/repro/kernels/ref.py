@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth for allclose tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.pud.physics import NEUTRAL, PhysicsParams
+
+
+def majx_sense_ref(
+    charge: jax.Array,        # [T, R, C]
+    sense_offset: jax.Array,  # [C]
+    noise: jax.Array,         # [T, C]
+    params: PhysicsParams = PhysicsParams(),
+    n_fracs: int = 0,
+) -> jax.Array:
+    n_rows = charge.shape[1]
+    v = (charge.sum(axis=1) * params.c_cell_ff
+         + NEUTRAL * params.c_bitline_ff) / (
+        n_rows * params.c_cell_ff + params.c_bitline_ff)
+    swing_sq = ((2.0 * (charge - NEUTRAL)) ** 2).sum(axis=1)
+    sigma = jnp.sqrt(params.sigma_dynamic**2
+                     + params.sigma_frac**2 * float(n_fracs)
+                     + params.sigma_transfer**2 * swing_sq)
+    return ((v + sigma * noise) > NEUTRAL + sense_offset[None, :]).astype(
+        jnp.float32)
+
+
+def bitplane_gemv_ref(x: jax.Array, planes: jax.Array) -> jax.Array:
+    """[B,K] int8 x [WB,K,N] bit-planes -> [B,N] int32 signed GeMV."""
+    wb = planes.shape[0]
+    weights = sum((planes[b].astype(jnp.int32) << b) for b in range(wb))
+    weights = weights - (1 << (wb - 1))
+    return jax.lax.dot_general(
+        x.astype(jnp.int32), weights, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def pack_bitplanes(w: jax.Array, n_bits: int) -> jax.Array:
+    """Signed int weights [K,N] in [-2^{b-1}, 2^{b-1}) -> [WB,K,N] bit-planes.
+
+    Offset-binary: planes encode u = w + 2^{WB-1} in {0 .. 2^WB - 1}.
+    """
+    u = (w.astype(jnp.int32) + (1 << (n_bits - 1))).astype(jnp.int32)
+    shifts = jnp.arange(n_bits, dtype=jnp.int32)
+    planes = (u[None] >> shifts[:, None, None]) & 1
+    return planes.astype(jnp.int8)

@@ -1,0 +1,358 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) cell
+on the production mesh, and extract the roofline terms from the compiled
+artifact.  MUST be run as a module: PYTHONPATH=src python -m repro.launch.dryrun
+
+The two lines above run before any other import — jax locks the device count
+at first init.  Do NOT import this module from tests (it would force 512
+devices session-wide).
+
+Per cell this script records to artifacts/dryrun/<mesh>/<arch>__<shape>.json:
+  * cost_analysis flops / bytes (per device — the module is SPMD-partitioned)
+  * collective bytes by op kind, parsed from the compiled HLO
+  * memory_analysis (argument/output/temp/peak bytes per device)
+  * lower/compile wall times, microbatch setting, sharding overrides used
+
+Restartable: existing cell files are skipped unless --force.
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, all_archs, get
+from repro.launch.mesh import make_production_mesh
+from repro.models.params import abstract_params, param_pspecs
+from repro.runtime import sharding as shd
+from repro.runtime.optim import OptConfig, opt_state_pspecs
+from repro.runtime.steps import (make_decode_step, make_prefill_step,
+                                 make_train_step)
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\b")
+SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2,
+               "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _shape_bytes(tok: tuple[str, str]) -> int:
+    dt, dims = tok
+    if dt not in DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective traffic by op kind, from post-SPMD HLO.
+
+    Methodology: per op line, take the largest tensor involved (for
+    all-gather that's the gathered result ~= bytes received; for
+    reduce-scatter the unscattered operand ~= bytes sent); all-reduce counts
+    2x (ring reduce-scatter + all-gather).  '-done' lines are skipped so
+    async pairs aren't double-counted.
+    """
+    out = {k: 0 for k in ("all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute")}
+    counts = dict.fromkeys(out, 0)
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m or "-done" in line:
+            continue
+        kind = m.group(1)
+        sizes = [_shape_bytes(t) for t in SHAPE_RE.findall(line)]
+        if not sizes:
+            continue
+        b = max(sizes)
+        out[kind] += 2 * b if kind == "all-reduce" else b
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def sharding_overrides(spec, mesh, kind: str) -> dict:
+    """Per-arch logical-axis overrides for divisibility on this mesh.
+
+    Policy (hypothesis-tested, see EXPERIMENTS.md §Perf baseline notes):
+      * q heads shard over "model" when divisible, else replicate (an
+        earlier head_dim-sharding fallback was measured to make GSPMD
+        replicate the whole attention through the rope reshapes — 4x flops).
+      * kv heads likewise; replicated kv projections are cheap (kv << H).
+      * decode caches sequence-shard over "model" when kv heads can't —
+        the cache is the dominant decode-memory term and attention reduces
+        over S, which partitions as partial-softmax + all-reduce.
+    """
+    msize = mesh.shape["model"]
+    model = spec.make_model()
+    cfg = getattr(model, "cfg", None)
+    lm = getattr(cfg, "lm", None) or cfg
+    ov = {}
+
+    def dims(name, default=0):
+        return getattr(lm, name, default)
+
+    n_heads = dims("n_heads")
+    n_kv = dims("n_kv_heads")
+    vocab = dims("vocab")
+    is_mla = dims("attention", "gqa") == "mla"
+    if n_heads and n_heads % msize:
+        ov["heads"] = None
+    kv_sharded = bool(n_kv) and n_kv % msize == 0
+    if n_kv and not kv_sharded:
+        ov["kv_heads"] = None
+    if vocab and vocab % msize:
+        ov["vocab"] = None
+    # KV-indivisible caches sequence-shard over "model" — for decode (the
+    # cache is the dominant read) AND prefill (the emitted cache is the
+    # dominant resident: llama4 32k prefill carries 12.9 GiB/device of
+    # otherwise-replicated KV).
+    if kind in ("decode", "prefill") and (is_mla or not kv_sharded):
+        ov["kv_seq"] = "model"
+    return ov
+
+
+def pick_microbatch(requested: int, global_batch: int, mesh) -> int:
+    shards = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    k = max(1, requested)
+    while k > 1 and (global_batch % k or (global_batch // k) % shards):
+        k -= 1
+    return k
+
+
+def build_cell(arch: str, shape: str, mesh, variant: str = "base"):
+    """Returns (jit_fn, example_args) for lowering."""
+    spec = get(arch)
+    model = spec.make_model()
+    cell = SHAPES[shape]
+    ov = sharding_overrides(spec, mesh, cell.kind)
+    if variant in ("decode_tp_weights", "zero2_weights"):
+        # Hillclimb variant: weights TP-only — no per-microbatch FSDP
+        # all-gathers (ZeRO-2-style: optimizer state stays sharded via its
+        # own out_shardings; weights replicate over "data").  Trades HBM
+        # for collective time on deep models (deepseek-67b: 95 layers x 16
+        # microbatches of re-gathers).
+        ov["embed"] = None
+    if variant == "train_seq_shard":
+        ov["sequence"] = "model"
+
+    batch_shards = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    batch_axes = shd.batch_axes(mesh)
+    if cell.global_batch % batch_shards:
+        batch_axes = None  # batch=1 long-context: replicate batch dim
+        ov["batch"] = None  # caches carry a batch dim too
+        # the idle "data" axis takes the cache sequence dim instead
+        # (zamba2 long_500k: 6.1 GiB of 524k-seq KV otherwise replicated)
+        if cell.kind == "decode":
+            ov.setdefault("kv_seq", "data")
+
+    # logits output: vocab-sharded only when divisible by the TP degree
+    logit_axis = None if "vocab" in ov else "model"
+
+    rules = shd.make_rules(mesh, ov)
+    from repro.models import sharding_ctx
+    sharding_ctx.set_rules({**rules, "batch": batch_axes,
+                            "_mesh_sizes": dict(mesh.shape)})
+    pspecs = param_pspecs(model.param_defs(), rules)
+    params_abs = abstract_params(model.param_defs())
+
+    in_specs = spec.input_specs(shape)
+    input_ps = {}
+    for name, s in in_specs.items():
+        if s.ndim == 0:
+            input_ps[name] = P()
+        else:
+            input_ps[name] = P(*((batch_axes,) + (None,) * (s.ndim - 1)))
+
+    if cell.kind == "train":
+        mb = pick_microbatch(spec.microbatch.get(shape, 1),
+                             cell.global_batch, mesh)
+        opt_cfg = OptConfig()
+        step = make_train_step(model, opt_cfg, microbatches=mb,
+                               batch_axes=batch_axes)
+        opt_ps = opt_state_pspecs(pspecs, opt_cfg)
+        opt_abs = {
+            "mu": jax.tree.map(
+                lambda d: jax.ShapeDtypeStruct(d.shape, jnp.float32),
+                params_abs),
+            "nu": jax.tree.map(
+                lambda d: jax.ShapeDtypeStruct(d.shape, jnp.float32),
+                params_abs),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        labels_ps = {k: v for k, v in input_ps.items()}
+        fn = jax.jit(
+            step,
+            in_shardings=(pspecs, opt_ps, labels_ps, P()),
+            out_shardings=(pspecs, opt_ps, P()),
+            donate_argnums=(0, 1),   # params/opt update in place (as train.py)
+        )
+        args = (params_abs, opt_abs, in_specs,
+                jax.ShapeDtypeStruct((), jnp.uint32))
+        return fn, args, {"microbatch": mb, "overrides": repr(ov)}
+
+    if cell.kind == "prefill":
+        fn_raw = make_prefill_step(model, spec.family)
+        cache_ps = param_pspecs(
+            model.cache_defs(cell.global_batch, cell.seq_len), rules)
+        extras = {k: v for k, v in in_specs.items() if k != "tokens"}
+        extra_ps = {k: input_ps[k] for k in extras}
+        fn = jax.jit(
+            fn_raw,
+            in_shardings=(pspecs, input_ps["tokens"], extra_ps)
+            if extras else (pspecs, input_ps["tokens"]),
+            out_shardings=(P(batch_axes, logit_axis), cache_ps),
+        )
+        args = ((params_abs, in_specs["tokens"], extras) if extras
+                else (params_abs, in_specs["tokens"]))
+        return fn, args, {"overrides": repr(ov)}
+
+    # decode
+    fn_raw = make_decode_step(model)
+    cache_abs = spec.cache_specs(shape)
+    cache_ps = param_pspecs(
+        model.cache_defs(cell.global_batch, cell.seq_len), rules)
+    fn = jax.jit(
+        fn_raw,
+        in_shardings=(pspecs, cache_ps, input_ps["tokens"], P()),
+        out_shardings=(P(batch_axes, logit_axis), cache_ps),
+        donate_argnums=(1,),   # KV/state cache updates in place
+    )
+    args = (params_abs, cache_abs, in_specs["tokens"],
+            jax.ShapeDtypeStruct((), jnp.int32))
+    return fn, args, {"overrides": repr(ov)}
+
+
+def run_cell(arch: str, shape: str, mesh, mesh_name: str,
+             variant: str = "base", save_hlo: bool = False) -> dict:
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "variant": variant, "n_devices": mesh.size}
+    fn, args, meta = build_cell(arch, shape, mesh, variant)
+    rec.update(meta)
+
+    t0 = time.time()
+    with mesh:
+        lowered = fn.lower(*args)
+    rec["lower_s"] = round(time.time() - t0, 2)
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        # NOTE: XLA counts while bodies once (scan trip counts ignored);
+        # kept for reference only — the roofline uses the trip-count-aware
+        # analyzer below.
+        rec["xla_flops_scan_once"] = float(ca.get("flops", -1.0))
+        rec["xla_bytes_scan_once"] = float(ca.get("bytes accessed", -1.0))
+    except Exception as e:  # pragma: no cover
+        rec["cost_analysis_error"] = str(e)[:200]
+
+    try:
+        ma = compiled.memory_analysis()
+        for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+            v = getattr(ma, field, None)
+            if v is not None:
+                rec[field] = int(v)
+        rec["peak_bytes_per_device"] = (
+            rec.get("argument_size_in_bytes", 0)
+            + rec.get("temp_size_in_bytes", 0)
+            + rec.get("output_size_in_bytes", 0)
+            - rec.get("alias_size_in_bytes", 0))
+    except Exception as e:  # pragma: no cover
+        rec["memory_analysis_error"] = str(e)[:200]
+
+    hlo = compiled.as_text()
+    from repro.launch.hlo_analysis import summarize
+    s = summarize(hlo)
+    rec["flops_per_device"] = s["flops"]
+    rec["bytes_per_device"] = s["bytes"]
+    rec["collectives"] = {
+        "bytes": s["collective_bytes"],
+        "counts": s["collective_counts"],
+        "total_bytes": s["total_collective_bytes"],
+    }
+    if save_hlo:
+        (ART / mesh_name).mkdir(parents=True, exist_ok=True)
+        (ART / mesh_name / f"{arch}__{shape}__{variant}.hlo.txt"
+         ).write_text(hlo)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=("single", "multi"))
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    jax.set_mesh(mesh)   # jax>=0.8: context mesh for PartitionSpec shardings
+    mesh_name = args.mesh
+    outdir = ART / mesh_name
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    archs = [args.arch] if args.arch else all_archs()
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        spec = get(arch)
+        shapes = [args.shape] if args.shape else spec.shapes
+        for shape in shapes:
+            if shape not in spec.shapes:
+                continue
+            tag = f"{arch}__{shape}" + (
+                "" if args.variant == "base" else f"__{args.variant}")
+            path = outdir / f"{tag}.json"
+            if path.exists() and not args.force:
+                n_skip += 1
+                continue
+            print(f"[dryrun:{mesh_name}] {tag} ...", flush=True)
+            try:
+                rec = run_cell(arch, shape, mesh, mesh_name, args.variant,
+                               args.save_hlo)
+                rec["ok"] = True
+                path.write_text(json.dumps(rec, indent=1))
+                print(f"  ok: flops/dev={rec.get('flops_per_device', 0):.3e}"
+                      f" coll={rec['collectives']['total_bytes']:.3e}B"
+                      f" peak={rec.get('peak_bytes_per_device', 0)/2**30:.2f}"
+                      f"GiB lower={rec['lower_s']}s"
+                      f" compile={rec['compile_s']}s", flush=True)
+                n_ok += 1
+            except Exception as e:
+                n_fail += 1
+                err = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                       "variant": args.variant, "ok": False,
+                       "error": f"{type(e).__name__}: {e}"[:2000]}
+                path.with_suffix(".error.json").write_text(
+                    json.dumps(err, indent=1))
+                print(f"  FAIL: {type(e).__name__}: {str(e)[:300]}",
+                      flush=True)
+    print(f"[dryrun:{mesh_name}] done ok={n_ok} skip={n_skip} fail={n_fail}")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,337 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's built-in ``compiled.cost_analysis()`` visits every computation ONCE —
+a `lax.scan` over 95 layers reports the flops of a single layer (verified in
+tests/test_hlo_analysis.py).  Since the whole framework leans on scans for
+layers / microbatches / loss chunks, the roofline needs real totals.
+
+This module parses the post-optimization, post-SPMD HLO text (per-device
+module) into computations + ops and aggregates three roofline quantities with
+while-loop multipliers taken from ``backend_config={"known_trip_count":...}``:
+
+  * flops            — dot/convolution (2*M*N*K from operand shapes)
+  * traffic bytes    — operand+result bytes of top-level memory-moving ops
+                       (fusions count at their boundary, not internals)
+  * collective bytes — by kind; all-reduce counted 2x (ring = RS + AG)
+
+Known approximations (documented in EXPERIMENTS.md §Roofline):
+  * conditional branches count once each (none on the hot paths here);
+  * convolution flops assume depthwise/grouped (exact for the Mamba2 conv);
+  * traffic counts buffer touches, ignoring cache reuse between ops — an
+    upper bound on HBM bytes, conservative for the memory term.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2,
+               "u16": 2, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+               "c64": 8, "c128": 16}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"([\w\-]+)\(")
+_TUPLE_OP = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*\((.*?)\)\s+([\w\-]+)\(")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_COND_BODY = re.compile(r"condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BATCH = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "iota", "after-all", "broadcast", "reshape",
+               # control flow: the loop-carried tuple is not per-iteration
+               # HBM traffic; the body's ops are counted (x trip) instead
+               "while", "conditional", "call"}
+
+
+def _nelem(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(dt: str, dims: str) -> int:
+    return _nelem(dims) * DTYPE_BYTES.get(dt, 0)
+
+
+def _all_shape_bytes(text: str) -> int:
+    return sum(_shape_bytes(dt, dims) for dt, dims in _SHAPE.findall(text))
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_bytes: int
+    result_elems: int
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    shapes: dict          # %name -> (dtype, dims) for dot flop resolution
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        hdr = _COMP_HDR.match(line)
+        if hdr and "{" in line:
+            cur = Computation(hdr.group(1), [], {})
+            comps[cur.name] = cur
+            # parameter shapes from the signature
+            for pname, dt, dims in re.findall(
+                    r"([\w.\-]+):\s*([a-z0-9]+)\[([0-9,]*)\]", hdr.group(2)):
+                cur.shapes[pname] = (dt, dims)
+            continue
+        if cur is None:
+            continue
+        m = _OP_LINE.match(line)
+        if m:
+            name, dt, dims, kind = m.groups()
+            cur.shapes[name] = (dt, dims)
+            cur.ops.append(Op(name, kind, _shape_bytes(dt, dims),
+                              _nelem(dims), line))
+            continue
+        mt = _TUPLE_OP.match(line)
+        if mt:
+            name, inner, kind = mt.groups()
+            b = _all_shape_bytes(inner)
+            # record first element shape for gte resolution best-effort
+            cur.ops.append(Op(name, kind, b, 0, line))
+    return comps
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    # operands appear after the opcode '('
+    tail = op.line.split(op.kind + "(", 1)[-1]
+    names = _OPERAND.findall(tail)
+    if not names:
+        return 0.0
+    lhs = comp.shapes.get(names[0])
+    contract = _CONTRACT.search(op.line)
+    if lhs is None or contract is None:
+        # fall back: assume square-ish contraction of result dim
+        return 2.0 * op.result_elems
+    dims = [int(x) for x in contract.group(1).split(",") if x]
+    lhs_dims = [int(x) for x in lhs[1].split(",") if x]
+    k = 1
+    for d in dims:
+        if d < len(lhs_dims):
+            k *= lhs_dims[d]
+    return 2.0 * op.result_elems * k
+
+
+_DIM_LABELS = re.compile(r"dim_labels=([\w\d]+)_([\w\d]+)->([\w\d]+)")
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    """Convolution flops with grouped/depthwise and gradient-conv handling.
+
+    Two regimes:
+      * filter-like (one operand is a small kernel): the usual
+        2 * out * kernel_elems / (feature_groups * batch_groups) — exact for
+        the depthwise Mamba2 conv (groups == channels -> 2 * out * window).
+      * both operands large — XLA expresses the *weight gradient* of a conv
+        as a convolution whose "window" is the whole sequence
+        (window={size=4096}, batch_group_count=C).  Counting that as dense
+        over-counted mamba2-1.3b/train_4k by ~70,000x (8.1e15 of 8.2e15
+        reported flops).  True work = 2 * larger_operand * out_spatial.
+    """
+    tail = op.line.split(op.kind + "(", 1)[-1]
+    names = _OPERAND.findall(tail)
+    if len(names) < 2:
+        return 0.0
+    lhs = comp.shapes.get(names[0])
+    rhs = comp.shapes.get(names[1])
+    if rhs is None:
+        return 2.0 * op.result_elems
+    lhs_elems = _nelem(lhs[1]) if lhs else 0
+    rhs_elems = _nelem(rhs[1])
+    fg = re.search(r"feature_group_count=(\d+)", op.line)
+    bg = re.search(r"batch_group_count=(\d+)", op.line)
+    groups = (int(fg.group(1)) if fg else 1) * (int(bg.group(1)) if bg else 1)
+    small = min(lhs_elems or rhs_elems, rhs_elems)
+    if small <= 100_000:  # a real filter
+        return 2.0 * op.result_elems * max(1, small // groups)
+    # gradient-shaped conv: reduction spans the big operand once per output
+    # spatial position (digit-labeled dims of the result).
+    out_spatial = 1
+    m = _DIM_LABELS.search(op.line)
+    if m and lhs:
+        out_labels = m.group(3)
+        out_dims = [int(x) for x in op.line.split("[", 1)[1]
+                    .split("]")[0].split(",") if x]
+        for lbl, dim in zip(out_labels, out_dims):
+            if lbl.isdigit():
+                out_spatial *= dim
+    return 2.0 * max(lhs_elems, rhs_elems) * out_spatial
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: dict = None
+    collective_counts: dict = None
+
+    def __post_init__(self):
+        self.collective_bytes = self.collective_bytes or dict.fromkeys(
+            COLLECTIVES, 0.0)
+        self.collective_counts = self.collective_counts or dict.fromkeys(
+            COLLECTIVES, 0.0)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in COLLECTIVES:
+            self.collective_bytes[k] += other.collective_bytes[k] * mult
+            self.collective_counts[k] += other.collective_counts[k] * mult
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def analyze(hlo: str, entry: str | None = None) -> Cost:
+    comps = parse_computations(hlo)
+    # find entry: the computation named in 'ENTRY %name' line
+    if entry is None:
+        m = re.search(r"^ENTRY %?([\w.\-]+)", hlo, re.M)
+        entry = m.group(1) if m else next(iter(comps))
+    memo: dict[tuple[str, bool], Cost] = {}
+
+    def _op_traffic_bytes(op: Op, comp: Computation,
+                          operand_names: list[str]) -> float:
+        """HBM traffic model for one top-level op.
+
+        Naive operands+result over-counts loop-body accesses 10x+ (measured
+        8.1 TB/device on qwen3/train_4k): a scan iteration's fusion lists the
+        whole stacked activation stash bf16[28,2,4096,2048] as an operand but
+        reads one layer's slice.  Rules:
+          * dynamic-update-slice (op or fusion root): the big buffer is
+            aliased in place; traffic = 2 x the non-buffer operands
+            (read update + write slice).
+          * dynamic-slice: traffic = 2 x result (read slice, write result).
+          * kLoop fusions and gather: output-driven — each operand
+            contributes min(its bytes, result_elems x its dtype size)
+            (elementwise semantics; big operands are sliced or gathered).
+          * everything else (dot, convolution, kInput/reduce fusions,
+            concatenate, copy, ...): full operands + result — reductions and
+            contractions genuinely read every operand element.
+        """
+        is_dus = ("dynamic-update-slice" in op.name
+                  or op.kind == "dynamic-update-slice")
+        is_ds = not is_dus and ("dynamic-slice" in op.name
+                                or op.kind == "dynamic-slice")
+        sizes = []
+        dtypes = []
+        for nm in operand_names:
+            sh = comp.shapes.get(nm)
+            if sh:
+                sizes.append(_shape_bytes(*sh))
+                dtypes.append(sh[0])
+        if is_dus:
+            # in-place update: traffic = read update + write slice.  Count
+            # only sub-buffer-sized operands — a DUS fusion can list several
+            # buffer-sized aliases (e.g. the carried cache and its converted
+            # copy), none of which move per iteration.
+            small = [b for b in sizes if b < 0.5 * op.result_bytes]
+            return 2.0 * sum(small)
+        if is_ds:
+            return 2.0 * op.result_bytes
+        cap_elems = None
+        if op.kind == "gather":
+            cap_elems = op.result_elems or None
+        elif op.kind == "fusion" and "kind=kLoop" in op.line \
+                and op.result_elems:
+            cap_elems = op.result_elems
+        tot = float(op.result_bytes)
+        for b, dt in zip(sizes, dtypes):
+            if cap_elems:
+                b = min(b, cap_elems * DTYPE_BYTES.get(dt, 4))
+            tot += b
+        return tot
+
+    def comp_cost(name: str, in_fusion: bool) -> Cost:
+        key = (name, in_fusion)
+        if key in memo:
+            return memo[key]
+        total = Cost()
+        memo[key] = total  # guard cycles
+        comp = comps.get(name)
+        if comp is None:
+            return total
+        for op in comp.ops:
+            line = op.line
+            if op.kind == "dot":
+                total.flops += _dot_flops(op, comp)
+            elif op.kind == "convolution":
+                total.flops += _conv_flops(op, comp)
+            is_coll = None
+            for ck in COLLECTIVES:
+                if op.kind.startswith(ck) and not op.kind.endswith("-done"):
+                    is_coll = ck
+                    break
+            if is_coll:
+                sizes = [_shape_bytes(dt, dims)
+                         for dt, dims in _SHAPE.findall(line)]
+                b = max(sizes) if sizes else 0
+                mult = 2.0 if is_coll == "all-reduce" else 1.0
+                total.collective_bytes[is_coll] += b * mult
+                total.collective_counts[is_coll] += 1
+            # bytes at top level only (fusion internals don't touch HBM)
+            if not in_fusion and op.kind not in _SKIP_BYTES:
+                operand_tail = line.split("(", 1)[-1]
+                total.bytes += _op_traffic_bytes(
+                    op, comp, _OPERAND.findall(operand_tail))
+            # recurse into called computations
+            wb = _COND_BODY.search(line)
+            if wb and op.kind == "while":
+                trip = 1
+                mt = _TRIP.search(line)
+                if mt:
+                    trip = int(mt.group(1))
+                total.add(comp_cost(wb.group(1), in_fusion), trip)
+                total.add(comp_cost(wb.group(2), in_fusion), trip)
+                continue
+            mc = _CALLS.search(line)
+            if mc:
+                callee_fused = in_fusion or op.kind == "fusion"
+                total.add(comp_cost(mc.group(1), callee_fused), 1.0)
+            mb = _BRANCHES.search(line)
+            if mb:
+                for br in _OPERAND.findall(mb.group(1)):
+                    total.add(comp_cost(br, in_fusion), 1.0)
+        memo[key] = total
+        return total
+
+    return comp_cost(entry, False)
+
+
+def summarize(hlo: str) -> dict:
+    c = analyze(hlo)
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "collective_bytes": c.collective_bytes,
+        "collective_counts": c.collective_counts,
+        "total_collective_bytes": c.total_collective_bytes,
+    }

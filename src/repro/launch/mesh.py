@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before first init).
+
+Target: TPU v5e pods — 256 chips/pod as (data=16, model=16); multi-pod adds a
+leading "pod" axis (2 pods = 512 chips).  "model" is the TP/EP axis (fast ICI
+within a pod slice); "data" carries DP + FSDP; "pod" carries cross-pod DP
+(gradient all-reduce over DCN/optical links).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 2):
+    """Small mesh for CPU multi-device tests (subprocess with forced host
+    device count)."""
+    return jax.make_mesh((data, model), ("data", "model"))

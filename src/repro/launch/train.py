@@ -1,0 +1,204 @@
+"""End-to-end training driver with fault tolerance.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --preset smoke --steps 60 --save-every 20 --ckpt-dir /tmp/run1
+    # kill it mid-run, then:
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --preset smoke --steps 60 --save-every 20 --ckpt-dir /tmp/run1 --resume
+
+Wires together every runtime subsystem on whatever devices exist (1 CPU
+device here; the same code path jits under the production mesh on TPU —
+the dry-run proves those shardings):
+
+  data (deterministic, shard-aware, resumable) -> microbatched train step
+  (fp32 grad accumulation, ZeRO AdamW, optional int8 EF grad compression)
+  -> atomic async checkpoints (keep-k, LATEST pointer) -> auto-resume
+  -> straggler watchdog + heartbeat files.
+
+``--preset smoke`` trains the arch's reduced config; ``--preset paper100m``
+scales qwen3-family to ~100M params for the end-to-end loss-drop run;
+``--preset full`` builds the full assigned config (cluster use).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get
+from repro.models.params import init_params, param_count, param_pspecs
+from repro.runtime import sharding as shd
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.data import DataConfig, DataPipeline
+from repro.runtime.optim import OptConfig, init_opt_state, opt_state_pspecs
+from repro.runtime.steps import make_train_step
+from repro.runtime.watchdog import Heartbeat, StepWatchdog
+
+
+def build_model(arch: str, preset: str):
+    spec = get(arch)
+    if preset == "full":
+        return spec.make_model()
+    if preset == "smoke":
+        return spec.make_smoke()
+    if preset == "paper100m":
+        from repro.models.transformer import LMConfig, TransformerLM
+        return TransformerLM(LMConfig(      # ~105M params
+            name=f"{arch}-100m", n_layers=12, d_model=768, n_heads=12,
+            n_kv_heads=6, d_ff=3072, vocab=16384, head_dim=64,
+            loss_chunk=128))
+    raise ValueError(preset)
+
+
+def family_extras(spec, model, batch_shape, step: int) -> dict:
+    """Stub-frontend inputs (brief: precomputed patch/frame embeddings)."""
+    b = batch_shape[0]
+    key = jax.random.fold_in(jax.random.key(0xF00D), step)
+    c = model.cfg
+    if spec.family == "vlm" and hasattr(c, "n_patches"):
+        return {"patches": 0.1 * jax.random.normal(
+            key, (b, c.n_patches, c.d_vit), jnp.bfloat16)}
+    if spec.family == "encdec" and hasattr(c, "n_frames"):
+        return {"frames": 0.1 * jax.random.normal(
+            key, (b, c.n_frames, c.d_model), jnp.bfloat16)}
+    return {}
+
+
+def make_mesh_for_devices():
+    n = len(jax.devices())
+    model = 1
+    for m in (8, 4, 2, 1):
+        if n % m == 0 and m <= n:
+            model = m
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--preset", default="smoke",
+                    choices=("smoke", "paper100m", "full"))
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="int8 error-feedback gradient compression")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    model = build_model(args.arch, args.preset)
+    lm_cfg = getattr(model.cfg, "lm", None) or model.cfg
+    vocab = lm_cfg.vocab
+    seq = args.seq_len or (128 if args.preset != "full" else 4096)
+    gbs = args.global_batch or (8 if args.preset != "full" else 256)
+
+    mesh = make_mesh_for_devices()
+    jax.set_mesh(mesh)
+    rules = shd.make_rules(mesh)
+    from repro.models import sharding_ctx
+    sharding_ctx.set_rules({**rules, "_mesh_sizes": dict(mesh.shape)})
+    pspecs = param_pspecs(model.param_defs(), rules)
+    opt_cfg = OptConfig(total_steps=max(args.steps, 200),
+                        warmup_steps=min(20, args.steps // 3 + 1),
+                        compress_grads=args.compress_grads)
+    opt_ps = opt_state_pspecs(pspecs, opt_cfg)
+    spec = get(args.arch)
+    batch_ps = {"tokens": P("data"), "labels": P("data"), "mask": P("data")}
+    for name in family_extras(spec, model, (1,), 0):
+        batch_ps[name] = P("data")
+
+    data_cfg = DataConfig(vocab=vocab, seq_len=seq, global_batch=gbs,
+                          seed=args.seed)
+    pipe = DataPipeline(data_cfg)
+
+    ckpt = CheckpointManager(args.ckpt_dir, keep=3) if args.ckpt_dir else None
+    start_step = 0
+    params = opt_state = None
+    if ckpt and args.resume and ckpt.latest_step() is not None:
+        tmpl = {
+            "params": init_params(model.param_defs(), jax.random.key(0)),
+            "opt": init_opt_state(
+                init_params(model.param_defs(), jax.random.key(0)), opt_cfg),
+        }
+        tree, step, meta = ckpt.restore(
+            tmpl, shardings={
+                "params": shd.named(mesh, pspecs),
+                "opt": shd.named(mesh, opt_ps)})
+        params, opt_state = tree["params"], tree["opt"]
+        pipe = DataPipeline.from_state(data_cfg, meta["data"])
+        start_step = step
+        print(f"[train] resumed from step {step} "
+              f"(data stream continues at {pipe.next_step})")
+    if params is None:
+        params = init_params(model.param_defs(), jax.random.key(args.seed))
+        params = jax.device_put(params, shd.named(mesh, pspecs))
+        opt_state = init_opt_state(params, opt_cfg)
+        opt_state = jax.device_put(opt_state, shd.named(mesh, opt_ps))
+
+    n_params = param_count(model.param_defs())
+    print(f"[train] arch={args.arch} preset={args.preset} params={n_params:,}"
+          f" devices={mesh.size} seq={seq} batch={gbs}")
+
+    step_fn = jax.jit(
+        make_train_step(model, opt_cfg, microbatches=args.microbatches,
+                        batch_axes=shd.batch_axes(mesh)),
+        in_shardings=(pspecs, opt_ps, batch_ps, P()),
+        out_shardings=(pspecs, opt_ps, P()),
+        donate_argnums=(0, 1),
+    )
+
+    def on_hang(waited):
+        raise TimeoutError(f"step hung for {waited:.0f}s")
+
+    dog = StepWatchdog(on_hang=on_hang)
+    hb = Heartbeat(args.ckpt_dir or "/tmp/repro_hb", host_id=0)
+    losses = []
+
+    for step in range(start_step, args.steps):
+        batch = next(pipe)
+        batch.update(family_extras(spec, model, batch["tokens"].shape, step))
+        dog.start_step(step)
+        params, opt_state, metrics = step_fn(
+            params, opt_state, batch, jnp.uint32(step))
+        loss = float(metrics["loss"])
+        stats = dog.end_step()
+        hb.beat(step, loss=loss)
+        losses.append(loss)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"  step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({stats['step_time_s']:.2f}s"
+                  f"{' STRAGGLER' if stats['straggler'] else ''})",
+                  flush=True)
+        if ckpt and (step + 1) % args.save_every == 0:
+            ckpt.save_async(step + 1,
+                            {"params": params, "opt": opt_state},
+                            metadata={"data": pipe.state(),
+                                      "loss": loss, "arch": args.arch})
+    if ckpt:
+        ckpt.wait()
+        ckpt.save(args.steps, {"params": params, "opt": opt_state},
+                  metadata={"data": pipe.state(), "arch": args.arch})
+    dog.close()
+
+    k = min(10, max(1, len(losses) // 4))
+    first, last = sum(losses[:k]) / k, sum(losses[-k:]) / k
+    print(f"[train] loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'}), "
+          f"stragglers={len(dog.stragglers)}")
+    return 0 if last < first else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,6 @@
+"""Model families: dense/MoE/MLA transformers, SSM, hybrid, enc-dec, VLM."""
+from .transformer import LMConfig, TransformerLM  # noqa: F401
+from .ssm_lm import SSMLM, SSMLMConfig  # noqa: F401
+from .hybrid import HybridConfig, HybridLM  # noqa: F401
+from .encdec import EncDecConfig, EncDecLM  # noqa: F401
+from .multimodal import VLM, VLMConfig  # noqa: F401

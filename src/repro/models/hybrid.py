@@ -1,0 +1,267 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a *shared* transformer block.
+
+81 blocks: every 6th position (5, 11, ..., 77 — 13 occurrences) invokes one
+shared attention+FFN block (a single parameter set reused at every
+occurrence, Zamba-style) specialized per occurrence by LoRA adapters; the
+other 68 positions are Mamba2 blocks.  Layout: an outer scan over 13 uniform
+segments (5 Mamba2 + shared block), then a 3-block Mamba2 tail — so compile
+sees two scan bodies regardless of depth.
+
+Decode: Mamba2 states are O(1); the shared block keeps a KV cache per
+occurrence (13 caches over the same weights).  Memory is O(S), per-step work
+O(S) — sub-quadratic decode, so this family runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from .attention import AttnConfig
+from .layers import (chunked_softmax_xent, embed, embed_defs, ffn, ffn_defs,
+                     logits_last, rmsnorm, rmsnorm_defs, unembed_defs)
+from .params import ParamDef, stack_defs
+from .ssm import SSMConfig, mamba2_block, mamba2_decode, mamba2_defs
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    name: str
+    n_blocks: int            # total positions (81)
+    shared_every: int        # every Nth position is the shared block (6)
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_state: int
+    ssm_head_dim: int = 64
+    lora_rank: int = 64
+    rope_theta: float = 10000.0
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    loss_chunk: int = 512
+    kv_chunk: int = 1024
+    ssd_chunk: int = 128
+
+    @property
+    def n_shared_uses(self) -> int:
+        return self.n_blocks // self.shared_every          # 13
+
+    @property
+    def mamba_per_segment(self) -> int:
+        return self.shared_every - 1                        # 5
+
+    @property
+    def n_tail(self) -> int:
+        return (self.n_blocks - self.n_shared_uses
+                * self.shared_every)                        # 81 - 78 = 3
+
+    @property
+    def hd(self) -> int:
+        return self.d_model // self.n_heads
+
+    def ssm_config(self) -> SSMConfig:
+        return SSMConfig(self.d_model, 2 * self.d_model, self.d_state,
+                         self.ssm_head_dim, chunk=self.ssd_chunk)
+
+    def attn_config(self) -> AttnConfig:
+        return AttnConfig(self.d_model, self.n_heads, self.n_kv_heads,
+                          self.hd, self.rope_theta, kv_chunk=self.kv_chunk)
+
+
+class HybridLM:
+    def __init__(self, cfg: HybridConfig):
+        self.cfg = cfg
+        self.ssm = cfg.ssm_config()
+
+    def _mamba_defs(self):
+        return {"ln": rmsnorm_defs(self.cfg.d_model),
+                "mamba": mamba2_defs(self.ssm, self.cfg.dtype)}
+
+    def _lora_defs(self):
+        """Per-occurrence LoRA on the shared block's FFN up-projection
+        (Zamba2 specializes the shared block per use; we adapt the FFN path
+        — the attention projections stay fully shared, noted in DESIGN.md)."""
+        c, r = self.cfg, self.cfg.lora_rank
+        return {
+            "ffn_a": ParamDef((c.d_model, r), ("embed", None), dtype=c.dtype,
+                              init="scaled"),
+            "ffn_b": ParamDef((r, c.d_ff), (None, "mlp"), dtype=c.dtype,
+                              init="zeros"),
+        }
+
+    def param_defs(self):
+        c = self.cfg
+        shared = {
+            "ln1": rmsnorm_defs(c.d_model),
+            "attn": attn_mod.gqa_defs(c.attn_config(), c.dtype),
+            "ln2": rmsnorm_defs(c.d_model),
+            "ffn": ffn_defs(c.d_model, c.d_ff, True, c.dtype),
+        }
+        return {
+            "embed": embed_defs(c.vocab, c.d_model, c.dtype),
+            "segments": stack_defs(
+                {"mamba": stack_defs(self._mamba_defs(),
+                                     c.mamba_per_segment),
+                 "lora": self._lora_defs()},
+                c.n_shared_uses),
+            "shared": shared,
+            "tail": stack_defs(self._mamba_defs(), c.n_tail),
+            "final_norm": rmsnorm_defs(c.d_model),
+            "unembed": unembed_defs(c.d_model, c.vocab, c.dtype),
+        }
+
+    def cache_defs(self, batch: int, max_len: int):
+        c, s = self.cfg, self.ssm
+
+        def mamba_cache(n):
+            return {
+                "conv": ParamDef((n, batch, s.d_conv - 1, s.conv_channels),
+                                 ("stack", "batch", None, "ssm"),
+                                 dtype=c.dtype, init="zeros"),
+                "state": ParamDef(
+                    (n, batch, s.n_heads, s.head_dim, s.d_state),
+                    ("stack", "batch", "ssm", None, None),
+                    dtype=jnp.float32, init="zeros"),
+            }
+
+        kv_shape = (c.n_shared_uses, batch, max_len, c.n_kv_heads, c.hd)
+        return {
+            "seg_mamba": {k: ParamDef((c.n_shared_uses,) + d.shape,
+                                      ("stack",) + d.axes, d.dtype, d.init)
+                          for k, d in mamba_cache(
+                              c.mamba_per_segment).items()},
+            "shared_kv": {
+                "k": ParamDef(kv_shape,
+                              ("stack", "batch", "kv_seq", "kv_heads", "head_dim"),
+                              dtype=c.dtype, init="zeros"),
+                "v": ParamDef(kv_shape,
+                              ("stack", "batch", "kv_seq", "kv_heads", "head_dim"),
+                              dtype=c.dtype, init="zeros"),
+            },
+            "tail_mamba": mamba_cache(c.n_tail),
+        }
+
+    # -- shared transformer block with per-occurrence LoRA -------------------
+
+    def _ffn_with_lora(self, shared, lora, hn):
+        """Shared FFN + per-occurrence rank-r correction on the up-proj."""
+        f = ffn(shared["ffn"], hn)
+        delta = jnp.einsum("bsd,dr,rf->bsf", hn,
+                           lora["ffn_a"].astype(hn.dtype),
+                           lora["ffn_b"].astype(hn.dtype))
+        return f + delta @ shared["ffn"]["wo"].astype(hn.dtype)
+
+    def _shared_block_full(self, shared, lora, h, positions):
+        c = self.cfg
+        hn = rmsnorm(shared["ln1"], h)
+        a, kv = attn_mod.gqa_attention(shared["attn"], c.attn_config(), hn,
+                                       positions)
+        h = h + a
+        hn = rmsnorm(shared["ln2"], h)
+        return h + self._ffn_with_lora(shared, lora, hn), kv
+
+    def _shared_block_decode(self, shared, lora, h, k_cache, v_cache,
+                             cur_len):
+        c = self.cfg
+        hn = rmsnorm(shared["ln1"], h)
+        a, k_cache, v_cache = attn_mod.gqa_decode(
+            shared["attn"], c.attn_config(), hn, k_cache, v_cache, cur_len)
+        h = h + a
+        hn = rmsnorm(shared["ln2"], h)
+        return h + self._ffn_with_lora(shared, lora, hn), k_cache, v_cache
+
+    # -- forward -------------------------------------------------------------
+
+    def _mamba_scan_full(self, stacked, h, collect):
+        def body(h, lp):
+            hn = rmsnorm(lp["ln"], h)
+            out, cache = mamba2_block(lp["mamba"], self.ssm, hn)
+            return h + out, cache if collect else None
+
+        body = jax.checkpoint(body) if self.cfg.remat else body
+        return jax.lax.scan(body, h, stacked)
+
+    def _backbone(self, params, h, positions, collect=False):
+        shared = params["shared"]
+
+        def seg_body(h, seg):
+            h, mcache = self._mamba_scan_full(seg["mamba"], h, collect)
+            h, kv = self._shared_block_full(shared, seg["lora"], h,
+                                            positions)
+            return h, (mcache, kv if collect else None)
+
+        seg_body = jax.checkpoint(seg_body) if self.cfg.remat else seg_body
+        h, seg_caches = jax.lax.scan(seg_body, h, params["segments"])
+        h, tail_cache = self._mamba_scan_full(params["tail"], h, collect)
+        return h, seg_caches, tail_cache
+
+    def train_loss(self, params, batch, rng=None):
+        tokens = batch["tokens"]
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]),
+                                     tokens.shape)
+        h = embed(params["embed"], tokens).astype(self.cfg.dtype)
+        h, _, _ = self._backbone(params, h, positions)
+        h = rmsnorm(params["final_norm"], h)
+        loss, _ = chunked_softmax_xent(
+            params["unembed"], h, batch["labels"], batch.get("mask"),
+            chunk=min(self.cfg.loss_chunk, tokens.shape[1]))
+        return loss, {"xent": loss}
+
+    def prefill(self, params, tokens, max_len: int | None = None):
+        c = self.cfg
+        b, s = tokens.shape
+        max_len = max_len or s
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        h = embed(params["embed"], tokens).astype(c.dtype)
+        h, seg_caches, tail_cache = self._backbone(params, h, positions,
+                                                   collect=True)
+        h = rmsnorm(params["final_norm"], h)
+        (mconv, mstate), kvs = seg_caches
+        k, v = kvs
+        pad = ((0, 0), (0, 0), (0, max_len - s), (0, 0), (0, 0))
+        cache = {
+            "seg_mamba": {"conv": mconv, "state": mstate},
+            "shared_kv": {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)},
+            "tail_mamba": {"conv": tail_cache[0], "state": tail_cache[1]},
+        }
+        return logits_last(params["unembed"], h[:, -1]), cache
+
+    def decode_step(self, params, cache, tokens, cur_len):
+        c = self.cfg
+        h = embed(params["embed"], tokens).astype(c.dtype)
+        shared = params["shared"]
+
+        def mamba_body(h, xs):
+            lp, conv, state = xs
+            hn = rmsnorm(lp["ln"], h)
+            out, (conv, state) = mamba2_decode(lp["mamba"], self.ssm, hn,
+                                               (conv, state))
+            return h + out, (conv, state)
+
+        def seg_body(h, xs):
+            seg, mconv, mstate, kc, vc = xs
+            h, (mconv, mstate) = jax.lax.scan(
+                mamba_body, h, (seg["mamba"], mconv, mstate))
+            h, kc, vc = self._shared_block_decode(shared, seg["lora"], h,
+                                                  kc, vc, cur_len)
+            return h, (mconv, mstate, kc, vc)
+
+        sm = cache["seg_mamba"]
+        h, (mconv, mstate, kc, vc) = jax.lax.scan(
+            seg_body, h, (params["segments"], sm["conv"], sm["state"],
+                          cache["shared_kv"]["k"], cache["shared_kv"]["v"]))
+        tm = cache["tail_mamba"]
+        h, (tconv, tstate) = jax.lax.scan(
+            mamba_body, h, (params["tail"], tm["conv"], tm["state"]))
+        h = rmsnorm(params["final_norm"], h)
+        new_cache = {
+            "seg_mamba": {"conv": mconv, "state": mstate},
+            "shared_kv": {"k": kc, "v": vc},
+            "tail_mamba": {"conv": tconv, "state": tstate},
+        }
+        return logits_last(params["unembed"], h[:, -1]), new_cache

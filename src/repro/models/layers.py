@@ -1,0 +1,172 @@
+"""Shared layer library: norms, projections, embeddings, RoPE, chunked loss.
+
+Pure functions over (params pytree, inputs).  Param structure for each layer
+is produced by the matching ``*_defs`` function so init/sharding stay in one
+place (see params.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .params import ParamDef
+
+ACT = {
+    "silu": jax.nn.silu,
+    "gelu": functools.partial(jax.nn.gelu, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+# --- RMSNorm ---------------------------------------------------------------
+
+def rmsnorm_defs(dim: int) -> dict:
+    return {"scale": ParamDef((dim,), ("norm",), init="ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-6, zero_centered: bool = False):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = (x * x).mean(axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    scale = p["scale"] + 1.0 if zero_centered else p["scale"]
+    return (x * scale).astype(dtype)
+
+
+# --- Dense -----------------------------------------------------------------
+
+def dense_defs(d_in: int, d_out: int, axes: tuple, dtype=jnp.bfloat16) -> dict:
+    return {"w": ParamDef((d_in, d_out), axes, dtype=dtype, init="scaled")}
+
+
+def dense(p, x):
+    return x @ p["w"].astype(x.dtype)
+
+
+# --- Embedding / unembedding ------------------------------------------------
+
+def embed_defs(vocab: int, d_model: int, dtype=jnp.bfloat16) -> dict:
+    # "vocab_in" (replicated) rather than "vocab" (TP): a vocab-sharded
+    # lookup table makes GSPMD fully rematerialize the gather (measured:
+    # +100 GiB temp on the 152k-vocab train cell). The unembed projection
+    # stays vocab-sharded — that one is a matmul and partitions cleanly.
+    return {"table": ParamDef((vocab, d_model), ("vocab_in", "embed"),
+                              dtype=dtype, init="normal")}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed_defs(d_model: int, vocab: int, dtype=jnp.bfloat16) -> dict:
+    return {"w": ParamDef((d_model, vocab), ("embed", "vocab"), dtype=dtype,
+                          init="scaled")}
+
+
+# --- Rotary position embedding ----------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+         rotary_dims: int | None = None) -> jax.Array:
+    """x: [..., S, H, D]; positions: [..., S]. Rotates first rotary_dims."""
+    d = x.shape[-1] if rotary_dims is None else rotary_dims
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freq  # [...,S,half]
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x_rot, x_pass = x[..., :d], x[..., d:]
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+    return jnp.concatenate([out, x_pass], axis=-1) if d < x.shape[-1] else out
+
+
+# --- FFN (SwiGLU / GeGLU / plain) -------------------------------------------
+
+def ffn_defs(d_model: int, d_ff: int, gated: bool = True,
+             dtype=jnp.bfloat16) -> dict:
+    defs = {
+        "wi": ParamDef((d_model, d_ff), ("embed", "mlp"), dtype=dtype,
+                       init="scaled"),
+        "wo": ParamDef((d_ff, d_model), ("mlp", "embed"), dtype=dtype,
+                       init="scaled"),
+    }
+    if gated:
+        defs["wg"] = ParamDef((d_model, d_ff), ("embed", "mlp"), dtype=dtype,
+                              init="scaled")
+    return defs
+
+
+def linear(p, name: str, x):
+    """Projection dispatch: PUD bit-plane GeMV when a packed variant exists.
+
+    ``repro.pud.packer.pack_for_serving`` replaces ``<name>`` with
+    ``<name>_pud`` = {"planes", "scale"}; the forward then routes through the
+    Pallas bit-plane kernel (the MVDRAM serving path) with no model changes.
+    """
+    packed = p.get(name + "_pud")
+    if packed is not None:
+        from repro.pud.gemv import pud_linear
+        return pud_linear(x, packed).astype(x.dtype)
+    return x @ p[name].astype(x.dtype)
+
+
+def ffn(p, x, activation: str = "silu"):
+    act = ACT[activation]
+    h = linear(p, "wi", x)
+    if "wg" in p or "wg_pud" in p:
+        h = act(linear(p, "wg", x)) * h
+    else:
+        h = act(h)
+    return linear(p, "wo", h)
+
+
+# --- Chunked cross-entropy over a sharded vocabulary ------------------------
+
+def chunked_softmax_xent(unembed_p, h, labels, mask=None,
+                         chunk: int = 512):
+    """CE loss without materializing [B, S, V] logits.
+
+    Scans over sequence chunks; the [B, chunk, V] logits block stays sharded
+    over the vocab (model) axis and is recomputed in backward (checkpoint).
+    h: [B, S, D]; labels: [B, S] int32; mask: [B, S] (1 = count).
+    Returns (mean loss, total weight).
+    """
+    b, s, d = h.shape
+    w = unembed_p["w"]
+    m = (jnp.ones_like(labels, jnp.float32) if mask is None
+         else mask.astype(jnp.float32))
+    if s % chunk:  # pad to a chunk multiple with zero weight
+        pad = chunk - s % chunk
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        m = jnp.pad(m, ((0, 0), (0, pad)))
+        s += pad
+    n_chunks = s // chunk
+    h_c = h.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    y_c = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    m_c = m.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_loss(hc, yc, mc):
+        logits = (hc @ w.astype(hc.dtype)).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return ((logz - gold) * mc).sum(), mc.sum()
+
+    def body(carry, xs):
+        tot, cnt = carry
+        l, c = chunk_loss(*xs)
+        return (tot + l, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), (h_c, y_c, m_c))
+    return tot / jnp.maximum(cnt, 1.0), cnt
+
+
+def logits_last(unembed_p, h_last):
+    """Decode-time logits for the last position only. h_last: [B, D]."""
+    return linear(unembed_p, "w", h_last).astype(jnp.float32)

@@ -1,0 +1,122 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-bounded gather dispatch,
+expert-parallel over the "experts" logical axis (-> mesh "model" axis).
+
+Dispatch strategy (SPMD- and memory-friendly at 1M-token batches): tokens are
+grouped by their batch row (one group per sequence) and each expert gathers
+its top-C tokens per group by router score — the standard capacity-factor
+dropping formulation, realized with gather/scatter instead of a dense
+[tokens, experts, capacity] one-hot, so peak memory is
+[groups, experts, capacity, d_model] sharded over both batch (data) and
+experts (model). XLA SPMD inserts the all-to-all-equivalent collectives.
+
+DeepSeek-style shared experts are a dense FFN added unconditionally.
+A load-balance auxiliary loss (Switch-style) is returned alongside.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ffn, ffn_defs
+from .params import ParamDef
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared_experts: int = 0
+    d_ff_shared: int = 0
+    capacity_factor: float = 1.25
+    activation: str = "silu"
+    router_dtype: object = jnp.float32
+
+
+def moe_defs(cfg: MoEConfig, dtype=jnp.bfloat16) -> dict:
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    defs = {
+        "router": ParamDef((d, e), ("embed", None), dtype=jnp.float32,
+                           init="scaled"),
+        # Expert hidden uses "moe_mlp" (replicated by default): the expert
+        # dim already takes the "model" mesh axis (EP) and a PartitionSpec
+        # cannot map one mesh axis to two tensor dims.
+        "wi": ParamDef((e, d, f), ("experts", "embed", "moe_mlp"),
+                       dtype=dtype, init="scaled"),
+        "wg": ParamDef((e, d, f), ("experts", "embed", "moe_mlp"),
+                       dtype=dtype, init="scaled"),
+        "wo": ParamDef((e, f, d), ("experts", "moe_mlp", "embed"),
+                       dtype=dtype, init="scaled"),
+    }
+    if cfg.n_shared_experts:
+        defs["shared"] = ffn_defs(
+            d, cfg.d_ff_shared or f * cfg.n_shared_experts, gated=True,
+            dtype=dtype)
+    return defs
+
+
+def _capacity(cfg: MoEConfig, tokens_per_group: int) -> int:
+    c = int(tokens_per_group * cfg.top_k * cfg.capacity_factor
+            / cfg.n_experts) + 1
+    return min(max(cfg.top_k, c), tokens_per_group)
+
+
+def moe_ffn(p, cfg: MoEConfig, x):
+    """x: [B, S, D] -> (y: [B, S, D], aux_loss scalar).
+
+    B is the group axis; capacity is per (group, expert).
+
+    Decode (S == 1): tokens regroup across the batch into one group —
+    per-row grouping would clamp capacity to top_k PER EXPERT PER TOKEN
+    (64 experts x 6 slots for 1 token x 6 assignments = 64x wasted expert
+    compute; measured 11x total flops on deepseek-v2-lite/decode_32k,
+    EXPERIMENTS.md §Perf iteration 6).
+    """
+    b, s, d = x.shape
+    if s == 1 and b > 1:
+        y, aux = moe_ffn(p, cfg, x.reshape(1, b, d))
+        return y.reshape(b, s, d), aux
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(cfg, s)
+
+    logits = (x.astype(cfg.router_dtype)
+              @ p["router"].astype(cfg.router_dtype))        # [B,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                     # [B,S,k]
+    # normalized combine weights over the selected experts
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # per-token-per-expert score (0 if not selected)
+    sel = jax.nn.one_hot(topi, e, dtype=probs.dtype)          # [B,S,k,E]
+    score = (sel * topv[..., None]).sum(axis=2)               # [B,S,E]
+
+    # each expert takes its top-C tokens per group by score
+    score_t = score.swapaxes(1, 2)                            # [B,E,S]
+    gate_c, idx_c = jax.lax.top_k(score_t, cap)               # [B,E,C]
+    keep = (gate_c > 0).astype(x.dtype)
+
+    xe = jnp.take_along_axis(
+        x[:, None], idx_c[..., None], axis=2)                 # [B,E,C,D]
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe,
+                               p["wg"].astype(x.dtype)))
+    h = h * jnp.einsum("becd,edf->becf", xe, p["wi"].astype(x.dtype))
+    ye = jnp.einsum("becf,efd->becd", h, p["wo"].astype(x.dtype))
+    ye = ye * (gate_c.astype(x.dtype) * keep)[..., None]
+
+    # scatter-add back to token positions
+    y = jnp.zeros_like(x)
+    flat_idx = idx_c                                           # [B,E,C]
+    y = jax.vmap(lambda yb, ib, vb: yb.at[ib.reshape(-1)].add(
+        vb.reshape(-1, d)))(y, flat_idx, ye)
+
+    if cfg.n_shared_experts:
+        y = y + ffn(p["shared"], x, cfg.activation)
+
+    # Switch-style load balance aux loss
+    frac_tokens = (score > 0).astype(jnp.float32).mean(axis=(0, 1))
+    frac_probs = probs.mean(axis=(0, 1)).astype(jnp.float32)
+    aux = e * (frac_tokens * frac_probs).sum()
+    return y, aux

@@ -1,0 +1,92 @@
+"""VLM wrapper (pixtral-12b backbone): text decoder + projected patch prefix.
+
+Per the brief the ViT frontend is a STUB: ``input_specs`` provides precomputed
+patch embeddings [B, n_patches, d_vit]; a 2-layer MLP projector maps them into
+the text model's embedding space and they are *prepended* to the token
+sequence (total sequence budget = n_patches + text tokens = the assigned
+seq_len).  Loss is computed on text positions only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (chunked_softmax_xent, embed, logits_last, rmsnorm)
+from .params import ParamDef
+from .transformer import LMConfig, TransformerLM
+
+
+@dataclasses.dataclass(frozen=True)
+class VLMConfig:
+    lm: LMConfig
+    n_patches: int = 256
+    d_vit: int = 1024
+
+
+class VLM:
+    def __init__(self, cfg: VLMConfig):
+        self.cfg = cfg
+        self.lm = TransformerLM(cfg.lm)
+
+    def param_defs(self):
+        c = self.cfg
+        defs = self.lm.param_defs()
+        defs["projector"] = {
+            "w1": ParamDef((c.d_vit, c.lm.d_model), (None, "embed"),
+                           dtype=c.lm.dtype, init="scaled"),
+            "w2": ParamDef((c.lm.d_model, c.lm.d_model), ("embed", None),
+                           dtype=c.lm.dtype, init="scaled"),
+        }
+        return defs
+
+    def cache_defs(self, batch: int, max_len: int):
+        return self.lm.cache_defs(batch, max_len)
+
+    def _prefix(self, params, patches):
+        p = params["projector"]
+        h = jax.nn.gelu(patches.astype(self.cfg.lm.dtype)
+                        @ p["w1"].astype(self.cfg.lm.dtype))
+        return h @ p["w2"].astype(self.cfg.lm.dtype)
+
+    def _embed_all(self, params, patches, tokens):
+        prefix = self._prefix(params, patches)               # [B,P,D]
+        text = self.lm._embed_tokens(params, tokens)         # [B,S,D]
+        return jnp.concatenate([prefix, text], axis=1)
+
+    def train_loss(self, params, batch, rng=None):
+        """batch: {patches [B,P,dv], tokens [B,St], labels [B,St]}."""
+        c = self.cfg
+        h = self._embed_all(params, batch["patches"], batch["tokens"])
+        b, s, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        h, aux = self.lm.apply_backbone(params, h, positions)
+        # text positions only
+        h_text = h[:, c.n_patches:]
+        loss, _ = chunked_softmax_xent(
+            params["unembed"], h_text, batch["labels"], batch.get("mask"),
+            chunk=min(c.lm.loss_chunk, h_text.shape[1]))
+        return loss + c.lm.aux_loss_weight * aux, {"xent": loss, "aux": aux}
+
+    def prefill(self, params, tokens, patches, max_len: int | None = None):
+        """Returns (last logits, cache). Cache spans patches + text."""
+        c = self.cfg
+        h = self._embed_all(params, patches, tokens)
+        b, s, _ = h.shape
+        max_len = max_len or s
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        # run the LM's internals with prefix embeddings
+        hh, raw, _ = self.lm._backbone(params, h, positions,
+                                       collect_cache=True)
+        hh = rmsnorm(params["final_norm"], hh)
+        cache = {}
+        for name, kv in raw.items():
+            k, v = kv
+            pad = ((0, 0), (0, 0), (0, max_len - s), (0, 0), (0, 0))
+            cache[name] = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+        return logits_last(params["unembed"], hh[:, -1]), cache
+
+    def decode_step(self, params, cache, tokens, cur_len):
+        return self.lm.decode_step(params, cache, tokens, cur_len)

@@ -1,0 +1,122 @@
+"""Parameter definition / init / sharding machinery (functional, no flax).
+
+A model is described by a pytree of ``ParamDef``s (pure metadata: shape,
+dtype, init, *logical axes*).  From it we derive
+  * concrete parameters        (``init_params`` — real arrays), or
+  * abstract parameters        (``abstract_params`` — ShapeDtypeStruct, used
+    by the dry-run so nothing is allocated), and
+  * PartitionSpecs             (``param_pspecs`` — logical axes mapped to mesh
+    axes through a rules table, MaxText-style).
+
+Logical axis vocabulary (see DESIGN.md §5):
+  "vocab"    — vocabulary dim           -> TP ("model")
+  "heads"    — attention heads / q dim  -> TP
+  "kv_heads" — kv heads                 -> TP
+  "mlp"      — FFN hidden               -> TP
+  "experts"  — MoE expert dim           -> EP ("model")
+  "embed"    — d_model                  -> FSDP ("data")
+  "ssm"      — SSM inner/head dim       -> TP
+  "conv", "stack", "norm", None         -> replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Initializer = Callable[[jax.Array, tuple[int, ...], Any], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis per dim
+    dtype: Any = jnp.float32
+    init: str = "normal"                  # normal | zeros | ones | scaled
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _init_one(defn: ParamDef, key: jax.Array) -> jax.Array:
+    if defn.init == "zeros":
+        return jnp.zeros(defn.shape, defn.dtype)
+    if defn.init == "ones":
+        return jnp.ones(defn.shape, defn.dtype)
+    if defn.init == "scaled":  # fan-in scaled normal
+        fan_in = defn.shape[-2] if len(defn.shape) >= 2 else defn.shape[-1]
+        std = defn.scale / math.sqrt(max(1, fan_in))
+        return (std * jax.random.normal(key, defn.shape)).astype(defn.dtype)
+    return (defn.scale * 0.02 * jax.random.normal(key, defn.shape)).astype(
+        defn.dtype)
+
+
+def init_params(defs, key: jax.Array):
+    """Materialize a ParamDef pytree into arrays (unique key per leaf)."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(d, k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(defs):
+    """ShapeDtypeStruct pytree — used by the dry-run, no allocation."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs,
+        is_leaf=is_def)
+
+
+# Default logical->mesh rules: 2-D FSDP("data") x TP("model").
+DEFAULT_RULES: dict[str | None, str | None] = {
+    "vocab": "model",
+    "vocab_in": None,
+    "heads": "model",
+    "heads_act": "model",   # attention activations (padded to divisibility)
+    "kv_heads": "model",
+    "head_dim": None,
+    "kv_seq": None,
+    "mlp": "model",
+    "experts": "model",
+    "moe_mlp": None,     # expert FFN hidden: EP already takes "model"
+    "frames": None,      # enc-dec cross-attn source length (1500, indivisible)
+    "ssm": "model",
+    "embed": "data",
+    "stack": None,
+    "conv": None,
+    "norm": None,
+    None: None,
+}
+
+
+def param_pspecs(defs, rules: dict | None = None):
+    """PartitionSpec pytree from logical axes through the rules table."""
+    merged = dict(DEFAULT_RULES)
+    merged.update(rules or {})
+    rules = merged
+
+    def one(d: ParamDef):
+        return P(*(rules.get(a, None) for a in d.axes))
+
+    return jax.tree.map(one, defs, is_leaf=is_def)
+
+
+def param_count(defs) -> int:
+    return sum(math.prod(d.shape)
+               for d in jax.tree.leaves(defs, is_leaf=is_def))
+
+
+def stack_defs(defs, n: int):
+    """Prepend a scan/stack dim of size n to every ParamDef in the tree."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("stack",) + d.axes, d.dtype,
+                           d.init, d.scale),
+        defs, is_leaf=is_def)

@@ -1,0 +1,66 @@
+"""Logical-axis sharding hints inside model code (MaxText-style).
+
+Model forward functions call ``hint(x, "batch", None, "heads", None)`` at
+layout-critical points (attention carries, scan bodies).  When a launcher has
+installed rules (``set_rules`` — the same logical->mesh table used for
+parameter PartitionSpecs) AND a mesh is current, this becomes
+``jax.lax.with_sharding_constraint``; otherwise it is a no-op, so model code
+stays runnable on bare CPU without any mesh.
+
+Why this exists (EXPERIMENTS.md §Perf iterations 1-3): GSPMD's sharding
+propagation resolves conflicting constraints inside ``lax.scan`` bodies by
+replication.  Measured on qwen3-1.7b/train_4k: the flash-attention
+accumulators came out head-replicated, costing 6.1x model flops per device.
+One hint on the q/k/v tensors and the scan carry restores the intended
+(batch="data", heads="model") layout.
+"""
+from __future__ import annotations
+
+import contextvars
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_RULES: contextvars.ContextVar[dict | None] = contextvars.ContextVar(
+    "repro_logical_sharding_rules", default=None)
+
+
+def set_rules(rules: dict | None) -> None:
+    """Install logical->mesh rules (launcher-side). None disables hints."""
+    _RULES.set(rules)
+
+
+def get_rules() -> dict | None:
+    return _RULES.get()
+
+
+def hint(x: jax.Array, *logical_axes) -> jax.Array:
+    """Constrain x's dims to the mesh axes the rules map these names to."""
+    rules = _RULES.get()
+    if rules is None or x.ndim != len(logical_axes):
+        return x
+    spec = P(*(rules.get(a) if a is not None else None
+               for a in logical_axes))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def padded_head_count(n_heads: int) -> int:
+    """Activation-level head padding target for TP.
+
+    Archs whose head count does not divide the TP degree (llama4: 40 heads
+    on a 16-way "model" axis; whisper: 20) would otherwise run attention
+    fully replicated — parameters stay at the true head count (the arch is
+    unchanged), but q/k/v activations pad to the next multiple with zero
+    heads, shard cleanly, and the pads are trimmed before the output
+    projection (numerically exact; +20 % attention flops for llama4 vs 16x
+    replication).  Requires ``set_rules`` to include "_mesh_sizes".
+    """
+    rules = _RULES.get()
+    if not rules:
+        return n_heads
+    sizes = rules.get("_mesh_sizes") or {}
+    ax = rules.get("heads_act", rules.get("heads"))
+    m = sizes.get(ax) if isinstance(ax, str) else None
+    if not m or n_heads % m == 0:
+        return n_heads
+    return -(-n_heads // m) * m

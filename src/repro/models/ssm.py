@@ -1,0 +1,196 @@
+"""Mamba2 block via the SSD (state-space duality) chunked algorithm.
+
+Training/prefill runs the matmul-friendly chunked form (intra-chunk quadratic
+attention-like term + inter-chunk state scan) — this is the MXU-suited
+formulation from the Mamba2 paper.  Decode runs the O(1) recurrence with a
+(conv window, SSM state) cache.
+
+Sharding: heads / d_inner over the "ssm" logical axis (-> mesh "model");
+the SSM state [B, H, P, N] shards batch over data and heads over model.
+ngroups = 1 (B/C shared across heads), per-head scalar decay A.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rmsnorm, rmsnorm_defs
+from .params import ParamDef
+from .sharding_ctx import hint
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_inner: int
+    d_state: int
+    head_dim: int = 64
+    d_conv: int = 4
+    chunk: int = 128
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_channels(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+
+def mamba2_defs(cfg: SSMConfig, dtype=jnp.bfloat16) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    return {
+        "wz": ParamDef((d, di), ("embed", "ssm"), dtype=dtype, init="scaled"),
+        "wx": ParamDef((d, di), ("embed", "ssm"), dtype=dtype, init="scaled"),
+        "wB": ParamDef((d, n), ("embed", None), dtype=dtype, init="scaled"),
+        "wC": ParamDef((d, n), ("embed", None), dtype=dtype, init="scaled"),
+        "wdt": ParamDef((d, h), ("embed", "ssm"), dtype=dtype, init="scaled"),
+        "conv": ParamDef((cfg.d_conv, cfg.conv_channels), (None, "ssm"),
+                         dtype=dtype, init="scaled"),
+        "a_log": ParamDef((h,), ("ssm",), dtype=jnp.float32, init="zeros"),
+        "d_skip": ParamDef((h,), ("ssm",), dtype=jnp.float32, init="ones"),
+        "dt_bias": ParamDef((h,), ("ssm",), dtype=jnp.float32, init="zeros"),
+        "norm": rmsnorm_defs(di),
+        "wo": ParamDef((di, d), ("ssm", "embed"), dtype=dtype, init="scaled"),
+    }
+
+
+def _causal_conv(xbc, kernel):
+    """Depthwise causal conv. xbc: [B, L, C]; kernel: [W, C]."""
+    w = kernel.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad, kernel[:, None, :].astype(xbc.dtype),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=kernel.shape[1])
+    return out
+
+
+def _proj_inputs(p, cfg: SSMConfig, x):
+    z = x @ p["wz"].astype(x.dtype)
+    xs = x @ p["wx"].astype(x.dtype)
+    bb = x @ p["wB"].astype(x.dtype)
+    cc = x @ p["wC"].astype(x.dtype)
+    dt = (x @ p["wdt"].astype(x.dtype)).astype(jnp.float32)
+    return z, xs, bb, cc, dt
+
+
+def mamba2_block(p, cfg: SSMConfig, x):
+    """Full-sequence SSD. x: [B, L, D] -> (y [B, L, D], final (conv, ssm) state).
+
+    hint() calls pin (batch -> data, d_inner/heads -> model) through the
+    chunked einsums and the inter-chunk scan — without them GSPMD leaves the
+    batch dim replicated inside the layer scan (measured on
+    mamba2-1.3b/train_4k: conv/elementwise tensors [32, 4096, 272] instead
+    of [2, 4096, 272]; EXPERIMENTS.md §Perf iteration 5).
+    """
+    b, l, _ = x.shape
+    q = min(cfg.chunk, l)
+    nc, h, pd, n = -(-l // q), cfg.n_heads, cfg.head_dim, cfg.d_state
+
+    x = hint(x, "batch", None, None)
+    z, xs, bb, cc, dt = _proj_inputs(p, cfg, x)
+    xbc = jnp.concatenate([xs, bb, cc], axis=-1)
+    xbc = hint(xbc, "batch", None, "ssm")
+    conv_tail = xbc[:, -(cfg.d_conv - 1):, :]        # decode cache seed
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv"]))
+    xbc = hint(xbc, "batch", None, "ssm")
+    xs, bb, cc = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + n], axis=-1)
+
+    pad = nc * q - l
+    if pad:  # no-op padding: dt -> 0 (no decay, no state contribution)
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        bb = jnp.pad(bb, ((0, 0), (0, pad), (0, 0)))
+        cc = jnp.pad(cc, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)),
+                     constant_values=-1e9)
+    lpad = l + pad
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])                       # [B,L,H]
+    a = -jnp.exp(p["a_log"])                                       # [H]
+    la = hint((dt * a).reshape(b, nc, q, h),
+              "batch", None, None, "ssm")                          # log decay
+    xh = hint((xs.reshape(b, lpad, h, pd) * dt[..., None]).reshape(
+        b, nc, q, h, pd), "batch", None, None, "ssm", None)        # dt * x
+    bc = hint(bb.reshape(b, nc, q, n), "batch", None, None, None)
+    cg = hint(cc.reshape(b, nc, q, n), "batch", None, None, None)
+
+    cs = jnp.cumsum(la, axis=2)                                    # [B,C,Q,H]
+    # intra-chunk: decay matrix L[t,s] = exp(cs_t - cs_s), t >= s
+    dmat = cs[:, :, :, None, :] - cs[:, :, None, :, :]             # [B,C,Q,S,H]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    dmat = jnp.where(tri[None, None, :, :, None], jnp.exp(dmat), 0.0)
+    dmat = hint(dmat, "batch", None, None, None, "ssm")
+    g = jnp.einsum("bcqn,bcsn->bcqs", cg, bc,
+                   preferred_element_type=jnp.float32)
+    y_intra = jnp.einsum("bcqs,bcqsh,bcshp->bcqhp", g, dmat,
+                         xh.astype(jnp.float32))
+    y_intra = hint(y_intra, "batch", None, None, "ssm", None)
+
+    # chunk states and inter-chunk scan
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)                  # [B,C,Q,H]
+    s_chunk = jnp.einsum("bcsn,bcsh,bcshp->bchpn", bc.astype(jnp.float32),
+                         decay_to_end, xh.astype(jnp.float32))
+    lam = jnp.exp(cs[:, :, -1, :])                                 # [B,C,H]
+
+    def scan_body(hprev, xs_):
+        s_c, lam_c = xs_
+        s_c = hint(s_c, "batch", "ssm", None, None)
+        return hprev * lam_c[..., None, None] + s_c, hprev
+
+    s_cs = s_chunk.swapaxes(0, 1)                                  # [C,B,H,P,N]
+    lam_s = lam.swapaxes(0, 1)                                     # [C,B,H]
+    h_final, h_prevs = jax.lax.scan(
+        scan_body,
+        hint(jnp.zeros((b, h, pd, n), jnp.float32),
+             "batch", "ssm", None, None), (s_cs, lam_s))
+    h_prevs = hint(h_prevs.swapaxes(0, 1),
+                   "batch", None, "ssm", None, None)               # [B,C,H,P,N]
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", cg.astype(jnp.float32),
+                         jnp.exp(cs), h_prevs)
+    y = (y_intra + y_inter).reshape(b, lpad, h, pd)[:, :l]
+    y = y + p["d_skip"][None, None, :, None] * xs[:, :l].reshape(
+        b, l, h, pd).astype(jnp.float32)
+    y = y.reshape(b, l, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = y @ p["wo"].astype(x.dtype)
+    return out, (conv_tail, h_final)
+
+
+def mamba2_init_cache(cfg: SSMConfig, batch: int, dtype=jnp.bfloat16):
+    conv = jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_channels), dtype)
+    state = jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                      jnp.float32)
+    return conv, state
+
+
+def mamba2_decode(p, cfg: SSMConfig, x, cache):
+    """One-token recurrence. x: [B, 1, D]; cache = (conv_win, ssm_state)."""
+    conv_win, h_state = cache
+    b = x.shape[0]
+    n, h, pd = cfg.d_state, cfg.n_heads, cfg.head_dim
+
+    z, xs, bb, cc, dt = _proj_inputs(p, cfg, x)
+    xbc = jnp.concatenate([xs, bb, cc], axis=-1)                   # [B,1,C]
+    window = jnp.concatenate([conv_win, xbc], axis=1)              # [B,W,C]
+    conv_out = (window * p["conv"].astype(x.dtype)[None]).sum(axis=1)
+    xbc_t = jax.nn.silu(conv_out)                                  # [B,C]
+    xs_t, b_t, c_t = jnp.split(xbc_t, [cfg.d_inner, cfg.d_inner + n], axis=-1)
+
+    dt_t = jax.nn.softplus(dt[:, 0] + p["dt_bias"])                # [B,H]
+    a_t = jnp.exp(dt_t * (-jnp.exp(p["a_log"])))                   # [B,H]
+    xh = (xs_t.reshape(b, h, pd) * dt_t[..., None]).astype(jnp.float32)
+    h_state = (h_state * a_t[..., None, None]
+               + jnp.einsum("bhp,bn->bhpn", xh, b_t.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bn->bhp", h_state, c_t.astype(jnp.float32))
+    y = y + p["d_skip"][None, :, None] * xs_t.reshape(b, h, pd).astype(
+        jnp.float32)
+    y = y.reshape(b, 1, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = y @ p["wo"].astype(x.dtype)
+    return out, (window[:, 1:], h_state)

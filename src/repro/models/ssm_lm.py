@@ -1,0 +1,110 @@
+"""Attention-free SSM language model (mamba2-1.3b family).
+
+Stack of Mamba2/SSD blocks with pre-RMSNorm residuals, scanned over stacked
+layer parameters.  Decode carries (conv window, SSM state) per layer — O(1)
+in sequence length, which is why this family runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (chunked_softmax_xent, embed, embed_defs, logits_last,
+                     rmsnorm, rmsnorm_defs, unembed_defs)
+from .params import ParamDef, stack_defs
+from .ssm import (SSMConfig, mamba2_block, mamba2_decode, mamba2_defs)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMLMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    d_state: int
+    vocab: int
+    d_inner: int | None = None
+    head_dim: int = 64
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    loss_chunk: int = 512
+    ssd_chunk: int = 128
+
+    def ssm_config(self) -> SSMConfig:
+        return SSMConfig(self.d_model, self.d_inner or 2 * self.d_model,
+                         self.d_state, self.head_dim, chunk=self.ssd_chunk)
+
+
+class SSMLM:
+    def __init__(self, cfg: SSMLMConfig):
+        self.cfg = cfg
+        self.ssm = cfg.ssm_config()
+
+    def param_defs(self):
+        layer = {"ln": rmsnorm_defs(self.cfg.d_model),
+                 "mamba": mamba2_defs(self.ssm, self.cfg.dtype)}
+        return {
+            "embed": embed_defs(self.cfg.vocab, self.cfg.d_model,
+                                self.cfg.dtype),
+            "layers": stack_defs(layer, self.cfg.n_layers),
+            "final_norm": rmsnorm_defs(self.cfg.d_model),
+            "unembed": unembed_defs(self.cfg.d_model, self.cfg.vocab,
+                                    self.cfg.dtype),
+        }
+
+    def cache_defs(self, batch: int, max_len: int):
+        s, l = self.ssm, self.cfg.n_layers
+        return {
+            "conv": ParamDef((l, batch, s.d_conv - 1, s.conv_channels),
+                             ("stack", "batch", None, "ssm"),
+                             dtype=self.cfg.dtype, init="zeros"),
+            "state": ParamDef((l, batch, s.n_heads, s.head_dim, s.d_state),
+                              ("stack", "batch", "ssm", None, None),
+                              dtype=jnp.float32, init="zeros"),
+        }
+
+    def _backbone(self, params, h, collect_cache=False):
+        def body(h, lp):
+            hn = rmsnorm(lp["ln"], h)
+            out, cache = mamba2_block(lp["mamba"], self.ssm, hn)
+            return h + out, cache if collect_cache else None
+
+        scan_body = jax.checkpoint(body) if self.cfg.remat else body
+        h, caches = jax.lax.scan(scan_body, h, params["layers"])
+        return h, caches
+
+    def train_loss(self, params, batch, rng=None):
+        tokens = batch["tokens"]
+        h = embed(params["embed"], tokens).astype(self.cfg.dtype)
+        h, _ = self._backbone(params, h)
+        h = rmsnorm(params["final_norm"], h)
+        loss, _ = chunked_softmax_xent(
+            params["unembed"], h, batch["labels"], batch.get("mask"),
+            chunk=min(self.cfg.loss_chunk, tokens.shape[1]))
+        return loss, {"xent": loss}
+
+    def prefill(self, params, tokens, max_len: int | None = None):
+        h = embed(params["embed"], tokens).astype(self.cfg.dtype)
+        h, caches = self._backbone(params, h, collect_cache=True)
+        h = rmsnorm(params["final_norm"], h)
+        conv, state = caches
+        cache = {"conv": conv, "state": state}
+        return logits_last(params["unembed"], h[:, -1]), cache
+
+    def decode_step(self, params, cache, tokens, cur_len=None):
+        h = embed(params["embed"], tokens).astype(self.cfg.dtype)
+
+        def body(h, xs):
+            lp, conv, state = xs
+            hn = rmsnorm(lp["ln"], h)
+            out, (conv, state) = mamba2_decode(lp["mamba"], self.ssm, hn,
+                                               (conv, state))
+            return h + out, (conv, state)
+
+        h, (conv, state) = jax.lax.scan(
+            body, h, (params["layers"], cache["conv"], cache["state"]))
+        h = rmsnorm(params["final_norm"], h)
+        return (logits_last(params["unembed"], h[:, -1]),
+                {"conv": conv, "state": state})

@@ -1,0 +1,294 @@
+"""Decoder-only transformer LM covering the dense / MoE / MLA families.
+
+One config class (`LMConfig`) describes all six dense archs, the two MoE
+archs (incl. DeepSeek-MLA) and the text backbones of the VLM.  Layers are
+grouped into homogeneous runs (e.g. DeepSeek-V2-Lite = 1 dense + 26 MoE
+layers) and each run is a `lax.scan` over stacked parameters with
+`jax.checkpoint` on the body — compile time and activation memory stay
+bounded at 95-layer scale.
+
+Entry points (the Model protocol used by launch/ and configs/):
+  * train_loss(params, batch, rng)      -> (loss, metrics)
+  * prefill(params, tokens)             -> (last-position logits, cache)
+  * decode_step(params, cache, token, cur_len) -> (logits, cache)
+plus param_defs() / cache_defs() metadata for init, sharding and the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from .attention import AttnConfig, MLAConfig
+from .layers import (chunked_softmax_xent, embed, embed_defs, ffn, ffn_defs,
+                     logits_last, rmsnorm, rmsnorm_defs, unembed_defs)
+from .moe import MoEConfig, moe_defs, moe_ffn
+from .params import ParamDef, stack_defs
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    activation: str = "silu"
+    gated_ffn: bool = True
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    embed_scale: bool = False            # gemma-style sqrt(d) embed scaling
+    zero_centered_norm: bool = False     # gemma-style (1 + scale) RMSNorm
+    # attention family
+    attention: str = "gqa"               # "gqa" | "mla"
+    mla_kv_rank: int = 512
+    mla_qk_nope: int = 128
+    mla_qk_rope: int = 64
+    mla_v_dim: int = 128
+    # MoE (None -> dense)
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    first_dense_layers: int = 0
+    # execution
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    loss_chunk: int = 512
+    kv_chunk: int = 1024
+    aux_loss_weight: float = 0.01
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def attn_config(self) -> AttnConfig:
+        return AttnConfig(self.d_model, self.n_heads, self.n_kv_heads,
+                          self.hd, self.rope_theta, self.qk_norm,
+                          kv_chunk=self.kv_chunk)
+
+    def mla_config(self) -> MLAConfig:
+        return MLAConfig(self.d_model, self.n_heads, self.mla_kv_rank,
+                         self.mla_qk_nope, self.mla_qk_rope, self.mla_v_dim,
+                         self.rope_theta, kv_chunk=self.kv_chunk)
+
+    def moe_config(self) -> MoEConfig:
+        return MoEConfig(self.d_model, self.n_experts, self.top_k,
+                         self.moe_d_ff or self.d_ff,
+                         self.n_shared_experts,
+                         self.n_shared_experts * (self.moe_d_ff or self.d_ff),
+                         activation=self.activation)
+
+    def groups(self) -> list[tuple[str, int]]:
+        """Homogeneous layer runs: [(kind, count)]."""
+        if not self.is_moe:
+            return [("dense", self.n_layers)]
+        out = []
+        if self.first_dense_layers:
+            out.append(("dense", self.first_dense_layers))
+        out.append(("moe", self.n_layers - self.first_dense_layers))
+        return out
+
+
+class TransformerLM:
+    def __init__(self, cfg: LMConfig):
+        self.cfg = cfg
+
+    # -- parameter / cache metadata -----------------------------------------
+
+    def _layer_defs(self, kind: str) -> dict:
+        cfg = self.cfg
+        if cfg.attention == "mla":
+            attn = attn_mod.mla_defs(cfg.mla_config(), cfg.dtype)
+        else:
+            attn = attn_mod.gqa_defs(cfg.attn_config(), cfg.dtype)
+        if kind == "moe":
+            mixer = moe_defs(cfg.moe_config(), cfg.dtype)
+        else:
+            mixer = ffn_defs(cfg.d_model, cfg.d_ff, cfg.gated_ffn, cfg.dtype)
+        return {
+            "ln1": rmsnorm_defs(cfg.d_model),
+            "attn": attn,
+            "ln2": rmsnorm_defs(cfg.d_model),
+            "mixer": mixer,
+        }
+
+    def param_defs(self):
+        cfg = self.cfg
+        defs = {
+            "embed": embed_defs(cfg.vocab, cfg.d_model, cfg.dtype),
+            "final_norm": rmsnorm_defs(cfg.d_model),
+            "unembed": unembed_defs(cfg.d_model, cfg.vocab, cfg.dtype),
+        }
+        for gi, (kind, count) in enumerate(cfg.groups()):
+            defs[f"layers_{gi}_{kind}"] = stack_defs(
+                self._layer_defs(kind), count)
+        return defs
+
+    def cache_defs(self, batch: int, max_len: int):
+        """ParamDef pytree for the decode cache (dry-run + serving init)."""
+        cfg = self.cfg
+        caches = {}
+        for gi, (kind, count) in enumerate(cfg.groups()):
+            if cfg.attention == "mla":
+                caches[f"layers_{gi}_{kind}"] = {
+                    "ckv": ParamDef((count, batch, max_len, cfg.mla_kv_rank),
+                                    ("stack", "batch", "kv_seq", None),
+                                    dtype=cfg.dtype, init="zeros"),
+                    "kr": ParamDef((count, batch, max_len, cfg.mla_qk_rope),
+                                   ("stack", "batch", "kv_seq", None),
+                                   dtype=cfg.dtype, init="zeros"),
+                }
+            else:
+                kv_shape = (count, batch, max_len, cfg.n_kv_heads, cfg.hd)
+                axes = ("stack", "batch", "kv_seq", "kv_heads", "head_dim")
+                caches[f"layers_{gi}_{kind}"] = {
+                    "k": ParamDef(kv_shape, axes, dtype=cfg.dtype,
+                                  init="zeros"),
+                    "v": ParamDef(kv_shape, axes, dtype=cfg.dtype,
+                                  init="zeros"),
+                }
+        return caches
+
+    # -- forward -------------------------------------------------------------
+
+    def _mix(self, kind, p, h_norm):
+        cfg = self.cfg
+        if kind == "moe":
+            return moe_ffn(p, cfg.moe_config(), h_norm)
+        return ffn(p, h_norm, cfg.activation), 0.0
+
+    def _layer_full(self, kind, p, h, positions):
+        cfg = self.cfg
+        hn = rmsnorm(p["ln1"], h, zero_centered=cfg.zero_centered_norm)
+        if cfg.attention == "mla":
+            a, kv = attn_mod.mla_attention(p["attn"], cfg.mla_config(), hn,
+                                           positions)
+        else:
+            a, kv = attn_mod.gqa_attention(p["attn"], cfg.attn_config(), hn,
+                                           positions)
+        h = h + a
+        hn = rmsnorm(p["ln2"], h, zero_centered=cfg.zero_centered_norm)
+        f, aux = self._mix(kind, p["mixer"], hn)
+        return h + f, kv, aux
+
+    def _embed_tokens(self, params, tokens):
+        cfg = self.cfg
+        h = embed(params["embed"], tokens).astype(cfg.dtype)
+        if cfg.embed_scale:
+            h = h * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+        return h
+
+    def _backbone(self, params, h, positions, collect_cache=False):
+        """Run all layer groups. Returns (h, caches, aux_total)."""
+        cfg = self.cfg
+        caches, aux_total = {}, 0.0
+        for gi, (kind, count) in enumerate(cfg.groups()):
+            name = f"layers_{gi}_{kind}"
+
+            def body(carry, lp, kind=kind):
+                h, aux = carry
+                h, kv, aux_l = self._layer_full(kind, lp, h, positions)
+                ys = kv if collect_cache else None
+                return (h, aux + aux_l), ys
+
+            scan_body = jax.checkpoint(body) if cfg.remat else body
+            (h, aux_total), ys = jax.lax.scan(
+                scan_body, (h, aux_total), params[name])
+            if collect_cache:
+                caches[name] = ys
+        return h, caches, aux_total
+
+    def apply_backbone(self, params, h, positions):
+        """Expose hidden-state pipeline for wrappers (VLM)."""
+        h, _, aux = self._backbone(params, h, positions)
+        h = rmsnorm(params["final_norm"], h,
+                    zero_centered=self.cfg.zero_centered_norm)
+        return h, aux
+
+    def train_loss(self, params, batch, rng=None):
+        """batch: {tokens [B,S], labels [B,S], (mask [B,S])}."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]),
+                                     tokens.shape)
+        h = self._embed_tokens(params, tokens)
+        h, _, aux = self._backbone(params, h, positions)
+        h = rmsnorm(params["final_norm"], h,
+                    zero_centered=cfg.zero_centered_norm)
+        loss, _ = chunked_softmax_xent(
+            params["unembed"], h, batch["labels"], batch.get("mask"),
+            chunk=min(cfg.loss_chunk, tokens.shape[1]))
+        metrics = {"xent": loss, "aux": aux}
+        return loss + cfg.aux_loss_weight * aux, metrics
+
+    def prefill(self, params, tokens, max_len: int | None = None):
+        """Process a full prompt; returns (last logits [B,V], cache)."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        max_len = max_len or s
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        h = self._embed_tokens(params, tokens)
+        h, raw, _ = self._backbone(params, h, positions, collect_cache=True)
+        h = rmsnorm(params["final_norm"], h,
+                    zero_centered=cfg.zero_centered_norm)
+        cache = {}
+        for name, kv in raw.items():
+            if cfg.attention == "mla":
+                ckv, kr = kv
+                pad = ((0, 0), (0, 0), (0, max_len - s), (0, 0))
+                cache[name] = {"ckv": jnp.pad(ckv, pad),
+                               "kr": jnp.pad(kr, pad)}
+            else:
+                k, v = kv
+                pad = ((0, 0), (0, 0), (0, max_len - s), (0, 0), (0, 0))
+                cache[name] = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+        return logits_last(params["unembed"], h[:, -1]), cache
+
+    def decode_step(self, params, cache, tokens, cur_len):
+        """tokens: [B, 1]; cur_len: scalar int (current cache fill).
+
+        Returns (logits [B, V], new cache).
+        """
+        cfg = self.cfg
+        h = self._embed_tokens(params, tokens)
+        new_cache = {}
+        for gi, (kind, count) in enumerate(cfg.groups()):
+            name = f"layers_{gi}_{kind}"
+
+            def body(h, xs, kind=kind):
+                lp, lcache = xs
+                hn = rmsnorm(lp["ln1"], h,
+                             zero_centered=cfg.zero_centered_norm)
+                if cfg.attention == "mla":
+                    a, ckv, kr = attn_mod.mla_decode(
+                        lp["attn"], cfg.mla_config(), hn, lcache["ckv"],
+                        lcache["kr"], cur_len)
+                    upd = {"ckv": ckv, "kr": kr}
+                else:
+                    a, k, v = attn_mod.gqa_decode(
+                        lp["attn"], cfg.attn_config(), hn, lcache["k"],
+                        lcache["v"], cur_len)
+                    upd = {"k": k, "v": v}
+                h = h + a
+                hn = rmsnorm(lp["ln2"], h,
+                             zero_centered=cfg.zero_centered_norm)
+                f, _ = self._mix(kind, lp["mixer"], hn)
+                return h + f, upd
+
+            h, upd = jax.lax.scan(body, h, (params[name], cache[name]))
+            new_cache[name] = upd
+        h = rmsnorm(params["final_norm"], h,
+                    zero_centered=cfg.zero_centered_norm)
+        return logits_last(params["unembed"], h[:, -1]), new_cache

@@ -1,0 +1,6 @@
+"""PUD device plane: DRAM physics, command simulator, timing, bit-serial ops."""
+from .physics import NEUTRAL, PhysicsParams, sense  # noqa: F401
+from .device import (SubarrayState, frac, maj_outputs, make_subarray,  # noqa: F401
+                     read_row, rowcopy, set_params, simra, write_row)
+from .timing import (DDR4Timing, OpCounts, SystemConfig,  # noqa: F401
+                     throughput_ops, wave_latency_ns)

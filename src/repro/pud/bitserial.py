@@ -1,0 +1,245 @@
+"""MAJ-based bit-serial arithmetic on PUD (dual-rail encoding).
+
+PUD arithmetic is built from MAJX (paper Sec. II-B; MVDRAM [4]):
+
+    AND(x, y)  = MAJ3(x, y, 0)
+    OR(x, y)   = MAJ3(x, y, 1)
+    cout       = MAJ3(a, b, cin)
+    sum        = MAJ5(a, b, cin, !cout, !cout)
+
+Commodity DRAM has no in-array NOT, so operands are stored *dual-rail*
+(value and complement); complements of intermediates are computed by running
+the same MAJ on complemented inputs (MAJ is self-dual).
+
+Every MAJX here is an 8-row SiMRA whose 3 non-operand rows hold either the
+baseline neutral/constant pattern or PUDTune calibration data — so arithmetic
+reliability compounds over the MAJ graph, which is exactly how the paper's
+ADD/MUL throughput gains (1.88x / 1.89x) exceed the bare column gain (1.81x).
+
+Command-cost accounting (OpCounts) mirrors an MVDRAM-style layout where
+operand bit-columns are staged once and the carry/sum rails chain in place;
+each MAJX then pays only for its non-operand row copies, Fracs and the SiMRA:
+
+    standalone MAJ5 : 7 RowCopies (3 operands + 1 dup pair + 3 calib) + SiMRA
+    staged MAJ5     : 4 RowCopies (1 dup pair + 3 calib) + SiMRA
+    staged MAJ3     : 5 RowCopies (0/1 const pair + 3 calib) + SiMRA
+    staged AND/OR   : 6 RowCopies (operand const + 0/1 pair + 3 calib) + SiMRA
+
+With these counts the DDR4-2133 model in ``timing.py`` lands within ~5 % of
+every Table-I absolute number (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .device import maj_outputs
+from .physics import PhysicsParams
+from .timing import OpCounts
+
+
+# ---------------------------------------------------------------------------
+# Functional MAJ context: device stand-in for a column-parallel MAJX engine.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MajContext:
+    """Executes MAJX ops against a (simulated) calibrated subarray.
+
+    All bit tensors have shape [..., n_cols]; leading dims are trials.
+    """
+
+    params: PhysicsParams
+    sense_offset: jax.Array   # [n_cols]
+    calib_charge: jax.Array   # [3, n_cols] non-operand row charge
+    n_fracs: int              # Fracs applied per MAJX execution
+
+    def _maj(self, inputs, key, const_sum, const_swing):
+        x = jnp.stack(inputs, axis=-2)
+        return maj_outputs(
+            x, self.calib_charge, self.sense_offset, key, self.params,
+            self.n_fracs, const_charge_sum=const_sum, const_swing_sq=const_swing,
+        )
+
+    # 5 operand rows + 3 calib rows = 8-row SiMRA.
+    def maj5(self, a, b, c, d, e, key):
+        return self._maj((a, b, c, d, e), key, 0.0, 0.0)
+
+    # 3 operand rows + 0/1 constant pair + 3 calib rows.
+    def maj3(self, a, b, c, key):
+        return self._maj((a, b, c), key, 1.0, 2.0)
+
+    # AND = MAJ3(x, y, const 0); one more constant row than maj3.
+    def and_(self, x, y, key):
+        return self._maj((x, y), key, 1.0, 3.0)
+
+    # OR = MAJ3(x, y, const 1).
+    def or_(self, x, y, key):
+        return self._maj((x, y), key, 2.0, 3.0)
+
+
+def _split(key, n):
+    return jax.random.split(key, n)
+
+
+# ---------------------------------------------------------------------------
+# Dual-rail arithmetic graphs (value, complement) + their command costs.
+# ---------------------------------------------------------------------------
+
+
+def full_adder(ctx: MajContext, a, ab, b, bb, c, cb, key, want_sum_bar=True):
+    """One dual-rail full adder. Returns (s, sb, cout, coutb).
+
+    4 MAJX ops (3 if the sum complement is not needed downstream).
+    """
+    k1, k2, k3, k4 = _split(key, 4)
+    cout = ctx.maj3(a, b, c, k1)
+    coutb = ctx.maj3(ab, bb, cb, k2)
+    s = ctx.maj5(a, b, c, coutb, coutb, k3)
+    sb = ctx.maj5(ab, bb, cb, cout, cout, k4) if want_sum_bar else None
+    return s, sb, cout, coutb
+
+
+def add_n(ctx: MajContext, a_bits, ab_bits, b_bits, bb_bits, key,
+          want_sum_bar=False):
+    """Ripple-carry add of two n-bit dual-rail integers (LSB first).
+
+    a_bits: [n, ..., n_cols]. Returns (sum_bits [n,...], sum_bar,
+    carry_out, carry_out_bar).  Implemented as a lax.scan over bit position
+    so the compiled graph holds one full-adder body, not n of them (compile
+    time matters at 65 536-column scale on this CPU-only container).
+    The complement rail is always *simulated*; ``want_sum_bar`` only controls
+    whether it is returned (command-count pricing is separate, in
+    ``add8_counts``/``mul8_counts``).
+    """
+    n = a_bits.shape[0]
+    keys = _split(key, n)
+
+    def body(carry, xs):
+        c, cb = carry
+        a, ab_, b, bb_, k = xs
+        s, sb, c, cb = full_adder(ctx, a, ab_, b, bb_, c, cb, k,
+                                  want_sum_bar=True)
+        return (c, cb), (s, sb)
+
+    init = (jnp.zeros_like(a_bits[0]), jnp.ones_like(a_bits[0]))
+    (c, cb), (sums, sbars) = jax.lax.scan(
+        body, init, (a_bits, ab_bits, b_bits, bb_bits, keys))
+    return sums, (sbars if want_sum_bar else None), c, cb
+
+
+def mul8_truncated(ctx: MajContext, a_bits, ab_bits, b_bits, bb_bits, key):
+    """8-bit x 8-bit -> low 8 bits (fixed-point truncated product).
+
+    Shift-and-add: partial product row j is ANDed (p_i = a_i AND b_j, with
+    complements via OR on the complement rails) and ripple-added into the
+    accumulator at offset j.  Scanned over j with rotation + masking so the
+    compiled graph is one partial-product body; masked lanes pass through
+    unchanged, so the error statistics match the true (8-j)-wide schedule.
+    """
+    k0, krest = _split(key, 2)
+    keys0 = _split(k0, 16)
+    acc = jnp.stack([ctx.and_(a_bits[i], b_bits[0], keys0[i])
+                     for i in range(8)])
+    accb = jnp.stack([ctx.or_(ab_bits[i], bb_bits[0], keys0[8 + i])
+                      for i in range(8)])
+
+    def body(carry, xs):
+        acc, accb = carry
+        j, k = xs
+        b_j = jnp.take(b_bits, j, axis=0)
+        bb_j = jnp.take(bb_bits, j, axis=0)
+        kk = _split(k, 17)
+        p = jnp.stack([ctx.and_(a_bits[i], b_j, kk[i]) for i in range(8)])
+        pb = jnp.stack([ctx.or_(ab_bits[i], bb_j, kk[8 + i])
+                        for i in range(8)])
+        # rotate so target bit j sits at position 0, ripple-add, rotate back
+        acc_r = jnp.roll(acc, -j, axis=0)
+        accb_r = jnp.roll(accb, -j, axis=0)
+        kfa = _split(kk[16], 8)
+
+        def fa_body(cc, xs2):
+            c, cb = cc
+            i, ar, abr, pi, pbi, k2 = xs2
+            s, sb, c2, cb2 = full_adder(ctx, ar, abr, pi, pbi, c, cb, k2,
+                                        want_sum_bar=True)
+            valid = (i < 8 - j)
+            keep = lambda new, old: jnp.where(valid, new, old)
+            return ((keep(c2, c), keep(cb2, cb)),
+                    (keep(s, ar), keep(sb, abr)))
+
+        init = (jnp.zeros_like(acc[0]), jnp.ones_like(acc[0]))
+        _, (s_new, sb_new) = jax.lax.scan(
+            fa_body, init, (jnp.arange(8), acc_r, accb_r, p, pb, kfa))
+        return (jnp.roll(s_new, j, axis=0), jnp.roll(sb_new, j, axis=0)), None
+
+    keys = _split(krest, 7)
+    (acc, accb), _ = jax.lax.scan(body, (acc, accb),
+                                  (jnp.arange(1, 8), keys))
+    return acc
+
+
+# --- command costs (OpCounts) for the graphs above -------------------------
+
+
+def maj5_standalone_counts(n_fracs: int) -> OpCounts:
+    return OpCounts(rowcopies=7, fracs=n_fracs, simras=1)
+
+
+def maj5_staged_counts(n_fracs: int) -> OpCounts:
+    return OpCounts(rowcopies=4, fracs=n_fracs, simras=1)
+
+
+def maj3_staged_counts(n_fracs: int) -> OpCounts:
+    return OpCounts(rowcopies=5, fracs=n_fracs, simras=1)
+
+
+def andor_staged_counts(n_fracs: int) -> OpCounts:
+    return OpCounts(rowcopies=6, fracs=n_fracs, simras=1)
+
+
+def full_adder_counts(n_fracs: int, want_sum_bar=True) -> OpCounts:
+    c = 2 * maj3_staged_counts(n_fracs) + maj5_staged_counts(n_fracs)
+    if want_sum_bar:
+        c = c + maj5_staged_counts(n_fracs)
+    return c
+
+
+def add8_counts(n_fracs: int) -> OpCounts:
+    # Standalone ADD does not need the sum complement rail.
+    return 8 * full_adder_counts(n_fracs, want_sum_bar=False)
+
+
+def mul8_counts(n_fracs: int) -> OpCounts:
+    counts = OpCounts()
+    for j in range(8):
+        width = 8 - j
+        counts = counts + 2 * width * andor_staged_counts(n_fracs)
+        if j > 0:
+            counts = counts + width * full_adder_counts(n_fracs,
+                                                        want_sum_bar=True)
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# Bit/int conversion helpers (LSB first).
+# ---------------------------------------------------------------------------
+
+
+def int_to_bits(x: jax.Array, n_bits: int) -> jax.Array:
+    """[...]: int -> [n_bits, ...] float bits, LSB first."""
+    shifts = jnp.arange(n_bits, dtype=x.dtype)
+    bits = (x[None, ...] >> shifts.reshape((-1,) + (1,) * x.ndim)) & 1
+    return bits.astype(jnp.float32)
+
+
+def bits_to_int(bits: jax.Array) -> jax.Array:
+    """[n_bits, ...] bits -> [...] int32, LSB first."""
+    n = bits.shape[0]
+    weights = (2 ** jnp.arange(n, dtype=jnp.int32)).reshape(
+        (-1,) + (1,) * (bits.ndim - 1))
+    return (bits.astype(jnp.int32) * weights).sum(axis=0)

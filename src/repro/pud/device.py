@@ -1,0 +1,164 @@
+"""Command-level DRAM subarray simulator for PUD.
+
+State is a pytree (``SubarrayState``) so every command is a pure JAX function;
+the simulator composes under jit/vmap/scan.  Rows are the leading axis,
+columns the trailing (column-parallel, like the real device).
+
+Commands implemented (Sec. II-B of the paper):
+  * ``write_row``   — host write (reliable, full charge).
+  * ``rowcopy``     — ACT -> PRE -> ACT intra-subarray copy (reliable; see
+                      physics.py for why single-row sensing is modeled exact).
+  * ``frac``        — violated-timing partial restore: charge moves a factor
+                      ``frac_alpha`` toward neutral.
+  * ``simra``       — simultaneous many-row activation: charge sharing across
+                      the opened rows, per-column sense with offset + noise,
+                      result restored into *all* opened rows (paper Fig. 1 step 4).
+
+The fast path used by calibration / ECR measurement (``maj_outputs``) computes
+the same arithmetic without materializing row state per trial.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .physics import NEUTRAL, PhysicsParams, sense
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SubarrayState:
+    """Charge state of one subarray plus its (static) sense-amp offsets."""
+
+    charge: jax.Array         # [n_rows, n_cols] float32, V_DD units in [0, 1]
+    sense_offset: jax.Array   # [n_cols] float32, threshold deviation from 0.5
+
+    @property
+    def n_rows(self) -> int:
+        return self.charge.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.charge.shape[1]
+
+
+def make_subarray(
+    key: jax.Array,
+    n_rows: int,
+    n_cols: int,
+    params: PhysicsParams,
+) -> SubarrayState:
+    """Manufacture a subarray: cells neutral, offsets ~ N(0, sigma_static)."""
+    offs = params.sigma_static * jax.random.normal(key, (n_cols,), jnp.float32)
+    charge = jnp.full((n_rows, n_cols), NEUTRAL, jnp.float32)
+    return SubarrayState(charge=charge, sense_offset=offs)
+
+
+def write_row(state: SubarrayState, row: int, bits: jax.Array) -> SubarrayState:
+    charge = state.charge.at[row].set(bits.astype(jnp.float32))
+    return dataclasses.replace(state, charge=charge)
+
+
+def read_row(state: SubarrayState, row: int) -> jax.Array:
+    """Normal-timing single-row read: reliable full-margin sensing."""
+    return (state.charge[row] > NEUTRAL).astype(jnp.float32)
+
+
+def rowcopy(state: SubarrayState, src: int, dst: Sequence[int]) -> SubarrayState:
+    """ACT(src) -> PRE -> ACT(dst): copy src's digital value into dst row(s).
+
+    AAP-style multi-destination copy (Ambit): the restore phase can drive more
+    than one row, so ``dst`` may list several rows at one command cost.
+    Also restores src to full charge (sensing digitizes the source).
+    """
+    bits = read_row(state, src)
+    charge = state.charge.at[src].set(bits)
+    for d in dst:
+        charge = charge.at[d].set(bits)
+    return dataclasses.replace(state, charge=charge)
+
+
+def frac(state: SubarrayState, row: int) -> SubarrayState:
+    """One Frac op: charge moves a factor ``frac_alpha`` toward neutral."""
+    # Placement noise is accounted at sensing time (physics.sensing_sigma);
+    # the deterministic state keeps the ideal multi-level value.
+    q = state.charge[row]
+    p = _params(state)
+    q = NEUTRAL + (q - NEUTRAL) * p.frac_alpha
+    return dataclasses.replace(state, charge=state.charge.at[row].set(q))
+
+
+# The params object travels alongside rather than inside the pytree (it is
+# static); module-level holder keeps the command signatures simple.
+_PARAMS: PhysicsParams = PhysicsParams()
+
+
+def set_params(params: PhysicsParams) -> None:
+    global _PARAMS
+    _PARAMS = params
+
+
+def _params(_: SubarrayState) -> PhysicsParams:
+    return _PARAMS
+
+
+def simra(
+    state: SubarrayState,
+    rows: Sequence[int],
+    key: jax.Array,
+    n_fracs_applied: int = 0,
+) -> tuple[SubarrayState, jax.Array]:
+    """Simultaneous many-row activation over ``rows`` (normally 8 rows).
+
+    Returns the new state (result restored into all opened rows) and the
+    sensed bits [n_cols].
+    """
+    p = _params(state)
+    rows = list(rows)
+    q = state.charge[jnp.array(rows)]                      # [k, n_cols]
+    v = p.bitline_voltage(q.sum(axis=0), len(rows))        # [n_cols]
+    swing_sq = ((2.0 * (q - NEUTRAL)) ** 2).sum(axis=0)    # [n_cols]
+    sigma = p.sensing_sigma(jnp.float32(n_fracs_applied), swing_sq)
+    bits = sense(v, state.sense_offset, sigma, key)
+    charge = state.charge
+    for r in rows:
+        charge = charge.at[r].set(bits)
+    return dataclasses.replace(state, charge=charge), bits
+
+
+# ---------------------------------------------------------------------------
+# Fast path: closed-form MAJX outputs for calibration / ECR measurement.
+# ---------------------------------------------------------------------------
+
+def maj_outputs(
+    inputs: jax.Array,           # [..., n_inputs, n_cols] bits in {0, 1}
+    calib_charge: jax.Array,     # [n_calib, n_cols] charge of non-operand rows
+    sense_offset: jax.Array,     # [n_cols]
+    key: jax.Array,
+    params: PhysicsParams,
+    n_fracs_applied: int,
+    const_charge_sum: float = 0.0,
+    const_swing_sq: float = 0.0,
+) -> jax.Array:
+    """Sense result of SiMRA(inputs + calib rows + const rows), vectorized.
+
+    ``inputs`` may carry arbitrary leading batch dims (trials).  The noise is
+    drawn fresh per trial per column, as each SiMRA is an independent analog
+    event.  ``const_*`` account for constant rows (e.g. the 0/1 pair used by
+    MAJ3) that are full-swing but carry no per-column information.
+    """
+    q_in = inputs.astype(jnp.float32)
+    charge_sum = (
+        q_in.sum(axis=-2) + calib_charge.sum(axis=0) + const_charge_sum
+    )
+    v = params.bitline_voltage(charge_sum, params.n_simra_rows)
+    swing_sq = (
+        ((2.0 * (q_in - NEUTRAL)) ** 2).sum(axis=-2)
+        + ((2.0 * (calib_charge - NEUTRAL)) ** 2).sum(axis=0)
+        + const_swing_sq
+    )
+    sigma = params.sensing_sigma(jnp.float32(n_fracs_applied), swing_sq)
+    return sense(v, sense_offset, sigma, key)

@@ -1,0 +1,109 @@
+"""PUD GeMV serving path: low-bit linear layers computed "in DRAM".
+
+This is the MVDRAM [4] application layer that PUDTune's calibration makes
+viable: serving-time projections of a quantized LLM execute as bit-plane
+GeMV over the DRAM subarray's columns, and the usable throughput is set by
+the calibrated error-free column fraction (paper Eq. 1).
+
+Two coupled halves:
+
+  * **Numerics** (`pack_linear`, `pud_linear`) — exact low-bit integer GeMV
+    via the Pallas bit-plane kernel (kernels/bitplane_gemv.py). The weight
+    layout IS the PUD layout: WB bit-planes over columns. On TPU the kernel
+    computes it on the MXU; in real PUD the same planes sit in subarray rows.
+  * **Performance model** (`PUDPerfModel`) — what a real 4-channel DDR4
+    system would sustain for those GeMVs, derived from the bit-serial
+    MAC command schedule (mul + add graphs of pud/bitserial.py) priced on
+    the DDR4 timing model, scaled by the measured error-free fraction.
+    ``speedup_vs_baseline`` is then PUDTune's end-to-end serving claim.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import pud_gemv
+from repro.kernels.ref import pack_bitplanes
+
+from .bitserial import add8_counts, mul8_counts
+from .timing import SystemConfig, wave_latency_ns
+
+
+@dataclasses.dataclass(frozen=True)
+class PUDGemvConfig:
+    weight_bits: int = 4
+    mode: str = "folded"         # "planes" (faithful) | "folded" (optimized)
+    interpret: bool = True       # CPU container; False on real TPU
+
+
+def pack_linear(w: jax.Array, n_bits: int = 4) -> dict:
+    """[K, N] float weights -> per-output-channel-quantized bit-planes.
+
+    Returns {"planes": [WB, K, N] int8 in {0,1}, "scale": [N] float32}.
+    Symmetric per-channel: w ~ scale * q, q in [-2^{b-1}, 2^{b-1}).
+    """
+    qmax = (1 << (n_bits - 1)) - 1
+    scale = jnp.maximum(jnp.abs(w).max(axis=0), 1e-8) / qmax       # [N]
+    q = jnp.clip(jnp.round(w / scale[None, :]), -qmax - 1, qmax)
+    return {"planes": pack_bitplanes(q.astype(jnp.int32), n_bits),
+            "scale": scale.astype(jnp.float32)}
+
+
+def pud_linear(x: jax.Array, packed: dict,
+               cfg: PUDGemvConfig = PUDGemvConfig()) -> jax.Array:
+    """x: [..., K] float -> [..., N] float32 through the bit-plane GeMV."""
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    y = pud_gemv(x2, packed["planes"], packed["scale"],
+                 mode=cfg.mode, interpret=cfg.interpret)
+    return y.reshape(lead + (y.shape[-1],))
+
+
+def pud_linear_ref(x: jax.Array, w: jax.Array, n_bits: int = 4) -> jax.Array:
+    """Oracle: quantize w the same way, do the float matmul on dequantized q."""
+    qmax = (1 << (n_bits - 1)) - 1
+    scale = jnp.maximum(jnp.abs(w).max(axis=0), 1e-8) / qmax
+    q = jnp.clip(jnp.round(w / scale[None, :]), -qmax - 1, qmax)
+    from repro.kernels.ops import quantize_activations
+    xq, x_scale = quantize_activations(x.reshape((-1, x.shape[-1])))
+    y = (xq.astype(jnp.float32) @ q.astype(jnp.float32))
+    y = y * x_scale * scale[None, :]
+    return y.reshape(x.shape[:-1] + (w.shape[-1],))
+
+
+# ---------------------------------------------------------------------------
+# DRAM-side performance model (Eq. 1 applied to GeMV).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PUDPerfModel:
+    """Sustained GeMV rate of the PUD system for one calibrated device.
+
+    A [K, N] GeMV with b-bit weights and 8-bit activations maps each of the
+    K*N MACs onto one column's bit-serial MUL8 + accumulate-ADD8 graphs; the
+    65 536-column wave executes error_free_frac*65 536 MACs per sequence.
+    """
+
+    error_free_frac: float
+    n_fracs: int = 3                  # T_{2,1,0}
+    sys: SystemConfig = dataclasses.field(default_factory=SystemConfig)
+
+    @property
+    def macs_per_second(self) -> float:
+        mac_counts = mul8_counts(self.n_fracs) + add8_counts(self.n_fracs)
+        lat_s = wave_latency_ns(mac_counts, self.sys) * 1e-9
+        cols = self.error_free_frac * self.sys.n_cols_per_subarray
+        return cols * self.sys.n_banks_parallel * self.sys.n_channels / lat_s
+
+    def gemv_latency_s(self, k: int, n: int) -> float:
+        return (k * n) / self.macs_per_second
+
+    def tokens_per_second(self, flops_per_token: float) -> float:
+        """flops_per_token = 2 * active params (one MAC = 2 flops)."""
+        return self.macs_per_second / (flops_per_token / 2.0)
+
+    def speedup_vs(self, baseline: "PUDPerfModel") -> float:
+        return self.macs_per_second / baseline.macs_per_second

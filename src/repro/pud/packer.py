@@ -1,0 +1,88 @@
+"""Serving-time weight packer: swap model projections onto the PUD path.
+
+``pack_for_serving`` walks a trained/initialized parameter tree and replaces
+selected 2-D projections with PUD bit-plane packs ({"planes", "scale"}),
+which ``models.layers.linear`` dispatches to the Pallas bit-plane GeMV.
+This is how the paper's technique becomes a first-class serving feature:
+any arch config can be served with ``--pud-gemv`` and its FFN/unembed
+projections execute in the (simulated) DRAM layout.
+
+Scope (documented in DESIGN.md §4): FFN wi/wg/wo and the unembed projection
+— the dominant GeMV flops at decode time. Attention projections and MoE
+expert banks keep the bf16 path (same mechanism would apply; the expert dim
+adds a leading axis the serving kernel does not tile yet).
+
+Stacked (scanned) layers pack per-slice: [L, K, N] -> [L, WB, K, N]; under
+the layer ``lax.scan`` each iteration sees one [WB, K, N] pack.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .gemv import PUDGemvConfig, pack_linear
+
+PACKABLE = ("wi", "wg", "wo")
+
+
+def _pack_stacked(w: jax.Array, n_bits: int) -> dict:
+    """[L, K, N] (or [K, N]) weights -> stacked {"planes", "scale"}."""
+    if w.ndim == 2:
+        return pack_linear(w, n_bits)
+    packs = [pack_linear(w[i], n_bits) for i in range(w.shape[0])]
+    return {"planes": jnp.stack([p["planes"] for p in packs]),
+            "scale": jnp.stack([p["scale"] for p in packs])}
+
+
+def pack_for_serving(params: dict, cfg: PUDGemvConfig = PUDGemvConfig(),
+                     include_unembed: bool = True) -> tuple[dict, dict]:
+    """Returns (serving params, report). Original fp weights are dropped
+    from packed projections (the bit-planes ARE the stored layout)."""
+    report = {"packed": [], "skipped": [], "bits": cfg.weight_bits}
+
+    def walk(tree, path):
+        if not isinstance(tree, dict):
+            return tree
+        out = {}
+        for key, sub in tree.items():
+            p = path + (key,)
+            if (key in PACKABLE and isinstance(sub, jax.Array)
+                    and sub.ndim in (2, 3) and "mixer" in path):
+                out[key + "_pud"] = _pack_stacked(sub, cfg.weight_bits)
+                report["packed"].append("/".join(p))
+            elif key in PACKABLE and not isinstance(sub, jax.Array):
+                out[key] = walk(sub, p)   # nested dict coincidence
+            else:
+                if isinstance(sub, dict):
+                    out[key] = walk(sub, p)
+                else:
+                    out[key] = sub
+                    if key in PACKABLE and isinstance(sub, jax.Array):
+                        report["skipped"].append("/".join(p))
+        return out
+
+    packed = walk(params, ())
+    if include_unembed and "unembed" in packed:
+        w = packed["unembed"].pop("w")
+        packed["unembed"]["w_pud"] = _pack_stacked(w, cfg.weight_bits)
+        report["packed"].append("unembed/w")
+    return packed, report
+
+
+def packed_bytes(params: dict) -> dict:
+    """Storage accounting: bf16 bytes vs packed bit-plane bytes."""
+    stats = {"bf16_bytes": 0, "pud_bytes": 0}
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                if isinstance(v, dict):
+                    if "planes" in v and "scale" in v and k.endswith("_pud"):
+                        stats["pud_bytes"] += v["planes"].size // 8 \
+                            + v["scale"].size * 4
+                    else:
+                        walk(v)
+                elif isinstance(v, jax.Array):
+                    stats["bf16_bytes"] += v.size * v.dtype.itemsize
+    walk(params)
+    return stats

@@ -1,0 +1,125 @@
+"""Analog physics of Processing-Using-DRAM (PUD).
+
+Implements the capacitance/charge-sharing model the paper itself uses in
+Sec. II-C: a cell capacitor C_cell = 30 fF sharing charge with a bitline
+C_bitline = 270 fF.  A single-row activation of a fully charged cell yields
+
+    V = (1 * 30 + 0.5 * 270) / (30 + 270) = 0.55 V_DD
+
+and an 8-row SiMRA of a MAJ5(1,1,1,0,0) pattern with three neutral rows yields
+
+    V = ((3 + 1.5) * 30 + 0.5 * 270) / (8 * 30 + 270) = 0.5294 V_DD
+
+— both numbers quoted in the paper, which this module reproduces exactly
+(`test_pud_device.py::test_paper_voltage_examples`).
+
+Noise model (fitted once to the paper's baseline operating point, see
+``repro.core.fit``):
+  * ``sigma_static``   — per-column sense-amp threshold deviation (process
+    variation), the error source the paper attributes errors to (Sec. II-C).
+  * ``sigma_dynamic``  — per-sensing thermal/electrical noise.
+  * ``sigma_frac``     — per-Frac charge placement variation (each Frac is a
+    violated-timing partial restore; repeated Fracs accumulate placement error).
+  * ``sigma_transfer`` — charge-sharing non-ideality proportional to the charge
+    actually moved; rows at full swing perturb the bitline more than rows
+    already near neutral.  (This is what makes T_{0,0,0}'s three full-swing
+    rows slightly noisier than T_{2,1,0}'s partially discharged rows.)
+
+Single-row ACT / RowCopy sensing is modeled reliable: with normal (JEDEC)
+timing the sense amp has the full 0.05 V_DD margin and its offset is
+compensated by the longer amplification window.  Only violated-timing SiMRA
+sensing sees the offset + noise — matching the paper's attribution of errors
+to "the precise charge sharing process required for MAJX".
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+NEUTRAL = 0.5  # precharge / neutral charge level, in V_DD units
+
+
+@dataclasses.dataclass(frozen=True)
+class PhysicsParams:
+    """Device physics constants. Defaults are fitted (see repro/core/fit.py)."""
+
+    c_cell_ff: float = 30.0
+    c_bitline_ff: float = 270.0
+    n_simra_rows: int = 8
+    # Per-Frac geometric convergence toward neutral. Fitted 0.4184 (ideal
+    # halving would be 0.5); FracDRAM reports 6-10 Fracs to reach neutral,
+    # consistent: 0.5 * 0.4184^6 = 0.003 of full charge left.
+    frac_alpha: float = 0.418438
+    # --- fitted noise constants (V_DD units), see repro/core/fit.py ---
+    sigma_static: float = 0.033281    # sense threshold process variation
+    sigma_dynamic: float = 0.001315   # base per-sensing noise
+    sigma_frac: float = 0.000024      # per applied Frac, at the bitline
+    sigma_transfer: float = 0.000400  # per unit of squared row swing
+    # --- reliability drift (Sec. IV-B.3) ---
+    # Calibrated to the paper's Fig.-6 envelope (new ECR < 0.14 % over
+    # 40-100 C, < 0.27 % over one week): the measured drift of calibrated
+    # columns is tiny, so the per-degC / per-sqrt(day) threshold drift must
+    # stay well inside the T210 margin slack.  Note the model also carries a
+    # ~0.5-0.7 % re-measurement churn floor the silicon does not show
+    # (EXPERIMENTS.md §Paper, Fig. 6 discussion).
+    temp_nominal_c: float = 50.0
+    sigma_temp_drift: float = 0.00002   # threshold drift stddev per degC
+    sigma_time_drift: float = 0.00012   # threshold drift stddev per sqrt(day)
+
+    def c_total_ff(self, k_rows: int) -> float:
+        return k_rows * self.c_cell_ff + self.c_bitline_ff
+
+    def bitline_voltage(self, charge_sum: jax.Array, k_rows: int) -> jax.Array:
+        """Charge-sharing voltage for ``k_rows`` simultaneously opened rows.
+
+        charge_sum: sum of the cell charges (V_DD units) of the opened rows.
+        """
+        num = charge_sum * self.c_cell_ff + NEUTRAL * self.c_bitline_ff
+        return num / self.c_total_ff(k_rows)
+
+    @property
+    def cell_weight(self) -> float:
+        """Bitline voltage shift per unit of cell charge in an 8-row SiMRA."""
+        return self.c_cell_ff / self.c_total_ff(self.n_simra_rows)
+
+    @property
+    def maj_margin(self) -> float:
+        """|V - 0.5| for the closest MAJ5 patterns (3-of-5 vs 2-of-5).
+
+        (k + 1.5 + 0.5) either side of 4.0 total charge => +-0.5 cell units.
+        """
+        return 0.5 * self.cell_weight
+
+    def frac_charge(self, bit: jax.Array, n_frac: jax.Array) -> jax.Array:
+        """Cell charge after ``n_frac`` Frac ops applied to a stored bit."""
+        return NEUTRAL + (bit - NEUTRAL) * self.frac_alpha ** n_frac
+
+    def sensing_sigma(
+        self, n_fracs_total: jax.Array, sum_swing_sq: jax.Array
+    ) -> jax.Array:
+        """Effective dynamic noise std of one SiMRA sensing.
+
+        n_fracs_total: Frac ops applied in this MAJX execution (charge
+          placement error accumulates per Frac).
+        sum_swing_sq:  sum over opened rows of (2*(q - 0.5))^2 — the charge
+          transfer non-ideality term.
+        """
+        var = (
+            self.sigma_dynamic**2
+            + self.sigma_frac**2 * n_fracs_total
+            + self.sigma_transfer**2 * sum_swing_sq
+        )
+        return jnp.sqrt(var)
+
+
+def sense(
+    v_bitline: jax.Array,
+    threshold_offset: jax.Array,
+    noise_sigma: jax.Array | float,
+    key: jax.Array,
+) -> jax.Array:
+    """Sense-amplifier decision: 1 iff V + noise > 0.5 + per-column offset."""
+    eps = noise_sigma * jax.random.normal(key, v_bitline.shape, dtype=jnp.float32)
+    return (v_bitline + eps > NEUTRAL + threshold_offset).astype(jnp.float32)

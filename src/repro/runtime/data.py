@@ -1,0 +1,124 @@
+"""Deterministic, resumable, shard-aware data pipeline.
+
+No external corpus ships with this container, so the pipeline generates
+synthetic-but-learnable token streams (a mixture of order-2 Markov chains —
+enough structure that a ~100M model's loss visibly drops within a few hundred
+steps, see examples/train_lm.py).  The *pipeline machinery* is the deliverable:
+
+  * **Determinism**: batch at step ``s`` for host shard ``h`` is a pure
+    function of (seed, s, h) — `jax.random.fold_in` chains, no hidden state.
+  * **Resumability**: pipeline state is just ``(seed, next_step)``; it rides
+    in the checkpoint metadata and restore continues the exact stream.
+  * **Shard-awareness**: each host generates only its ``1/n_hosts`` slice of
+    the global batch (the per-host rows of the batch axis), as a real
+    multi-host loader must.
+  * **Packing**: documents are sampled to a length distribution and packed
+    into fixed-length rows with EOS separators; labels are next-token with
+    -100 padding masked via ``mask``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_hosts: int = 1
+    host_id: int = 0
+    n_chains: int = 8          # Markov mixture components
+    order2_frac: float = 0.5   # fraction of order-2 positions
+    eos_id: int = 1
+
+    @property
+    def host_batch(self) -> int:
+        assert self.global_batch % self.n_hosts == 0
+        return self.global_batch // self.n_hosts
+
+
+def _chain_tables(cfg: DataConfig) -> jax.Array:
+    """[n_chains, vocab] per-chain next-token logit tables (static)."""
+    key = jax.random.key(cfg.seed ^ 0x5EED)
+    return jax.random.normal(
+        key, (cfg.n_chains, min(cfg.vocab, 512)), jnp.float32) * 2.0
+
+
+class DataPipeline:
+    """Iterator with explicit state: ``state()`` / ``from_state``."""
+
+    def __init__(self, cfg: DataConfig, next_step: int = 0):
+        self.cfg = cfg
+        self.next_step = next_step
+        self._tables = _chain_tables(cfg)
+        self._sample = jax.jit(self._sample_impl)
+
+    # -- state (rides in checkpoint metadata) --------------------------------
+
+    def state(self) -> dict:
+        return {"seed": self.cfg.seed, "next_step": self.next_step}
+
+    @classmethod
+    def from_state(cls, cfg: DataConfig, state: dict) -> "DataPipeline":
+        assert state["seed"] == cfg.seed, "pipeline seed changed mid-run"
+        return cls(cfg, next_step=int(state["next_step"]))
+
+    # -- batch generation -----------------------------------------------------
+
+    def _sample_impl(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        b, s = cfg.host_batch, cfg.seq_len
+        k_chain, k_tok, k_len = jax.random.split(key, 3)
+        v = self._tables.shape[1]
+
+        # per-row mixture component
+        chain = jax.random.randint(k_chain, (b,), 0, cfg.n_chains)
+        logits = self._tables[chain]                          # [b, v]
+
+        # order-1 sampling with order-2 "echo" structure: with prob
+        # order2_frac, token t repeats token t-2 (+1 mod v) — a pattern a
+        # transformer learns quickly but a unigram model cannot.
+        toks = jax.random.categorical(
+            k_tok, logits[:, None, :].repeat(s, axis=1))      # [b, s]
+        echo = (jnp.roll(toks, 2, axis=1) + 1) % v
+        use_echo = jax.random.bernoulli(
+            jax.random.fold_in(k_tok, 1), cfg.order2_frac, (b, s))
+        pos = jnp.arange(s)[None, :]
+        toks = jnp.where((pos >= 2) & use_echo, echo, toks)
+
+        # document packing: segment rows with EOS every random 64-512 tokens
+        doc_len = jax.random.randint(k_len, (b, 1), 64, 512)
+        is_eos = (pos % doc_len) == (doc_len - 1)
+        toks = jnp.where(is_eos, cfg.eos_id, toks).astype(jnp.int32)
+
+        labels = jnp.roll(toks, -1, axis=1)
+        mask = jnp.ones((b, s), jnp.float32).at[:, -1].set(0.0)
+        return {"tokens": toks, "labels": labels, "mask": mask}
+
+    def batch_at(self, step: int) -> dict:
+        """Pure function of (seed, step, host) — the determinism contract."""
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.key(self.cfg.seed), step),
+            self.cfg.host_id)
+        return self._sample(key)
+
+    def __next__(self) -> dict:
+        b = self.batch_at(self.next_step)
+        self.next_step += 1
+        return b
+
+    def __iter__(self):
+        return self
+
+
+def eval_batches(cfg: DataConfig, n: int, seed_offset: int = 10_000):
+    """Fixed held-out batches (disjoint fold-in domain from training)."""
+    pipe = DataPipeline(
+        dataclasses.replace(cfg, seed=cfg.seed + seed_offset))
+    return [pipe.batch_at(i) for i in range(n)]

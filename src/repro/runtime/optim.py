@@ -1,0 +1,137 @@
+"""Distributed AdamW: fp32 moments sharded like the parameters (ZeRO),
+global-norm clipping, warmup+cosine schedule, optional int8 gradient
+compression with error feedback.
+
+The optimizer state pytree mirrors the param tree, so ``param_pspecs`` specs
+apply verbatim — every moment shard lives with its parameter shard, giving
+ZeRO-1/3 semantics for free under pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    compress_grads: bool = False   # int8 error-feedback compression
+
+
+def lr_schedule(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        1.0, cfg.total_steps - cfg.warmup_steps)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return cfg.peak_lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params, cfg: OptConfig):
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "mu": jax.tree.map(f32, params),
+        "nu": jax.tree.map(f32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.compress_grads:
+        state["residual"] = jax.tree.map(f32, params)
+    return state
+
+
+def opt_state_pspecs(param_specs, cfg: OptConfig):
+    from jax.sharding import PartitionSpec as P
+    state = {"mu": param_specs, "nu": param_specs, "step": P()}
+    if cfg.compress_grads:
+        state["residual"] = param_specs
+    return state
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum((g.astype(jnp.float32) ** 2).sum()
+                        for g in jax.tree.leaves(tree)))
+
+
+# --- int8 error-feedback gradient compression -------------------------------
+# Models the bandwidth-reduction trick used on slow cross-pod links: gradients
+# are quantized to int8 blocks before synchronization; the quantization error
+# is fed back into the next step's gradient (EF-SGD), keeping convergence.
+
+def _quantize_int8(g, block=256):
+    flat = g.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    scale = jnp.maximum(jnp.abs(flat).max(axis=1, keepdims=True), 1e-12) / 127
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q, scale, pad
+
+
+def _dequantize_int8(q, scale, pad, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def compress_roundtrip(g):
+    """int8 quantize->dequantize; returns (g_hat, error)."""
+    q, s, pad = _quantize_int8(g)
+    g_hat = _dequantize_int8(q, s, pad, g.shape)
+    return g_hat, g - g_hat
+
+
+def adamw_update(params, grads, state, cfg: OptConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+
+    if cfg.compress_grads:
+        def comp(g, r):
+            g_hat, err = compress_roundtrip(g.astype(jnp.float32) + r)
+            return g_hat, err
+        pairs = jax.tree.map(comp, grads, state["residual"])
+        grads = jax.tree.map(lambda pr: pr[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        residual = jax.tree.map(lambda pr: pr[1], pairs,
+                                is_leaf=lambda x: isinstance(x, tuple))
+    else:
+        residual = None
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    lr = lr_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh, vh = m / b1c, v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * \
+            p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    mu = jax.tree.map(lambda t: t[1], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda t: t[2], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"mu": mu, "nu": nu, "step": step}
+    if residual is not None:
+        new_state["residual"] = residual
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

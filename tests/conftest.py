@@ -1,0 +1,15 @@
+"""Shared pytest config.
+
+NOTE: deliberately does NOT set XLA_FLAGS / device counts — smoke tests must
+see the single real CPU device; only launch/dryrun.py forces 512 host devices.
+Enables the persistent compilation cache so the big unrolled MAJ-graph
+compiles (MUL8 ~ 250 MAJX ops) are paid once per machine, not per run.
+"""
+import os
+
+import jax
+
+_CACHE = os.environ.get("JAX_COMPILATION_CACHE_DIR",
+                        "/tmp/jax_compilation_cache")
+jax.config.update("jax_compilation_cache_dir", _CACHE)
+jax.config.update("jax_persistent_cache_min_compile_time_secs", 2.0)

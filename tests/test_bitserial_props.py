@@ -1,0 +1,87 @@
+"""Property tests: MAJ-based dual-rail arithmetic is EXACT integer math on
+an ideal (noise-free, offset-free) device — the algorithmic layer is
+separated from the error model, so any failure here is a graph bug, not
+noise. Also: self-duality invariants of the MAJ primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.pud.bitserial import (MajContext, add_n, bits_to_int, int_to_bits,
+                                 mul8_truncated)
+from repro.pud.physics import PhysicsParams
+
+IDEAL = PhysicsParams(sigma_static=0.0, sigma_dynamic=0.0, sigma_frac=0.0,
+                      sigma_transfer=0.0)
+
+
+def _ctx(n_cols: int, fc=(2, 1, 0)) -> MajContext:
+    from repro.core.offsets import levels_to_charges, make_ladder, neutral_level
+    ladder = make_ladder(fc, IDEAL)
+    levels = jnp.full((n_cols,), neutral_level(ladder), jnp.int32)
+    return MajContext(
+        params=IDEAL,
+        sense_offset=jnp.zeros((n_cols,), jnp.float32),
+        calib_charge=levels_to_charges(ladder, levels, IDEAL),
+        n_fracs=ladder.n_fracs)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), nbits=st.sampled_from([4, 8, 12]))
+def test_addn_exact_on_ideal_device(seed, nbits):
+    n_cols = 64
+    k1, k2, kg = jax.random.split(jax.random.key(seed), 3)
+    hi = 1 << nbits
+    a = jax.random.randint(k1, (n_cols,), 0, hi, jnp.int32)
+    b = jax.random.randint(k2, (n_cols,), 0, hi, jnp.int32)
+    ab, bb = int_to_bits(a, nbits), int_to_bits(b, nbits)
+    s, _, cout, _ = _run_add(_ctx(n_cols), ab, bb, kg)
+    got = bits_to_int(s) + (cout.astype(jnp.int32) << nbits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(a + b))
+
+
+def _run_add(ctx, ab, bb, kg):
+    return add_n(ctx, ab, 1.0 - ab, bb, 1.0 - bb, kg)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_mul8_exact_on_ideal_device(seed):
+    n_cols = 32
+    k1, k2, kg = jax.random.split(jax.random.key(seed), 3)
+    a = jax.random.randint(k1, (n_cols,), 0, 256, jnp.int32)
+    b = jax.random.randint(k2, (n_cols,), 0, 256, jnp.int32)
+    ab, bb = int_to_bits(a, 8), int_to_bits(b, 8)
+    s = mul8_truncated(_ctx(n_cols), ab, 1.0 - ab, bb, 1.0 - bb, kg)
+    got = bits_to_int(s)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray((a * b) & 0xFF))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_maj_primitive_identities(seed):
+    """AND/OR/MAJ3 truth tables + self-duality MAJ(~x) = ~MAJ(x)."""
+    ctx = _ctx(8)
+    key = jax.random.key(seed)
+    bits = jax.random.bernoulli(key, 0.5, (3, 8)).astype(jnp.float32)
+    x, y, z = bits
+    k1, k2, k3, k4 = jax.random.split(jax.random.key(seed + 1), 4)
+    np.testing.assert_array_equal(np.asarray(ctx.and_(x, y, k1)),
+                                  np.asarray(x * y))
+    np.testing.assert_array_equal(np.asarray(ctx.or_(x, y, k2)),
+                                  np.asarray(jnp.maximum(x, y)))
+    maj = np.asarray(ctx.maj3(x, y, z, k3))
+    np.testing.assert_array_equal(maj, np.asarray(
+        ((x + y + z) > 1.5).astype(jnp.float32)))
+    dual = np.asarray(ctx.maj3(1 - x, 1 - y, 1 - z, k4))
+    np.testing.assert_array_equal(dual, 1.0 - maj)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), nbits=st.integers(1, 16))
+def test_bits_roundtrip(seed, nbits):
+    x = jax.random.randint(jax.random.key(seed), (37,), 0, 1 << nbits,
+                           jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(bits_to_int(int_to_bits(x, nbits))), np.asarray(x))

@@ -1,0 +1,147 @@
+"""PUD device-plane tests: physics matches the paper's worked examples,
+commands behave per Sec. II-B, bit-serial arithmetic is exact on an ideal
+(noise-free) device."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.pud import bitserial, device, timing
+from repro.pud.physics import NEUTRAL, PhysicsParams
+
+IDEAL = PhysicsParams(sigma_static=0.0, sigma_dynamic=0.0, sigma_frac=0.0,
+                      sigma_transfer=0.0)
+
+
+def test_paper_voltage_examples():
+    """Reproduce the two voltages the paper computes in Sec. II-C."""
+    p = PhysicsParams()
+    # single-cell read of a '1': 0.55 V_DD
+    v1 = p.bitline_voltage(jnp.float32(1.0), 1)
+    assert abs(float(v1) - 0.55) < 1e-6
+    # MAJ5(1,1,1,0,0) with three neutral rows under 8-row SiMRA: ~0.529 V_DD
+    v2 = p.bitline_voltage(jnp.float32(3 + 3 * NEUTRAL), 8)
+    assert abs(float(v2) - 0.5294) < 1e-3
+
+
+def test_frac_multi_level_convergence():
+    """Repeated Fracs approach neutral (FracDRAM: 6-10 ops to neutral)."""
+    p = PhysicsParams()
+    q = jnp.float32(1.0)
+    levels = [float(p.frac_charge(q, n)) for n in range(8)]
+    assert levels[0] == 1.0
+    diffs = np.abs(np.diff(levels))
+    assert (diffs[1:] < diffs[:-1]).all()          # monotone convergence
+    assert abs(levels[6] - NEUTRAL) < 0.005         # ~neutral by 6 Fracs
+
+
+def test_simra_majority_and_restore():
+    device.set_params(IDEAL)
+    key = jax.random.key(0)
+    state = device.make_subarray(key, 16, 256, IDEAL)
+    bits = [1, 1, 1, 0, 0]
+    for r, b in enumerate(bits):
+        state = device.write_row(state, r, jnp.full((256,), float(b)))
+    for r in (5, 6, 7):
+        state = device.write_row(state, r, jnp.full((256,), 0.5))
+    state, out = device.simra(state, range(8), jax.random.key(1))
+    np.testing.assert_allclose(np.asarray(out), 1.0)     # MAJ5 = 1
+    # result restored into all 8 opened rows (paper Fig. 1 step 4)
+    np.testing.assert_allclose(np.asarray(state.charge[:8]), 1.0)
+
+
+def test_rowcopy_multi_destination():
+    device.set_params(IDEAL)
+    state = device.make_subarray(jax.random.key(0), 8, 128, IDEAL)
+    src = jnp.arange(128) % 2
+    state = device.write_row(state, 0, src.astype(jnp.float32))
+    state = device.rowcopy(state, 0, (3, 5))
+    np.testing.assert_allclose(np.asarray(state.charge[3]),
+                               np.asarray(src, dtype=np.float32))
+    np.testing.assert_allclose(np.asarray(state.charge[5]),
+                               np.asarray(src, dtype=np.float32))
+
+
+def _ideal_ctx(n_cols):
+    return bitserial.MajContext(
+        params=IDEAL,
+        sense_offset=jnp.zeros((n_cols,)),
+        calib_charge=jnp.full((3, n_cols), NEUTRAL),
+        n_fracs=0,
+    )
+
+
+def test_full_adder_truth_table():
+    ctx = _ideal_ctx(8)
+    key = jax.random.key(0)
+    for a in (0, 1):
+        for b in (0, 1):
+            for c in (0, 1):
+                av = jnp.full((8,), float(a))
+                bv = jnp.full((8,), float(b))
+                cv = jnp.full((8,), float(c))
+                s, sb, cout, coutb = bitserial.full_adder(
+                    ctx, av, 1 - av, bv, 1 - bv, cv, 1 - cv, key)
+                assert int(s[0]) == (a + b + c) % 2, (a, b, c)
+                assert int(cout[0]) == (a + b + c) // 2, (a, b, c)
+                assert int(sb[0]) == 1 - (a + b + c) % 2
+                assert int(coutb[0]) == 1 - (a + b + c) // 2
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_add8_exact_on_ideal_device(seed):
+    n = 64
+    ctx = _ideal_ctx(n)
+    key = jax.random.key(seed)
+    ka, kb, kg = jax.random.split(key, 3)
+    a = jax.random.randint(ka, (1, n), 0, 256, jnp.int32)
+    b = jax.random.randint(kb, (1, n), 0, 256, jnp.int32)
+    ab_, bb_ = bitserial.int_to_bits(a, 8), bitserial.int_to_bits(b, 8)
+    s, _, cout, _ = bitserial.add_n(ctx, ab_, 1 - ab_, bb_, 1 - bb_, kg)
+    got = bitserial.bits_to_int(s) + (cout.astype(jnp.int32) << 8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(a + b))
+
+
+def test_mul8_truncated_exact_on_ideal_device():
+    n = 32
+    ctx = _ideal_ctx(n)
+    key = jax.random.key(123)
+    ka, kb, kg = jax.random.split(key, 3)
+    a = jax.random.randint(ka, (1, n), 0, 256, jnp.int32)
+    b = jax.random.randint(kb, (1, n), 0, 256, jnp.int32)
+    ab_, bb_ = bitserial.int_to_bits(a, 8), bitserial.int_to_bits(b, 8)
+    s = bitserial.mul8_truncated(ctx, ab_, 1 - ab_, bb_, 1 - bb_, kg)
+    np.testing.assert_array_equal(np.asarray(bitserial.bits_to_int(s)),
+                                  np.asarray((a * b) & 0xFF))
+
+
+def test_int_bits_roundtrip():
+    x = jnp.arange(256, dtype=jnp.int32)
+    bits = bitserial.int_to_bits(x, 8)
+    np.testing.assert_array_equal(np.asarray(bitserial.bits_to_int(bits)),
+                                  np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# timing model
+# ---------------------------------------------------------------------------
+
+def test_latency_model_matches_paper_operating_point():
+    """MAJ5 wave latency lands at the paper's implied ~2.5 us and the
+    ACT-count ratios between T-configs match Sec. IV-B.2's structure."""
+    sys = timing.SystemConfig()
+    lat210 = timing.wave_latency_ns(bitserial.maj5_standalone_counts(3), sys)
+    assert 2200 < lat210 < 2800, lat210      # paper-implied 2.52 us
+    lat000 = timing.wave_latency_ns(bitserial.maj5_standalone_counts(0), sys)
+    lat222 = timing.wave_latency_ns(bitserial.maj5_standalone_counts(6), sys)
+    assert lat000 < lat210 < lat222          # fewer Fracs -> lower latency
+
+
+def test_throughput_eq1_proportional_to_error_free_columns():
+    sys = timing.SystemConfig()
+    cnt = bitserial.maj5_standalone_counts(3)
+    t1 = timing.throughput_ops(cnt, 1000.0, sys)
+    t2 = timing.throughput_ops(cnt, 2000.0, sys)
+    assert abs(t2 / t1 - 2.0) < 1e-9

@@ -1,0 +1,240 @@
+"""Runtime substrate tests: checkpointing (atomic/async/resume/elastic),
+data pipeline determinism, optimizer, gradient compression, watchdog."""
+import dataclasses
+import json
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.data import DataConfig, DataPipeline, eval_batches
+from repro.runtime.optim import (OptConfig, adamw_update, compress_roundtrip,
+                                 init_opt_state, lr_schedule)
+from repro.runtime.watchdog import Heartbeat, StepWatchdog
+
+
+def tree_allclose(a, b):
+    jax.tree.map(lambda x, y: np.testing.assert_allclose(
+        np.asarray(x, np.float32), np.asarray(y, np.float32), rtol=1e-6),
+        a, b)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree(key=0):
+    return {
+        "w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4) + key,
+        "nested": {"b": jnp.ones((5,), jnp.bfloat16) * (key + 1),
+                   "step": jnp.int32(key)},
+    }
+
+
+def test_checkpoint_roundtrip_bf16(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    mgr.save(3, _tree(7), metadata={"note": "x"})
+    out, step, meta = mgr.restore(_tree(0), verify=True)
+    assert step == 3 and meta["note"] == "x"
+    tree_allclose(out, _tree(7))
+    assert out["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_keep_k_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s))
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+    out, step, _ = mgr.restore(_tree(0), step=3)
+    tree_allclose(out, _tree(3))
+
+
+def test_checkpoint_async_overlap(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save_async(1, _tree(1))
+    mgr.save_async(2, _tree(2))   # joins the first
+    mgr.wait()
+    assert mgr.all_steps() == [1, 2]
+    out, _, _ = mgr.restore(_tree(0))
+    tree_allclose(out, _tree(2))
+
+
+def test_checkpoint_torn_write_invisible(tmp_path):
+    """A crash mid-save (.tmp dir left behind) must not corrupt restore."""
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(1, _tree(1))
+    # simulate a torn save: partial tmp dir + stale LATEST
+    torn = tmp_path / "step_2.tmp-999"
+    torn.mkdir()
+    (torn / "w.npy").write_bytes(b"garbage")
+    out, step, _ = mgr.restore(_tree(0))
+    assert step == 1
+    tree_allclose(out, _tree(1))
+    mgr.save(2, _tree(2))         # gc removes the torn dir
+    assert not torn.exists()
+
+
+def test_checkpoint_lost_latest_pointer(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(5, _tree(5))
+    (tmp_path / "LATEST").unlink()
+    assert mgr.latest_step() == 5   # falls back to directory scan
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=1)
+    mgr.save(1, {"w": jnp.zeros((3,))})
+    with pytest.raises(ValueError, match="shape"):
+        mgr.restore({"w": jnp.zeros((4,))})
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Restore onto an explicit sharding (device_put path)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    mgr = CheckpointManager(tmp_path, keep=1)
+    mgr.save(1, _tree(2))
+    shardings = jax.tree.map(
+        lambda _: NamedSharding(mesh, P()), _tree(0))
+    out, _, _ = mgr.restore(_tree(0), shardings=shardings)
+    assert out["w"].sharding == NamedSharding(mesh, P())
+    tree_allclose(out, _tree(2))
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+CFG = DataConfig(vocab=256, seq_len=64, global_batch=4, seed=1)
+
+
+def test_data_deterministic_and_resumable():
+    p1 = DataPipeline(CFG)
+    b0, b1, b2 = next(p1), next(p1), next(p1)
+    # resume from state after 1 batch
+    p2 = DataPipeline.from_state(CFG, {"seed": 1, "next_step": 1})
+    r1, r2 = next(p2), next(p2)
+    np.testing.assert_array_equal(b1["tokens"], r1["tokens"])
+    np.testing.assert_array_equal(b2["tokens"], r2["tokens"])
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_data_host_sharding_partitions_global_batch():
+    full = DataPipeline(CFG).batch_at(0)
+    # two hosts: each generates its own half independently
+    half0 = DataPipeline(dataclasses.replace(
+        CFG, n_hosts=2, host_id=0)).batch_at(0)
+    assert half0["tokens"].shape == (2, 64)
+    assert full["tokens"].shape == (4, 64)
+    # different hosts draw different rows
+    half1 = DataPipeline(dataclasses.replace(
+        CFG, n_hosts=2, host_id=1)).batch_at(0)
+    assert not np.array_equal(half0["tokens"], half1["tokens"])
+
+
+def test_data_shapes_and_ranges():
+    b = DataPipeline(CFG).batch_at(3)
+    assert b["tokens"].dtype == jnp.int32
+    assert int(b["tokens"].min()) >= 0
+    assert int(b["tokens"].max()) < 256
+    assert b["mask"].shape == (4, 64)
+    np.testing.assert_array_equal(
+        np.asarray(b["labels"][:, :-1]), np.asarray(b["tokens"][:, 1:]))
+
+
+def test_eval_batches_disjoint_from_train():
+    tr = DataPipeline(CFG).batch_at(0)
+    ev = eval_batches(CFG, 1)[0]
+    assert not np.array_equal(tr["tokens"], ev["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# Optimizer + compression
+# ---------------------------------------------------------------------------
+
+def test_adamw_descends_quadratic():
+    cfg = OptConfig(peak_lr=0.1, warmup_steps=1, total_steps=100,
+                    weight_decay=0.0)
+    params = {"x": jnp.array([3.0, -2.0])}
+    state = init_opt_state(params, cfg)
+    for _ in range(60):
+        grads = {"x": 2 * params["x"]}
+        params, state, m = adamw_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["x"]).max()) < 0.5
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(peak_lr=1.0, warmup_steps=10, total_steps=100,
+                    min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.int32(s))) for s in (0, 5, 10, 50, 100)]
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert lrs[3] < 1.0
+    assert lrs[4] == pytest.approx(0.1, abs=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_compress_roundtrip_error_bound(seed):
+    g = jax.random.normal(jax.random.key(seed), (97,)) * 10
+    g_hat, err = compress_roundtrip(g)
+    np.testing.assert_allclose(np.asarray(g_hat + err), np.asarray(g),
+                               rtol=1e-5, atol=1e-5)
+    # int8 per-block quantization: error bounded by scale/2 per element
+    scale = float(jnp.abs(g).max()) / 127
+    assert float(jnp.abs(err).max()) <= scale * 0.5 + 1e-6
+
+
+def test_compressed_training_still_descends():
+    cfg = OptConfig(peak_lr=0.1, warmup_steps=1, total_steps=100,
+                    weight_decay=0.0, compress_grads=True)
+    params = {"x": jnp.linspace(-3, 3, 32)}
+    state = init_opt_state(params, cfg)
+    assert "residual" in state
+    for _ in range(60):
+        grads = {"x": 2 * params["x"]}
+        params, state, _ = adamw_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["x"]).max()) < 0.5
+
+
+# ---------------------------------------------------------------------------
+# Watchdog / heartbeat
+# ---------------------------------------------------------------------------
+
+def test_watchdog_flags_stragglers():
+    dog = StepWatchdog(slow_factor=3.0)
+    for i in range(5):
+        dog.start_step(i)
+        dog.end_step()
+    dog.start_step(5)
+    time.sleep(3.1 * (dog.ema_s or 0.01) + 0.02)
+    stats = dog.end_step()
+    assert stats["straggler"]
+    assert dog.stragglers and dog.stragglers[0][0] == 5
+    dog.close()
+
+
+def test_watchdog_hang_callback_fires():
+    hung = threading.Event()
+    dog = StepWatchdog(hang_timeout_s=0.05,
+                       on_hang=lambda w: hung.set())
+    dog.start_step(0)
+    assert hung.wait(timeout=5.0)
+    dog.end_step()
+    dog.close()
+
+
+def test_heartbeat_roundtrip(tmp_path):
+    hb = Heartbeat(tmp_path, host_id=3)
+    hb.beat(17, loss=1.5)
+    all_ = Heartbeat.read_all(tmp_path)
+    assert all_[0]["host"] == 3 and all_[0]["step"] == 17
+    assert Heartbeat.stale_hosts(tmp_path, timeout_s=60) == []
+    assert Heartbeat.stale_hosts(tmp_path, timeout_s=-1) == [3]

@@ -1,0 +1,84 @@
+"""End-to-end system tests: the public launchers run whole workflows on the
+smoke configs — train (with checkpoint/resume continuity), serve (bf16 and
+PUD bit-plane paths), and the device-plane quickstart pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import serve as serve_mod
+from repro.launch import train as train_mod
+from repro.models import sharding_ctx
+
+
+@pytest.fixture(autouse=True)
+def _clean_rules():
+    yield
+    sharding_ctx.set_rules(None)
+
+
+def test_train_end_to_end_with_resume(tmp_path):
+    common = ["--arch", "qwen3-1.7b", "--preset", "smoke",
+              "--ckpt-dir", str(tmp_path), "--save-every", "5",
+              "--global-batch", "4", "--seq-len", "64",
+              "--microbatches", "2", "--log-every", "100"]
+    assert train_mod.main(common + ["--steps", "12"]) == 0
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.glob("step_*"))
+    assert 12 in steps
+    # resume continues from the saved step and still improves
+    assert train_mod.main(common + ["--steps", "24", "--resume"]) == 0
+
+
+def test_train_with_grad_compression(tmp_path):
+    rc = train_mod.main([
+        "--arch", "granite-8b", "--preset", "smoke", "--steps", "40",
+        "--global-batch", "4", "--seq-len", "64", "--compress-grads",
+        "--log-every", "100"])
+    assert rc == 0
+
+
+def test_serve_end_to_end_pud(capsys):
+    rc = serve_mod.main([
+        "--arch", "qwen3-1.7b", "--preset", "smoke", "--batch", "2",
+        "--prompt-len", "8", "--gen", "4", "--pud-gemv"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "token agreement" in out
+    assert "1.81x" in out or "1.8" in out   # Eq.-1 serving gain reported
+
+
+def test_serve_vlm_family():
+    rc = serve_mod.main([
+        "--arch", "pixtral-12b", "--preset", "smoke", "--batch", "2",
+        "--prompt-len", "8", "--gen", "2"])
+    assert rc == 0
+
+
+def test_quickstart_pipeline_device_plane():
+    """Manufacture -> calibrate -> ECR drop -> Eq.-1 gain, end to end."""
+    from repro.core.calibrate import CalibrationConfig, identify_calibration
+    from repro.core.ecr import measure_ecr_maj5
+    from repro.core.offsets import (baseline_charges, levels_to_charges,
+                                    make_ladder)
+    from repro.pud.bitserial import maj5_standalone_counts
+    from repro.pud.physics import PhysicsParams
+    from repro.pud.timing import SystemConfig, throughput_ops
+
+    params, system = PhysicsParams(), SystemConfig()
+    k_m, k_c, k_b, k_t = jax.random.split(jax.random.key(3), 4)
+    sense = params.sigma_static * jax.random.normal(k_m, (4096,), jnp.float32)
+    ecr_b, _ = measure_ecr_maj5(
+        k_b, sense, baseline_charges(3, 4096, params), params, 3,
+        n_trials=2048)
+    lad = make_ladder((2, 1, 0), params)
+    lv = identify_calibration(k_c, sense, lad, params,
+                              CalibrationConfig(n_iterations=20,
+                                                n_samples=256))
+    ecr_t, _ = measure_ecr_maj5(
+        k_t, sense, levels_to_charges(lad, lv, params), params,
+        lad.n_fracs, n_trials=2048)
+    tp = lambda e: throughput_ops(
+        maj5_standalone_counts(3), (1 - e) * system.n_cols_per_subarray,
+        system)
+    assert ecr_t < ecr_b / 4
+    assert 1.4 < tp(ecr_t) / tp(ecr_b) < 2.4   # paper: 1.81x
