@@ -1,0 +1,193 @@
+"""Fleet calibration benchmark: whole-grid Algorithm 1 in one jitted call.
+
+    PYTHONPATH=src python benchmarks/fleet_calibration.py
+    PYTHONPATH=src python benchmarks/fleet_calibration.py --full
+
+Tracks, per run:
+  * wall-clock of the single jitted fleet calibration (16+ subarrays,
+    fused Pallas iteration kernel) and of the persisted-table reload path
+    that serving uses instead of recalibrating;
+  * the aggregate error-free-column trajectory: fleet-mean ECR for the
+    uncalibrated baseline B_{3,0,0} vs the calibrated T_{2,1,0} grid, with
+    the per-subarray distribution (min/max/p90);
+  * agreement with the single-subarray path (same fold_in key protocol), the
+    fleet engine's correctness anchor;
+  * ADD8/MUL8 fleet-aggregate throughput (Table I's 1.81x/1.88x headline
+    ratios, now as distributions over subarrays).
+"""
+import argparse
+import pathlib
+import sys
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+if __package__:
+    from .common import emit, ratio_line
+else:  # run directly: python benchmarks/fleet_calibration.py
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    from common import emit, ratio_line
+
+from repro.core.calibrate import CalibrationConfig, identify_calibration
+from repro.core.ecr import fleet_ecr_summary, measure_ecr_fleet, \
+    measure_ecr_maj5
+from repro.core.fleet import (FleetConfig, calibrate_fleet,
+                              fleet_calib_charges, load_or_calibrate,
+                              manufacture_fleet, subarray_key)
+from repro.core.offsets import baseline_charges
+from repro.core.throughput import fleet_throughput
+from repro.pud.physics import PhysicsParams
+from repro.runtime.calib_cache import CalibrationTableCache
+
+PAPER_ADD_GAIN = 1.81   # Table I: ADD8 throughput gain T210 vs B300
+PAPER_MUL_GAIN = 1.88   # Table I: MUL8 throughput gain
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale columns per subarray (65536, slow)")
+    ap.add_argument("--subarrays", type=int, default=16)
+    ap.add_argument("--n-cols", type=int, default=None)
+    ap.add_argument("--n-trials", type=int, default=2048)
+    ap.add_argument("--method", default="reference",
+                    choices=("reference", "fused"),
+                    help="calibration engine for the main leg; 'reference' "
+                         "is bit-identical to the fused Pallas kernel and "
+                         "fast on CPU (the kernel runs interpreted here; a "
+                         "short fused parity leg always runs)")
+    args = ap.parse_args(argv)
+
+    n_cols = args.n_cols or (65536 if args.full else 4096)
+    cfg = FleetConfig(n_channels=1, n_banks=4,
+                      n_subarrays=max(1, args.subarrays // 4),
+                      n_cols=n_cols)
+    assert cfg.n_subarrays_total >= 16 or args.subarrays < 16
+    params = PhysicsParams()
+    ladder = cfg.ladder(params)
+    cal_cfg = CalibrationConfig()
+    key = jax.random.key(2026)
+
+    print(f"[fleet] grid {cfg.grid_shape} x {cfg.n_cols} cols "
+          f"({cfg.n_subarrays_total} subarrays, "
+          f"{cfg.n_cols_total:,} columns total)")
+
+    offsets = manufacture_fleet(key, cfg, params)
+
+    # --- the one jitted call: whole-grid Algorithm 1 ----------------------
+    t0 = time.time()
+    cal = calibrate_fleet(key, offsets, cfg, params, cal_cfg,
+                          method=args.method)
+    jax.block_until_ready(cal.levels)
+    t_fleet = time.time() - t0
+    hist = np.asarray(cal.mean_abs_bias)
+    print(f"  fleet calibration ({args.method}, {cal_cfg.n_iterations} "
+          f"iters): {t_fleet:.1f}s wall")
+    print(f"  bias trajectory: {hist[0]:.4f} -> {hist[-1]:.4f}")
+
+    # --- fused Pallas kernel parity leg (short; interpreter-priced) -------
+    small = FleetConfig(n_channels=1, n_banks=4, n_subarrays=4, n_cols=512)
+    small_cal = CalibrationConfig(n_iterations=4, n_samples=256)
+    offs_small = manufacture_fleet(key, small, params)
+    t0 = time.time()
+    fused = calibrate_fleet(key, offs_small, small, params, small_cal,
+                            method="fused")
+    jax.block_until_ready(fused.levels)
+    t_fused = time.time() - t0
+    t0 = time.time()
+    ref = calibrate_fleet(key, offs_small, small, params, small_cal,
+                          method="reference")
+    jax.block_until_ready(ref.levels)
+    t_ref = time.time() - t0
+    assert (np.asarray(fused.levels) == np.asarray(ref.levels)).all()
+    print(f"  fused Pallas kernel parity (16x512, 4 iters): bit-exact; "
+          f"{t_fused:.1f}s interpreted vs {t_ref:.1f}s jnp "
+          f"(the fusion pays off on real TPU, not under the interpreter)")
+
+    # --- aggregate ECR: calibrated vs baseline ----------------------------
+    charges = fleet_calib_charges(ladder, cal.levels, params)
+    k_ecr = jax.random.fold_in(key, 0xECC)
+    ecr_tune, masks = measure_ecr_fleet(
+        k_ecr, offsets, charges, params, ladder.n_fracs,
+        n_trials=args.n_trials, chunk=256)
+    base = jnp.broadcast_to(baseline_charges(3, cfg.n_cols, params)[None],
+                            (cfg.n_subarrays_total, 3, cfg.n_cols))
+    ecr_base, _ = measure_ecr_fleet(
+        k_ecr, offsets, base, params, 3,
+        n_trials=args.n_trials, chunk=256)
+    s = fleet_ecr_summary(masks)
+    print(f"  fleet ECR: B300 {float(ecr_base.mean()):.3f} -> "
+          f"T210 {s['mean_ecr']:.3f} "
+          f"(min {s['min_ecr']:.3f} / p90 {s['p90_ecr']:.3f} / "
+          f"max {s['max_ecr']:.3f}); "
+          f"error-free columns {s['error_free_cols_total']:,}"
+          f"/{s['cols_total']:,}")
+
+    # --- single-subarray agreement (the correctness anchor) ---------------
+    g = 0
+    t0 = time.time()
+    lv_single = identify_calibration(
+        subarray_key(key, g), offsets[g], ladder, params, cal_cfg)
+    jax.block_until_ready(lv_single)
+    t_single = time.time() - t0
+    ecr_single, _ = measure_ecr_maj5(
+        jax.random.fold_in(k_ecr, g), offsets[g],
+        fleet_calib_charges(ladder, lv_single[None], params)[0],
+        params, ladder.n_fracs, n_trials=args.n_trials, chunk=256)
+    gain_fleet = (1 - s["mean_ecr"]) / (1 - float(ecr_base.mean()))
+    gain_single = (1 - ecr_single) / (1 - float(ecr_base[g]))
+    print(f"  single-subarray path: {t_single:.1f}s/subarray "
+          f"(fleet amortized {t_fleet / cfg.n_subarrays_total:.2f}s); "
+          f"error-free gain fleet {gain_fleet:.3f} vs single "
+          f"{gain_single:.3f}")
+    assert abs(gain_fleet - gain_single) < 0.05 * gain_single, (
+        gain_fleet, gain_single)
+
+    # --- cached-table startup (what serve/gemv do) ------------------------
+    with tempfile.TemporaryDirectory() as d:
+        cache = CalibrationTableCache(d)
+        cache.save("bench0", cfg, params, np.asarray(cal.levels),
+                   ecr=np.asarray(ecr_tune))
+        t0 = time.time()
+        lv_hit, ecr_hit, hit = load_or_calibrate(
+            cache, "bench0", key, cfg, params, cal_cfg)
+        t_hit = time.time() - t0
+        assert hit and (np.asarray(lv_hit) == np.asarray(cal.levels)).all()
+        print(f"  cached-table startup: HIT in {t_hit:.3f}s "
+              f"(vs {t_fleet:.1f}s recalibration) — serve starts "
+              f"{t_fleet / max(t_hit, 1e-3):.0f}x faster")
+
+    # --- fleet-aggregate arithmetic throughput ----------------------------
+    add_t = fleet_throughput("T210", "add8", np.asarray(ecr_tune), 3)
+    add_b = fleet_throughput("B300", "add8", np.asarray(ecr_base), 3)
+    mul_t = fleet_throughput("T210", "mul8", np.asarray(ecr_tune), 3)
+    mul_b = fleet_throughput("B300", "mul8", np.asarray(ecr_base), 3)
+    print(ratio_line("ADD8 fleet gain", add_t.speedup_vs(add_b),
+                     PAPER_ADD_GAIN))
+    print(ratio_line("MUL8 fleet gain", mul_t.speedup_vs(mul_b),
+                     PAPER_MUL_GAIN))
+    print(f"  ADD8 p10-p90 across subarrays: "
+          f"{add_t.percentile(10) / 1e9:.1f}-"
+          f"{add_t.percentile(90) / 1e9:.1f} GOPS")
+
+    emit("fleet_calibration", [{
+        "subarrays": cfg.n_subarrays_total, "n_cols": cfg.n_cols,
+        "method": args.method,
+        "wall_s": t_fleet, "wall_single_s": t_single,
+        "wall_fused_small_s": t_fused, "wall_ref_small_s": t_ref,
+        "cache_hit_s": t_hit,
+        "ecr_base": float(ecr_base.mean()), "ecr_tune": s["mean_ecr"],
+        "ecr_min": s["min_ecr"], "ecr_max": s["max_ecr"],
+        "gain_fleet": gain_fleet, "gain_single": gain_single,
+        "add8_gain": add_t.speedup_vs(add_b),
+        "mul8_gain": mul_t.speedup_vs(mul_b),
+        "bias_first": float(hist[0]), "bias_last": float(hist[-1]),
+    }], header="fleet calibration wall-clock + aggregate-ECR trajectory")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,8 +14,8 @@ import time
 
 from .common import BenchScale
 
-BENCHES = ("fig3", "table1", "fig5", "fig6", "convergence", "kernels",
-           "serving", "majx", "roofline")
+BENCHES = ("fig3", "table1", "fig5", "fig6", "convergence", "fleet",
+           "kernels", "serving", "majx", "roofline")
 
 
 def main() -> int:
@@ -46,6 +46,9 @@ def main() -> int:
         elif name == "convergence":
             from . import calibration_convergence
             calibration_convergence.main(scale)
+        elif name == "fleet":
+            from . import fleet_calibration
+            fleet_calibration.main(["--full"] if scale.full else [])
         elif name == "kernels":
             from . import kernel_bench
             kernel_bench.main(scale)

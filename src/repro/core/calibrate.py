@@ -14,7 +14,6 @@ paper's Python-on-DRAM-Bender implementation takes ~1 minute per subarray).
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -40,15 +39,19 @@ class CalibrationConfig:
     const_swing_sq: float = 0.0
 
 
-@functools.partial(jax.jit, static_argnames=("ladder", "params", "config"))
-def identify_calibration(
+def identify_calibration_fn(
     key: jax.Array,
     sense_offset: jax.Array,          # [n_cols]
     ladder: OffsetLadder,
     params: PhysicsParams,
     config: CalibrationConfig = CalibrationConfig(),
 ) -> jax.Array:
-    """Run Algorithm 1; returns per-column ladder level indices [n_cols] int32."""
+    """Run Algorithm 1; returns per-column ladder level indices [n_cols] int32.
+
+    Unjitted implementation — the fleet engine (repro/core/fleet.py) vmaps
+    this over a subarray grid; ``identify_calibration`` is the jitted
+    single-subarray entry point.
+    """
     n_cols = sense_offset.shape[0]
     init_levels = jnp.full((n_cols,), neutral_level(ladder), jnp.int32)
 
@@ -74,6 +77,10 @@ def identify_calibration(
     keys = jax.random.split(key, config.n_iterations)
     levels, biases = jax.lax.scan(iteration, init_levels, keys)
     return levels
+
+
+identify_calibration = jax.jit(
+    identify_calibration_fn, static_argnames=("ladder", "params", "config"))
 
 
 def calibration_history(

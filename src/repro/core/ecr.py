@@ -133,6 +133,53 @@ def measure_ecr_graph(
 
 
 # ---------------------------------------------------------------------------
+# Fleet-scale measurement (per-subarray grid, paper protocol per subarray).
+# ---------------------------------------------------------------------------
+
+
+def measure_ecr_fleet(
+    key: jax.Array,
+    sense_offsets: jax.Array,     # [G, n_cols] per-subarray offsets
+    calib_charges: jax.Array,     # [G, n_calib, n_cols] per-subarray charges
+    params: PhysicsParams,
+    n_fracs: int,
+    n_trials: int = N_TRIALS_PAPER,
+    chunk: int = 256,
+    n_inputs: int = 5,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-subarray MAJX ECR over a fleet grid.
+
+    Returns (ecr [G] float32, error-prone masks [G, n_cols] bool).  Each
+    subarray gets its own fold_in'd trial stream, so a row reproduces the
+    single-subarray ``measure_ecr_maj5`` measurement with that folded key.
+    """
+    g = sense_offsets.shape[0]
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(g))
+    masks = jax.vmap(
+        lambda k, so, cc: _majx_error_mask(
+            k, so, cc, params, n_fracs, n_trials, chunk, n_inputs=n_inputs)
+    )(keys, sense_offsets, calib_charges)
+    return masks.mean(axis=1).astype(jnp.float32), masks
+
+
+def fleet_ecr_summary(masks: jax.Array) -> dict:
+    """Aggregate statistics of per-subarray error-prone masks [G, n_cols]."""
+    import numpy as np
+    per = np.asarray(masks).mean(axis=1)
+    return {
+        "n_subarrays": int(masks.shape[0]),
+        "cols_per_subarray": int(masks.shape[1]),
+        "mean_ecr": float(per.mean()),
+        "std_ecr": float(per.std()),
+        "min_ecr": float(per.min()),
+        "max_ecr": float(per.max()),
+        "p90_ecr": float(np.percentile(per, 90)),
+        "error_free_cols_total": int((~np.asarray(masks)).sum()),
+        "cols_total": int(masks.size),
+    }
+
+
+# ---------------------------------------------------------------------------
 # Closed-form expectation for fitting.
 # ---------------------------------------------------------------------------
 

@@ -17,6 +17,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.pud.bitserial import (MajContext, add8_counts,
                                  maj5_standalone_counts, mul8_counts)
@@ -122,3 +123,60 @@ def evaluate_method(
         levels=levels,
         error_free_mask=~err_mask,
     )
+
+
+# ---------------------------------------------------------------------------
+# Fleet-aggregate throughput: Table I's numbers as distributions over
+# subarrays instead of one point estimate.
+# ---------------------------------------------------------------------------
+
+_OP_COUNTS = {"maj5": maj5_standalone_counts, "add8": add8_counts,
+              "mul8": mul8_counts}
+
+
+@dataclasses.dataclass
+class FleetThroughput:
+    """Per-subarray and device-aggregate ops/s for one PUD op graph."""
+
+    name: str
+    op: str                            # "maj5" | "add8" | "mul8"
+    per_subarray: np.ndarray           # ops/s at each subarray's ECR
+    aggregate: float                   # ops/s at the fleet-mean ECR
+    mean_ecr: float
+
+    def percentile(self, q: float) -> float:
+        return float(np.percentile(self.per_subarray, q))
+
+    def speedup_vs(self, baseline: "FleetThroughput") -> float:
+        return self.aggregate / baseline.aggregate
+
+    def row(self) -> str:
+        return (f"{self.name},{self.op},{self.mean_ecr:.4f},"
+                f"{self.aggregate:.4g},{self.percentile(10):.4g},"
+                f"{self.percentile(90):.4g}")
+
+
+def fleet_throughput(
+    name: str,
+    op: str,
+    ecr_per_subarray,                  # [G] error-prone column ratios
+    n_fracs: int,
+    sys: SystemConfig = SystemConfig(),
+) -> FleetThroughput:
+    """Eq. 1 evaluated per subarray and at the fleet mean.
+
+    ``per_subarray[g]`` is the rate the full system would sustain were every
+    bank wave served at subarray g's error-free fraction — the distribution
+    shows how much of the device a worst-case placement would cost;
+    ``aggregate`` prices the realistic schedule where waves rotate uniformly
+    over the grid (mean error-free fraction).
+    """
+    counts = _OP_COUNTS[op](n_fracs)
+    ecr = np.asarray(ecr_per_subarray, np.float64)
+    per = np.array([
+        throughput_ops(counts, (1.0 - e) * sys.n_cols_per_subarray, sys)
+        for e in ecr])
+    agg = throughput_ops(
+        counts, float((1.0 - ecr).mean()) * sys.n_cols_per_subarray, sys)
+    return FleetThroughput(name=name, op=op, per_subarray=per,
+                           aggregate=agg, mean_ecr=float(ecr.mean()))

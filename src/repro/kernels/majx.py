@@ -48,6 +48,129 @@ def _majx_kernel(charge_ref, offset_ref, noise_ref, out_ref, *,
     out_ref[...] = bits.astype(jnp.float32)
 
 
+# ---------------------------------------------------------------------------
+# Fused calibration iteration (Algorithm 1 inner loop in one pass).
+# ---------------------------------------------------------------------------
+#
+# The unfused path runs three jitted stages per iteration — levels_to_charges
+# (gather), maj_outputs (sense), bias/level-step (reduce + select) — each
+# round-tripping [S, C]-shaped intermediates through HBM.  This kernel fuses
+# them: per column block it gathers the ladder's per-level charge/swing sums
+# (static unrolled select over <= 8 levels, no dynamic gather needed on TPU),
+# senses all sample blocks while accumulating the per-column bias in the
+# output block (revisited across the innermost sample-grid axis), and applies
+# the threshold level step on the last sample block.  One HBM read of the
+# inputs, one write of [C] levels + [C] bias.
+
+CAL_SAMPLE_BLOCKS = (64, 32, 16, 8, 4, 2, 1)
+CAL_COL_BLOCKS = (1024, 512, 256, 128)
+
+
+def _pick_block(n: int, candidates: tuple[int, ...]) -> int:
+    for c in candidates:
+        if n % c == 0:
+            return c
+    raise ValueError(f"no block size in {candidates} divides {n}")
+
+
+def _calib_iter_kernel(inputs_ref, noise_ref, levels_ref, offset_ref,
+                       levels_out_ref, bias_ref, *,
+                       params: PhysicsParams, n_fracs: int,
+                       level_qsum: tuple[float, ...],
+                       level_swing: tuple[float, ...],
+                       n_samples: int, n_sample_blocks: int,
+                       threshold: float, maj_inputs: int,
+                       const_charge_sum: float, const_swing_sq: float):
+    j = pl.program_id(1)                          # sample-block (innermost)
+
+    @pl.when(j == 0)
+    def _init():
+        bias_ref[...] = jnp.zeros_like(bias_ref)
+
+    levels = levels_ref[...]                      # [Cb] int32
+    inp = inputs_ref[...]                         # [Sb, M, Cb] bits as f32
+    noise = noise_ref[...]                        # [Sb, Cb]
+    offset = offset_ref[...]                      # [Cb]
+
+    # Ladder lookup: per-level calibration-row charge sum and swing^2 sum are
+    # static scalars; select instead of gathering [n_rows, C] charges.
+    calib_qsum = jnp.zeros(levels.shape, jnp.float32)
+    calib_swing = jnp.zeros(levels.shape, jnp.float32)
+    for lvl, (q, s) in enumerate(zip(level_qsum, level_swing)):
+        sel = levels == lvl
+        calib_qsum = jnp.where(sel, jnp.float32(q), calib_qsum)
+        calib_swing = jnp.where(sel, jnp.float32(s), calib_swing)
+
+    charge_sum = inp.sum(axis=1) + calib_qsum[None, :] + const_charge_sum
+    v = params.bitline_voltage(charge_sum, params.n_simra_rows)
+    swing_sq = (((2.0 * (inp - NEUTRAL)) ** 2).sum(axis=1)
+                + calib_swing[None, :] + const_swing_sq)
+    sigma = params.sensing_sigma(jnp.float32(n_fracs), swing_sq)
+    out = ((v + sigma * noise) > (NEUTRAL + offset[None, :])).astype(
+        jnp.float32)
+    truth = (inp.sum(axis=1) > maj_inputs // 2).astype(jnp.float32)
+    bias_ref[...] += (out - truth).sum(axis=0) / n_samples
+
+    @pl.when(j == n_sample_blocks - 1)
+    def _step():
+        bias = bias_ref[...]
+        step = jnp.where(bias > threshold, -1, 0) + jnp.where(
+            bias < -threshold, 1, 0)
+        levels_out_ref[...] = jnp.clip(
+            levels + step, 0, len(level_qsum) - 1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("params", "n_fracs", "level_qsum",
+                              "level_swing", "threshold", "maj_inputs",
+                              "const_charge_sum", "const_swing_sq",
+                              "interpret"))
+def calib_iter_fused(
+    inputs: jax.Array,        # [S, M, C] float32 operand bits
+    noise: jax.Array,         # [S, C] float32 standard normal
+    levels: jax.Array,        # [C] int32 current ladder levels
+    sense_offset: jax.Array,  # [C] float32
+    params: PhysicsParams,
+    n_fracs: int,
+    level_qsum: tuple[float, ...],    # per-level calib-row charge sum
+    level_swing: tuple[float, ...],   # per-level calib-row swing^2 sum
+    threshold: float,
+    maj_inputs: int = 5,
+    const_charge_sum: float = 0.0,
+    const_swing_sq: float = 0.0,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """One fused Algorithm-1 iteration; returns (new levels [C], bias [C])."""
+    s, m, c = inputs.shape
+    sb = _pick_block(s, CAL_SAMPLE_BLOCKS)
+    cb = _pick_block(c, CAL_COL_BLOCKS)
+    grid = (c // cb, s // sb)                     # sample axis innermost
+    kernel = functools.partial(
+        _calib_iter_kernel, params=params, n_fracs=n_fracs,
+        level_qsum=level_qsum, level_swing=level_swing, n_samples=s,
+        n_sample_blocks=s // sb, threshold=threshold, maj_inputs=maj_inputs,
+        const_charge_sum=const_charge_sum, const_swing_sq=const_swing_sq)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((sb, m, cb), lambda i, j: (j, 0, i)),
+            pl.BlockSpec((sb, cb), lambda i, j: (j, i)),
+            pl.BlockSpec((cb,), lambda i, j: (i,)),
+            pl.BlockSpec((cb,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((cb,), lambda i, j: (i,)),
+            pl.BlockSpec((cb,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c,), jnp.int32),
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(inputs, noise, levels, sense_offset)
+
+
 @functools.partial(jax.jit, static_argnames=("params", "n_fracs", "interpret"))
 def majx_sense(
     charge: jax.Array,        # [T, R, C] float32 cell charges (V_DD units)

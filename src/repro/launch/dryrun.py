@@ -198,8 +198,9 @@ def build_cell(arch: str, shape: str, mesh, variant: str = "base"):
         labels_ps = {k: v for k, v in input_ps.items()}
         fn = jax.jit(
             step,
-            in_shardings=(pspecs, opt_ps, labels_ps, P()),
-            out_shardings=(pspecs, opt_ps, P()),
+            in_shardings=shd.named(
+                mesh, (pspecs, opt_ps, labels_ps, P())),
+            out_shardings=shd.named(mesh, (pspecs, opt_ps, P())),
             donate_argnums=(0, 1),   # params/opt update in place (as train.py)
         )
         args = (params_abs, opt_abs, in_specs,
@@ -214,9 +215,11 @@ def build_cell(arch: str, shape: str, mesh, variant: str = "base"):
         extra_ps = {k: input_ps[k] for k in extras}
         fn = jax.jit(
             fn_raw,
-            in_shardings=(pspecs, input_ps["tokens"], extra_ps)
-            if extras else (pspecs, input_ps["tokens"]),
-            out_shardings=(P(batch_axes, logit_axis), cache_ps),
+            in_shardings=shd.named(
+                mesh, (pspecs, input_ps["tokens"], extra_ps)
+                if extras else (pspecs, input_ps["tokens"])),
+            out_shardings=shd.named(
+                mesh, (P(batch_axes, logit_axis), cache_ps)),
         )
         args = ((params_abs, in_specs["tokens"], extras) if extras
                 else (params_abs, in_specs["tokens"]))
@@ -229,8 +232,10 @@ def build_cell(arch: str, shape: str, mesh, variant: str = "base"):
         model.cache_defs(cell.global_batch, cell.seq_len), rules)
     fn = jax.jit(
         fn_raw,
-        in_shardings=(pspecs, cache_ps, input_ps["tokens"], P()),
-        out_shardings=(P(batch_axes, logit_axis), cache_ps),
+        in_shardings=shd.named(
+            mesh, (pspecs, cache_ps, input_ps["tokens"], P())),
+        out_shardings=shd.named(
+            mesh, (P(batch_axes, logit_axis), cache_ps)),
         donate_argnums=(1,),   # KV/state cache updates in place
     )
     args = (params_abs, cache_abs, in_specs["tokens"],
@@ -310,7 +315,6 @@ def main():
     args = ap.parse_args()
 
     mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
-    jax.set_mesh(mesh)   # jax>=0.8: context mesh for PartitionSpec shardings
     mesh_name = args.mesh
     outdir = ART / mesh_name
     outdir.mkdir(parents=True, exist_ok=True)

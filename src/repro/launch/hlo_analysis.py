@@ -39,7 +39,9 @@ _TUPLE_OP = re.compile(
     r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*\((.*?)\)\s+([\w\-]+)\(")
 _SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _OPERAND = re.compile(r"%([\w.\-]+)")
-_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+# ``fusion`` uses calls=; ``call`` (current jaxlib wraps parallel kLoop
+# fusions in a call computation) and ``reduce``/``sort`` use to_apply=.
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
 _COND_BODY = re.compile(r"condition=%?([\w.\-]+), body=%?([\w.\-]+)")
 _TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")

@@ -23,3 +23,19 @@ def make_host_mesh(data: int = 2, model: int = 2):
     """Small mesh for CPU multi-device tests (subprocess with forced host
     device count)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def use_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh, portable
+    across JAX versions.
+
+    ``jax.set_mesh`` (0.6+) / ``jax.sharding.use_mesh`` (0.5.x) replaced the
+    older ``with mesh:`` resource-env context; on the jaxlib pinned here only
+    the latter exists.  All launchers and mesh tests go through this helper so
+    the call site never references a removed API.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh  # Mesh is itself a context manager on older JAX

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.configs import get
 from repro.models.params import init_params, param_count
-from repro.pud.gemv import PUDGemvConfig, PUDPerfModel
+from repro.pud.gemv import FleetPerfModel, PUDGemvConfig, PUDPerfModel
 from repro.pud.packer import pack_for_serving, packed_bytes
 from repro.runtime.steps import make_serve_step
 
@@ -63,6 +63,15 @@ def main(argv=None) -> int:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--pud-gemv", action="store_true")
     ap.add_argument("--weight-bits", type=int, default=4)
+    ap.add_argument("--calib-cache", default=None, metavar="DIR",
+                    help="persistent calibration-table cache; serving "
+                         "starts from the device's stored per-subarray "
+                         "offset table instead of recalibrating")
+    ap.add_argument("--device-id", default="dimm0")
+    ap.add_argument("--fleet-subarrays", type=int, default=16,
+                    help="subarray grid size used on a cache miss")
+    ap.add_argument("--fleet-cols", type=int, default=2048,
+                    help="columns per subarray used on a cache miss")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -116,7 +125,31 @@ def main(argv=None) -> int:
         # DRAM-side throughput model: what the paper's system sustains.
         flops_per_tok = 2 * spec.n_active_params
         base = PUDPerfModel(error_free_frac=1 - 0.466)   # B300, Table I
-        tune = PUDPerfModel(error_free_frac=1 - 0.033)   # T210, Table I
+        if args.calib_cache:
+            # Device-specific model from the persisted per-subarray table:
+            # a cache hit costs a file read, not an Algorithm-1 run.
+            from repro.core.calibrate import CalibrationConfig
+            from repro.core.fleet import FleetConfig, load_or_calibrate
+            from repro.runtime.calib_cache import CalibrationTableCache
+            cache = CalibrationTableCache(args.calib_cache)
+            fleet_cfg = FleetConfig(
+                n_channels=1, n_banks=1,
+                n_subarrays=args.fleet_subarrays, n_cols=args.fleet_cols)
+            t0 = time.time()
+            _, ecr, hit = load_or_calibrate(
+                cache, args.device_id, jax.random.key(args.seed + 2),
+                fleet_cfg,
+                config=CalibrationConfig(n_iterations=12, n_samples=256))
+            tune = FleetPerfModel.from_table(
+                ecr, n_fracs=sum(fleet_cfg.frac_counts))
+            status = ("HIT (no recalibration)" if hit
+                      else "MISS (identified + persisted)")
+            print(f"    calibration table [{args.device_id}] {status} "
+                  f"in {time.time() - t0:.2f}s: "
+                  f"{fleet_cfg.n_subarrays_total} subarrays, mean ECR "
+                  f"{1 - tune.mean_error_free_frac:.3f}")
+        else:
+            tune = PUDPerfModel(error_free_frac=1 - 0.033)  # T210, Table I
         print(f"    DDR4-PUD serving model ({args.arch} full config, "
               f"{args.weight_bits}-bit): "
               f"baseline {base.tokens_per_second(flops_per_tok):.2f} tok/s"

@@ -31,6 +31,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get
+from repro.launch.mesh import use_mesh
 from repro.models.params import init_params, param_count, param_pspecs
 from repro.runtime import sharding as shd
 from repro.runtime.checkpoint import CheckpointManager
@@ -104,7 +105,11 @@ def main(argv=None) -> int:
     gbs = args.global_batch or (8 if args.preset != "full" else 256)
 
     mesh = make_mesh_for_devices()
-    jax.set_mesh(mesh)
+    with use_mesh(mesh):
+        return _run(args, model, mesh, vocab, seq, gbs)
+
+
+def _run(args, model, mesh, vocab, seq, gbs) -> int:
     rules = shd.make_rules(mesh)
     from repro.models import sharding_ctx
     sharding_ctx.set_rules({**rules, "_mesh_sizes": dict(mesh.shape)})
@@ -153,8 +158,10 @@ def main(argv=None) -> int:
     step_fn = jax.jit(
         make_train_step(model, opt_cfg, microbatches=args.microbatches,
                         batch_axes=shd.batch_axes(mesh)),
-        in_shardings=(pspecs, opt_ps, batch_ps, P()),
-        out_shardings=(pspecs, opt_ps, P()),
+        in_shardings=(shd.named(mesh, pspecs), shd.named(mesh, opt_ps),
+                      shd.named(mesh, batch_ps), shd.named(mesh, P())),
+        out_shardings=(shd.named(mesh, pspecs), shd.named(mesh, opt_ps),
+                       shd.named(mesh, P())),
         donate_argnums=(0, 1),
     )
 

@@ -107,3 +107,48 @@ class PUDPerfModel:
 
     def speedup_vs(self, baseline: "PUDPerfModel") -> float:
         return self.macs_per_second / baseline.macs_per_second
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetPerfModel:
+    """Serving-rate model for a whole calibrated device grid.
+
+    Built from the per-subarray ECR distribution of a persisted calibration
+    table (runtime/calib_cache.py) rather than a single point estimate: the
+    sustained rate prices waves rotating uniformly over the grid (mean
+    error-free fraction), and the distribution bounds what a worst-case
+    subarray placement would cost.
+    """
+
+    error_free_fracs: tuple[float, ...]      # per subarray
+    n_fracs: int = 3
+    sys: SystemConfig = dataclasses.field(default_factory=SystemConfig)
+
+    @classmethod
+    def from_table(cls, ecr_per_subarray, n_fracs: int = 3,
+                   sys: SystemConfig | None = None) -> "FleetPerfModel":
+        fracs = tuple(float(1.0 - e) for e in ecr_per_subarray)
+        return cls(error_free_fracs=fracs, n_fracs=n_fracs,
+                   sys=sys or SystemConfig())
+
+    def _point(self, frac: float) -> PUDPerfModel:
+        return PUDPerfModel(error_free_frac=frac, n_fracs=self.n_fracs,
+                            sys=self.sys)
+
+    @property
+    def mean_error_free_frac(self) -> float:
+        return sum(self.error_free_fracs) / len(self.error_free_fracs)
+
+    @property
+    def macs_per_second(self) -> float:
+        return self._point(self.mean_error_free_frac).macs_per_second
+
+    @property
+    def worst_subarray_macs_per_second(self) -> float:
+        return self._point(min(self.error_free_fracs)).macs_per_second
+
+    def tokens_per_second(self, flops_per_token: float) -> float:
+        return self.macs_per_second / (flops_per_token / 2.0)
+
+    def speedup_vs(self, baseline: "PUDPerfModel | FleetPerfModel") -> float:
+        return self.macs_per_second / baseline.macs_per_second

@@ -1,0 +1,160 @@
+"""Persistent per-device calibration tables (versioned, atomic, keyed).
+
+Identifying calibration data for a full device costs minutes of SiMRA trials
+(Algorithm 1 per subarray x thousands of subarrays); the resulting table is
+static until re-characterization, so serving must never pay that cost at
+startup.  This cache stores one entry per (device id, ladder configuration,
+physics fingerprint):
+
+  <root>/<device_id>/<table_key>/
+      levels.npy        [G, n_cols] int32 ladder level per column
+      ecr.npy           [G] float32 measured per-subarray ECR (optional)
+      manifest.json     format version, grid shape, frac_counts, params
+                        fingerprint, crc32, user metadata
+
+Same durability idioms as runtime/checkpoint.py: writes go to a ``.tmp-<pid>``
+directory and are ``os.rename``d into place, so a crash mid-save can never
+leave a torn table; loads verify format version + shape + fingerprint and
+report a miss (None) on any mismatch, which callers treat as "recalibrate".
+A ``format`` bump invalidates old entries instead of misreading them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pathlib
+import shutil
+import zlib
+
+import numpy as np
+
+FORMAT = "fleet-calib-v1"
+
+
+def params_fingerprint(params) -> str:
+    """Stable hash of every physics constant that shapes the table."""
+    blob = json.dumps(dataclasses.asdict(params), sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:12]
+
+
+def table_key(cfg, params) -> str:
+    """Cache key: ladder configuration + grid shape + physics fingerprint."""
+    frac = "".join(str(f) for f in cfg.frac_counts)
+    shape = "x".join(str(s) for s in cfg.grid_shape + (cfg.n_cols,))
+    return f"T{frac}__{shape}__{params_fingerprint(params)}"
+
+
+@dataclasses.dataclass
+class CalibrationTable:
+    """One loaded cache entry."""
+
+    device_id: str
+    levels: np.ndarray                # [G, n_cols] int32
+    ecr: np.ndarray | None            # [G] float32
+    metadata: dict
+
+
+class CalibrationTableCache:
+    def __init__(self, directory: str | os.PathLike):
+        self.directory = pathlib.Path(directory)
+
+    def _entry_dir(self, device_id: str, cfg, params) -> pathlib.Path:
+        return self.directory / device_id / table_key(cfg, params)
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, device_id: str, cfg, params, levels: np.ndarray,
+             ecr: np.ndarray | None = None,
+             metadata: dict | None = None) -> pathlib.Path:
+        final = self._entry_dir(device_id, cfg, params)
+        # sweep staging dirs of crashed earlier saves of this entry
+        for stale in final.parent.glob(final.name + ".tmp-*"):
+            shutil.rmtree(stale, ignore_errors=True)
+        tmp = final.with_name(final.name + f".tmp-{os.getpid()}")
+        tmp.mkdir(parents=True)
+        levels = np.asarray(levels, np.int32)
+        np.save(tmp / "levels.npy", levels)
+        crc = zlib.crc32(levels.tobytes())
+        manifest = {
+            "format": FORMAT,
+            "device_id": device_id,
+            "frac_counts": list(cfg.frac_counts),
+            "grid_shape": list(cfg.grid_shape),
+            "n_cols": cfg.n_cols,
+            "params_fingerprint": params_fingerprint(params),
+            "crc32": crc,
+            "metadata": metadata or {},
+        }
+        if ecr is not None:
+            np.save(tmp / "ecr.npy", np.asarray(ecr, np.float32))
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        if final.exists():
+            shutil.rmtree(final)
+        final.parent.mkdir(parents=True, exist_ok=True)
+        os.rename(tmp, final)
+        return final
+
+    # -- load ---------------------------------------------------------------
+
+    def load(self, device_id: str, cfg, params,
+             verify: bool = False) -> CalibrationTable | None:
+        """Return the table, or None (miss) on absence or any mismatch."""
+        d = self._entry_dir(device_id, cfg, params)
+        manifest_path = d / "manifest.json"
+        if not manifest_path.exists():
+            return None
+        try:
+            manifest = json.loads(manifest_path.read_text())
+        except (OSError, json.JSONDecodeError):
+            return None
+        if manifest.get("format") != FORMAT:
+            return None
+        if manifest.get("params_fingerprint") != params_fingerprint(params):
+            return None
+        if tuple(manifest.get("frac_counts", ())) != tuple(cfg.frac_counts):
+            return None
+        try:
+            levels = np.load(d / "levels.npy")
+        except (OSError, ValueError):      # truncated/corrupt payload: miss
+            return None
+        want_shape = (cfg.n_subarrays_total, cfg.n_cols)
+        if tuple(levels.shape) != want_shape:
+            return None
+        if verify and zlib.crc32(levels.tobytes()) != manifest.get("crc32"):
+            return None
+        ecr = None
+        if (d / "ecr.npy").exists():
+            try:
+                ecr = np.load(d / "ecr.npy")
+            except (OSError, ValueError):
+                ecr = None
+        return CalibrationTable(device_id=device_id, levels=levels, ecr=ecr,
+                                metadata=manifest.get("metadata", {}))
+
+    # -- inspection ---------------------------------------------------------
+
+    def entries(self) -> list[dict]:
+        """Manifests of every valid entry under the cache root."""
+        out = []
+        if not self.directory.exists():
+            return out
+        for manifest in sorted(self.directory.glob("*/*/manifest.json")):
+            if ".tmp-" in manifest.parent.name:   # crashed/in-flight save
+                continue
+            try:
+                out.append(json.loads(manifest.read_text()))
+            except (OSError, json.JSONDecodeError):
+                continue
+        return out
+
+    def evict(self, device_id: str) -> int:
+        """Drop every table of one device; returns the number removed."""
+        d = self.directory / device_id
+        if not d.exists():
+            return 0
+        n = sum(1 for m in d.glob("*/manifest.json")
+                if ".tmp-" not in m.parent.name)
+        shutil.rmtree(d)
+        return n

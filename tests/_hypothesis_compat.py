@@ -1,0 +1,81 @@
+"""Degrade gracefully when ``hypothesis`` is not installed.
+
+The property-test modules import ``given/settings/strategies`` from here
+instead of from ``hypothesis`` directly.  With hypothesis installed (it is
+declared in requirements-dev.txt) the real library is used unchanged.
+Without it, a minimal deterministic fallback runs each ``@given`` test on a
+fixed-seed sample of the strategy space — weaker than real property testing
+(no shrinking, no coverage-guided search) but the whole suite still collects
+and every test still exercises its code path, instead of six modules erroring
+at collection.
+
+Only the strategy combinators these tests actually use are implemented
+(``integers``, ``sampled_from``, ``booleans``, ``floats``); extend as needed.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    # Cap fallback examples well below typical max_examples settings: each
+    # example of a JAX property test can trigger a fresh trace/compile, and
+    # the fallback's fixed seed gains nothing from more repeats.
+    _MAX_FALLBACK_EXAMPLES = 5
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng: random.Random):
+            return self._sample(rng)
+
+    class strategies:  # noqa: N801 - mimics `hypothesis.strategies` module
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def settings(max_examples=None, **_kw):
+        def deco(fn):
+            fn._max_examples = min(max_examples or _MAX_FALLBACK_EXAMPLES,
+                                   _MAX_FALLBACK_EXAMPLES)
+            return fn
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples",
+                            _MAX_FALLBACK_EXAMPLES)
+                rng = random.Random(0xC0FFEE)
+                for _ in range(n):
+                    drawn = [s.sample(rng) for s in arg_strategies]
+                    drawn_kw = {k: s.sample(rng)
+                                for k, s in kw_strategies.items()}
+                    fn(*args, *drawn, **drawn_kw, **kwargs)
+            # pytest must not mistake the strategy-filled parameters for
+            # fixtures: hide the wrapped signature.
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+        return deco

@@ -4,12 +4,54 @@ NOTE: deliberately does NOT set XLA_FLAGS / device counts — smoke tests must
 see the single real CPU device; only launch/dryrun.py forces 512 host devices.
 Enables the persistent compilation cache so the big unrolled MAJ-graph
 compiles (MUL8 ~ 250 MAJX ops) are paid once per machine, not per run.
+
+Crash-loop guard: a process killed mid-compile can leave a torn cache entry,
+and XLA's native deserializer segfaults on it — every later run then dies at
+the same test.  A sentinel marks the suite as running; if it is still there
+at startup, the previous run died hard and the cache is purged (one-time
+recompile instead of a persistent crash loop).
 """
 import os
+import pathlib
+import shutil
 
 import jax
 
-_CACHE = os.environ.get("JAX_COMPILATION_CACHE_DIR",
-                        "/tmp/jax_compilation_cache")
-jax.config.update("jax_compilation_cache_dir", _CACHE)
+_CACHE = pathlib.Path(os.environ.get("JAX_COMPILATION_CACHE_DIR",
+                                     "/tmp/jax_compilation_cache"))
+
+jax.config.update("jax_compilation_cache_dir", str(_CACHE))
 jax.config.update("jax_persistent_cache_min_compile_time_secs", 2.0)
+
+
+def _sentinel() -> pathlib.Path:
+    return _CACHE / f".suite-running-{os.getpid()}"
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except OSError:
+        pass  # e.g. EPERM: exists but not ours
+    return True
+
+
+def pytest_sessionstart(session):
+    # One sentinel per session (pid-stamped): a sentinel whose process is
+    # gone means that run died hard, possibly mid-compile — purge.  A live
+    # pid is a concurrent session, not a crash; leave its cache alone.
+    stale = [p for p in _CACHE.glob(".suite-running-*")
+             if not _pid_alive(int(p.name.rsplit("-", 1)[-1]))]
+    if stale:
+        shutil.rmtree(_CACHE, ignore_errors=True)
+    _CACHE.mkdir(parents=True, exist_ok=True)
+    _sentinel().write_text("")
+
+
+def pytest_sessionfinish(session, exitstatus):
+    try:
+        _sentinel().unlink()
+    except OSError:
+        pass

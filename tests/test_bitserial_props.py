@@ -5,7 +5,7 @@ noise. Also: self-duality invariants of the MAJ primitives."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.pud.bitserial import (MajContext, add_n, bits_to_int, int_to_bits,
                                  mul8_truncated)

@@ -1,9 +1,13 @@
 """SPMD correctness: the sharded train step computes the SAME numbers as the
 single-device step — run in a subprocess with 4 forced host devices on a
 (data=2, model=2) mesh, qwen3-family smoke config, real data pipeline."""
+import os
+import pathlib
 import subprocess
 import sys
 import textwrap
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 PROG = textwrap.dedent("""
     import os
@@ -25,28 +29,35 @@ PROG = textwrap.dedent("""
     batches = [next(data) for _ in range(3)]
 
     def run(mesh_shape, axes, use_rules):
+        from repro.launch.mesh import use_mesh
         mesh = jax.make_mesh(mesh_shape, axes)
-        jax.set_mesh(mesh)
-        rules = shd.make_rules(mesh)
-        sharding_ctx.set_rules(
-            {**rules, "_mesh_sizes": dict(mesh.shape)} if use_rules else None)
-        pspecs = param_pspecs(model.param_defs(), rules)
-        opt_ps = opt_state_pspecs(pspecs, opt_cfg)
-        params = init_params(model.param_defs(), jax.random.key(0))
-        params = jax.device_put(params, shd.named(mesh, pspecs))
-        opt = init_opt_state(params, opt_cfg)
-        opt = jax.device_put(opt, shd.named(mesh, opt_ps))
-        bspec = {k: P("data") for k in batches[0]}
-        step = jax.jit(make_train_step(model, opt_cfg, microbatches=2,
-                                       batch_axes="data"),
-                       in_shardings=(pspecs, opt_ps, bspec, P()),
-                       out_shardings=(pspecs, opt_ps, P()))
-        losses = []
-        for i, b in enumerate(batches):
-            params, opt, m = step(params, opt, b, jnp.uint32(i))
-            losses.append(float(m["loss"]))
-        sharding_ctx.set_rules(None)
-        return losses, params
+        with use_mesh(mesh):
+            rules = shd.make_rules(mesh)
+            sharding_ctx.set_rules(
+                {**rules, "_mesh_sizes": dict(mesh.shape)}
+                if use_rules else None)
+            pspecs = param_pspecs(model.param_defs(), rules)
+            opt_ps = opt_state_pspecs(pspecs, opt_cfg)
+            params = init_params(model.param_defs(), jax.random.key(0))
+            params = jax.device_put(params, shd.named(mesh, pspecs))
+            opt = init_opt_state(params, opt_cfg)
+            opt = jax.device_put(opt, shd.named(mesh, opt_ps))
+            bspec = {k: P("data") for k in batches[0]}
+            step = jax.jit(make_train_step(model, opt_cfg, microbatches=2,
+                                           batch_axes="data"),
+                           in_shardings=(shd.named(mesh, pspecs),
+                                         shd.named(mesh, opt_ps),
+                                         shd.named(mesh, bspec),
+                                         shd.named(mesh, P())),
+                           out_shardings=(shd.named(mesh, pspecs),
+                                          shd.named(mesh, opt_ps),
+                                          shd.named(mesh, P())))
+            losses = []
+            for i, b in enumerate(batches):
+                params, opt, m = step(params, opt, b, jnp.uint32(i))
+                losses.append(float(m["loss"]))
+            sharding_ctx.set_rules(None)
+            return losses, params
 
     l1, p1 = run((1, 1), ("data", "model"), use_rules=False)
     l4, p4 = run((2, 2), ("data", "model"), use_rules=True)
@@ -65,6 +76,7 @@ def test_sharded_step_matches_single_device():
     r = subprocess.run(
         [sys.executable, "-c", PROG], capture_output=True, text=True,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
-        cwd="/root/repo", timeout=600)
+             "HOME": os.environ.get("HOME", "/tmp"),
+             "JAX_PLATFORMS": "cpu"},
+        cwd=str(REPO_ROOT), timeout=600)
     assert "DIST_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-3000:]

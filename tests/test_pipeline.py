@@ -1,8 +1,12 @@
 """Pipeline parallelism: schedule correctness in a subprocess with forced
 multi-device CPU (the stage axis needs >= 2 real devices)."""
+import os
+import pathlib
 import subprocess
 import sys
 import textwrap
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 import pytest
 
@@ -62,6 +66,7 @@ def test_pipelined_apply_matches_sequential():
     r = subprocess.run(
         [sys.executable, "-c", PIPE_PROG], capture_output=True, text=True,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
-        cwd="/root/repo", timeout=300)
+             "HOME": os.environ.get("HOME", "/tmp"),
+             "JAX_PLATFORMS": "cpu"},
+        cwd=str(REPO_ROOT), timeout=300)
     assert "PIPELINE_OK" in r.stdout, r.stdout + r.stderr

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.runtime.checkpoint import CheckpointManager
 from repro.runtime.data import DataConfig, DataPipeline, eval_batches

@@ -1,8 +1,12 @@
 """Sharding-hint machinery: no-op without rules, exactness of activation
 head padding under a real (forced multi-device) mesh."""
+import os
+import pathlib
 import subprocess
 import sys
 import textwrap
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 import jax
 import jax.numpy as jnp
@@ -54,13 +58,14 @@ PAD_PROG = textwrap.dedent("""
     sharding_ctx.set_rules(None)
     ref, (rk, rv) = gqa_attention(params, cfg, x, positions)
 
+    from repro.launch.mesh import use_mesh
     mesh = jax.make_mesh((1, 4), ("data", "model"))
-    jax.set_mesh(mesh)
-    sharding_ctx.set_rules({"batch": "data", "heads": None,
-                            "heads_act": "model",
-                            "_mesh_sizes": dict(mesh.shape)})
-    got, (gk, gv) = jax.jit(
-        lambda p, xx: gqa_attention(p, cfg, xx, positions))(params, x)
+    with use_mesh(mesh):
+        sharding_ctx.set_rules({"batch": "data", "heads": None,
+                                "heads_act": "model",
+                                "_mesh_sizes": dict(mesh.shape)})
+        got, (gk, gv) = jax.jit(
+            lambda p, xx: gqa_attention(p, cfg, xx, positions))(params, x)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                rtol=2e-5, atol=2e-5)
     np.testing.assert_allclose(np.asarray(gk), np.asarray(rk),
@@ -74,6 +79,7 @@ def test_head_padding_exact_on_mesh():
     r = subprocess.run(
         [sys.executable, "-c", PAD_PROG], capture_output=True, text=True,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
-        cwd="/root/repo", timeout=300)
+             "HOME": os.environ.get("HOME", "/tmp"),
+             "JAX_PLATFORMS": "cpu"},
+        cwd=str(REPO_ROOT), timeout=300)
     assert "PAD_OK" in r.stdout, r.stdout + r.stderr
