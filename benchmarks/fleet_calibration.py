@@ -150,9 +150,9 @@ def main(argv=None) -> int:
     with tempfile.TemporaryDirectory() as d:
         cache = CalibrationTableCache(d)
         cache.save("bench0", cfg, params, np.asarray(cal.levels),
-                   ecr=np.asarray(ecr_tune))
+                   ecr=np.asarray(ecr_tune), masks=np.asarray(masks))
         t0 = time.time()
-        lv_hit, ecr_hit, hit = load_or_calibrate(
+        lv_hit, ecr_hit, _masks_hit, hit = load_or_calibrate(
             cache, "bench0", key, cfg, params, cal_cfg)
         t_hit = time.time() - t0
         assert hit and (np.asarray(lv_hit) == np.asarray(cal.levels)).all()

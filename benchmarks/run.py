@@ -1,29 +1,128 @@
 """Benchmark harness entry point: one benchmark per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--list]
 
 Order: offset ladders (Fig. 3) -> Table I -> Frac sensitivity (Fig. 5) ->
-reliability (Fig. 6) -> Algorithm-1 convergence -> Pallas kernels ->
+reliability (Fig. 6) -> Algorithm-1 convergence -> fleet calibration ->
+Pallas kernels -> serving -> MAJX generalization -> column placement ->
 roofline summary (reads dry-run artifacts if present).
+
+Benchmarks register in the ``BENCHES`` dict (name -> runner taking a
+``BenchScale``); imports stay inside the runners so ``--only``/``--list``
+never pay for modules they don't use.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import time
+from typing import Callable
 
 from .common import BenchScale
 
-BENCHES = ("fig3", "table1", "fig5", "fig6", "convergence", "fleet",
-           "kernels", "serving", "majx", "roofline")
+
+def _fig3(scale):
+    """Offset ladders (Fig. 3)."""
+    from . import fig3_offsets
+    fig3_offsets.main(scale)
+
+
+def _table1(scale):
+    """ECR + arithmetic throughput operating points (Table I)."""
+    from . import table1
+    table1.main(scale)
+
+
+def _fig5(scale):
+    """Frac-count sensitivity (Fig. 5)."""
+    from . import fig5_frac_sensitivity
+    fig5_frac_sensitivity.main(scale)
+
+
+def _fig6(scale):
+    """Temperature/retention reliability (Fig. 6)."""
+    from . import fig6_reliability
+    fig6_reliability.main(scale)
+
+
+def _convergence(scale):
+    """Algorithm-1 convergence trajectory."""
+    from . import calibration_convergence
+    calibration_convergence.main(scale)
+
+
+def _fleet(scale):
+    """Whole-grid fleet calibration engine + cached startup."""
+    from . import fleet_calibration
+    fleet_calibration.main(["--full"] if scale.full else [])
+
+
+def _kernels(scale):
+    """Pallas kernels vs jnp oracles."""
+    from . import kernel_bench
+    kernel_bench.main(scale)
+
+
+def _serving(scale):
+    """MVDRAM serving table (Eq. 1 per arch)."""
+    from . import mvdram_serving
+    mvdram_serving.main(scale)
+
+
+def _majx(scale):
+    """MAJX generalization (MAJ3/MAJ7)."""
+    from . import majx_general
+    majx_general.main(scale)
+
+
+def _placement(scale):
+    """Column placement: occupancy + tokens/s with/without placement."""
+    from . import placement
+    placement.main(scale)
+
+
+def _roofline(scale):
+    """Roofline summary from dry-run artifacts (if present)."""
+    from . import roofline
+    for mesh in ("single", "multi"):
+        try:
+            rows = roofline.load(mesh, "base")
+        except FileNotFoundError:
+            rows = []
+        if rows:
+            print(f"\n-- mesh: {mesh} ({len(rows)} cells)")
+            print(roofline.fmt_table(rows))
+        else:
+            print(f"\n-- mesh: {mesh}: no dry-run artifacts yet")
+
+
+BENCHES: dict[str, Callable[[BenchScale], None]] = {
+    "fig3": _fig3,
+    "table1": _table1,
+    "fig5": _fig5,
+    "fig6": _fig6,
+    "convergence": _convergence,
+    "fleet": _fleet,
+    "kernels": _kernels,
+    "serving": _serving,
+    "majx": _majx,
+    "placement": _placement,
+    "roofline": _roofline,
+}
 
 
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true",
                     help="paper-scale protocol (65536 columns; slower)")
-    ap.add_argument("--only", default=None, choices=BENCHES)
+    ap.add_argument("--only", default=None, choices=sorted(BENCHES))
+    ap.add_argument("--list", action="store_true",
+                    help="list registered benchmarks and exit")
     args = ap.parse_args()
+    if args.list:
+        for name, fn in BENCHES.items():
+            print(f"{name:<12s} {(fn.__doc__ or '').strip()}")
+        return 0
     scale = (BenchScale(n_cols=65536, n_cols_arith=4096, full=True)
              if args.full else BenchScale())
 
@@ -31,45 +130,7 @@ def main() -> int:
     names = [args.only] if args.only else list(BENCHES)
     for name in names:
         print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}", flush=True)
-        if name == "fig3":
-            from . import fig3_offsets
-            fig3_offsets.main(scale)
-        elif name == "table1":
-            from . import table1
-            table1.main(scale)
-        elif name == "fig5":
-            from . import fig5_frac_sensitivity
-            fig5_frac_sensitivity.main(scale)
-        elif name == "fig6":
-            from . import fig6_reliability
-            fig6_reliability.main(scale)
-        elif name == "convergence":
-            from . import calibration_convergence
-            calibration_convergence.main(scale)
-        elif name == "fleet":
-            from . import fleet_calibration
-            fleet_calibration.main(["--full"] if scale.full else [])
-        elif name == "kernels":
-            from . import kernel_bench
-            kernel_bench.main(scale)
-        elif name == "serving":
-            from . import mvdram_serving
-            mvdram_serving.main(scale)
-        elif name == "majx":
-            from . import majx_general
-            majx_general.main(scale)
-        elif name == "roofline":
-            from . import roofline
-            for mesh in ("single", "multi"):
-                try:
-                    rows = roofline.load(mesh, "base")
-                except FileNotFoundError:
-                    rows = []
-                if rows:
-                    print(f"\n-- mesh: {mesh} ({len(rows)} cells)")
-                    print(roofline.fmt_table(rows))
-                else:
-                    print(f"\n-- mesh: {mesh}: no dry-run artifacts yet")
+        BENCHES[name](scale)
     print(f"\nall benchmarks done in {time.time() - t0:.0f}s")
     return 0
 

@@ -1,16 +1,26 @@
 """Low-bit serving through the PUD bit-plane path (the MVDRAM application
-PUDTune enables), on a small model end to end:
+PUDTune enables), on a small model end to end — including the full
+cache -> placement -> serve chain a production host runs:
 
-  pack FFN + unembed weights into 4-bit bit-planes (the DRAM layout) ->
-  greedy-decode through the Pallas bit-plane kernel -> compare numerics with
-  the bf16 path -> price the real-DRAM serving rate with and without
-  PUDTune's calibration (Eq. 1).
+  calibrate (or load) the device's per-subarray table + error-prone masks ->
+  place every packed projection's columns on error-free physical columns ->
+  pack FFN + unembed weights into placed 4-bit bit-planes -> greedy-decode
+  through the placed Pallas bit-plane kernel -> compare numerics with the
+  bf16 path -> price the real-DRAM serving rate from the actual placement
+  occupancy (Eq. 1 on the columns serving really uses).
 
     PYTHONPATH=src python examples/serve_pud_gemv.py [--arch granite-8b]
+
+The first run identifies and persists the calibration table (a few seconds
+at this smoke scale); rerunning with the same --calib-cache starts from the
+stored table and placement in milliseconds.  Add ``--pud-attention`` to the
+serve command to pack attention wq/wk/wv/wo as well (4-bit attention costs
+more greedy-token agreement — see docs/placement.md).
 """
 import argparse
 import pathlib
 import sys
+import tempfile
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
@@ -18,9 +28,16 @@ from repro.launch import serve  # noqa: E402
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="granite-8b")
+ap.add_argument("--calib-cache", default=None,
+                help="persistent table dir (default: throwaway tempdir)")
 args = ap.parse_args()
+
+cache_dir = args.calib_cache or tempfile.mkdtemp(prefix="pud-calib-")
+print(f"[example] calibration cache: {cache_dir}")
 
 sys.exit(serve.main([
     "--arch", args.arch, "--preset", "smoke", "--batch", "2",
-    "--prompt-len", "16", "--gen", "8", "--pud-gemv", "--weight-bits", "4",
+    "--prompt-len", "16", "--gen", "8", "--pud-gemv",
+    "--weight-bits", "4", "--calib-cache", cache_dir,
+    "--fleet-subarrays", "4", "--fleet-cols", "512",
 ]))

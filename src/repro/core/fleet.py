@@ -233,30 +233,33 @@ def load_or_calibrate(
     n_trials_ecr: int = 1024,
     interpret: bool = True,
 ):
-    """Return (levels [G, C], ecr [G], cache_hit) for ``device_id``.
+    """Return (levels [G, C], ecr [G], masks [G, C], cache_hit).
 
-    On a cache hit nothing is recalibrated or re-measured; on a miss the
-    fleet is manufactured from ``fold_in(key, .)``, calibrated, its ECR
+    ``masks`` is the per-column error-prone mask (True = faulty) that
+    column placement (repro/pud/placement.py) consumes.  On a cache hit
+    nothing is recalibrated or re-measured; on a miss the fleet is
+    manufactured from ``fold_in(key, .)``, calibrated, its ECR + masks
     measured, and the table persisted for the next startup.
     """
     from .ecr import measure_ecr_fleet
 
     hit = cache.load(device_id, cfg, params)
-    # A table without its ECR measurement can't drive the perf model —
-    # treat it as a miss and re-identify rather than hand back None.
-    if hit is not None and hit.ecr is not None:
-        return hit.levels, hit.ecr, True
+    # A table without its ECR measurement or masks can't drive the perf
+    # model / placement — treat it as a miss and re-identify rather than
+    # hand back None.
+    if hit is not None and hit.ecr is not None and hit.masks is not None:
+        return hit.levels, hit.ecr, hit.masks, True
 
     offsets = manufacture_fleet(key, cfg, params)
     cal = calibrate_fleet(key, offsets, cfg, params, config,
                           mesh=mesh, method=method, interpret=interpret)
     ladder = cfg.ladder(params)
     charges = fleet_calib_charges(ladder, cal.levels, params)
-    ecr, _ = measure_ecr_fleet(
+    ecr, masks = measure_ecr_fleet(
         jax.random.fold_in(key, 0x0ECD), offsets, charges, params,
         ladder.n_fracs, n_trials=n_trials_ecr)
     cache.save(device_id, cfg, params, np.asarray(cal.levels),
-               ecr=np.asarray(ecr),
+               ecr=np.asarray(ecr), masks=np.asarray(masks),
                metadata={"method": cal.method,
                          "n_iterations": config.n_iterations})
-    return cal.levels, ecr, False
+    return cal.levels, ecr, masks, False

@@ -38,6 +38,26 @@ K_BLOCK = 256
 N_BLOCK = 256
 
 
+def _accumulate(x, planes, out_shape, mode: str, n_bits: int):
+    """Shared MXU accumulation: x [B, Kb] x planes [WB, Kb, Nb] -> [B, Nb]."""
+    if mode == "folded":
+        # Fold bit-planes to int8 weights in VMEM, single MXU pass.
+        w = jnp.zeros(planes.shape[1:], jnp.int32)
+        for b in range(n_bits):
+            w = w + (planes[b].astype(jnp.int32) << b)
+        return jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+    # Faithful PUD schedule: one pass per plane, shift-accumulate.
+    acc = jnp.zeros(out_shape, jnp.int32)
+    for b in range(n_bits):
+        part = jax.lax.dot_general(
+            x, planes[b].astype(jnp.int32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        acc = acc + (part << b)
+    return acc
+
+
 def _gemv_kernel(x_ref, planes_ref, out_ref, *, mode: str, n_bits: int):
     k_idx = pl.program_id(1)
 
@@ -46,23 +66,29 @@ def _gemv_kernel(x_ref, planes_ref, out_ref, *, mode: str, n_bits: int):
         out_ref[...] = jnp.zeros_like(out_ref)
 
     x = x_ref[...].astype(jnp.int32)              # [B, Kb]
-    if mode == "folded":
-        # Fold bit-planes to int8 weights in VMEM, single MXU pass.
-        w = jnp.zeros(planes_ref.shape[1:], jnp.int32)
-        for b in range(n_bits):
-            w = w + (planes_ref[b].astype(jnp.int32) << b)
-        acc = jax.lax.dot_general(
-            x, w, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32)
-    else:
-        # Faithful PUD schedule: one pass per plane, shift-accumulate.
-        acc = jnp.zeros(out_ref.shape, jnp.int32)
-        for b in range(n_bits):
-            part = jax.lax.dot_general(
-                x, planes_ref[b].astype(jnp.int32), (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32)
-            acc = acc + (part << b)
-    out_ref[...] += acc
+    out_ref[...] += _accumulate(x, planes_ref[...], out_ref.shape,
+                                mode, n_bits)
+
+
+def _gemv_placed_kernel(x_ref, cols_ref, planes_ref, out_ref, *,
+                        mode: str, n_bits: int):
+    """Placed variant: gather physical columns inside the kernel.
+
+    ``planes_ref`` holds the PHYSICAL window [WB, Kb, P] of this tensor's
+    column region; ``cols_ref`` [1, Nb] maps this output block's logical
+    columns onto window positions.  The gather is fused with the matmul —
+    the permuted planes never round-trip through HBM.
+    """
+    k_idx = pl.program_id(1)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.int32)              # [B, Kb]
+    cols = cols_ref[0, :]                          # [Nb] window positions
+    planes = jnp.take(planes_ref[...], cols, axis=2)   # [WB, Kb, Nb]
+    out_ref[...] += _accumulate(x, planes, out_ref.shape, mode, n_bits)
 
 
 @functools.partial(
@@ -97,5 +123,49 @@ def bitplane_gemv(
         out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
         interpret=interpret,
     )(x, planes)
+    sign_fix = (1 << (wb - 1)) * x.astype(jnp.int32).sum(axis=1, keepdims=True)
+    return unsigned - sign_fix
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "interpret"))
+def bitplane_gemv_placed(
+    x: jax.Array,         # [B, K] int8 activations
+    planes: jax.Array,    # [WB, K, P] int8 physical window (placed layout)
+    col_ids: jax.Array,   # [N] int32 logical -> window column map
+    mode: str = "planes",
+    interpret: bool = True,
+) -> jax.Array:
+    """Column-placed bit-plane GeMV; returns [B, N] like ``bitplane_gemv``.
+
+    ``planes`` is the physically-permuted layout a placement-aware packer
+    emits (repro/pud/placement.py): logical column n of the projection lives
+    at window position ``col_ids[n]``; the remaining window columns belong
+    to faulty/unused physical columns and are never read.  The gather is
+    fused into the kernel per N-block.  Bit-exact vs
+    ``ref.bitplane_gemv_placed_ref``.
+    """
+    b, k = x.shape
+    wb, k2, p = planes.shape
+    (n,) = col_ids.shape
+    kb, nb = min(k, K_BLOCK), min(n, N_BLOCK)
+    assert k == k2 and k % kb == 0 and n % nb == 0, \
+        (x.shape, planes.shape, col_ids.shape)
+    grid = (n // nb, k // kb)
+    kernel = functools.partial(_gemv_placed_kernel, mode=mode, n_bits=wb)
+    unsigned = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, kb), lambda jn, jk: (0, jk)),
+            pl.BlockSpec((1, nb), lambda jn, jk: (0, jn)),
+            # whole physical window per K-tile: the gather needs arbitrary
+            # window columns, so the P axis stays unblocked
+            pl.BlockSpec((wb, kb, p), lambda jn, jk: (0, jk, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, nb), lambda jn, jk: (0, jn)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
+        interpret=interpret,
+    )(x, col_ids.astype(jnp.int32)[None, :], planes)
     sign_fix = (1 << (wb - 1)) * x.astype(jnp.int32).sum(axis=1, keepdims=True)
     return unsigned - sign_fix

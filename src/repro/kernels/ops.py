@@ -10,11 +10,12 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .bitplane_gemv import bitplane_gemv
+from .bitplane_gemv import bitplane_gemv, bitplane_gemv_placed
 from .majx import majx_sense
 
 __all__ = [
-    "majx_sense", "bitplane_gemv", "pud_gemv", "quantize_activations",
+    "majx_sense", "bitplane_gemv", "bitplane_gemv_placed", "pud_gemv",
+    "quantize_activations",
 ]
 
 
@@ -31,14 +32,26 @@ def pud_gemv(
     w_scale: jax.Array,    # [N] or scalar dequant scale
     mode: str = "folded",
     interpret: bool = True,
+    col_ids: jax.Array | None = None,   # [N] window map -> placed kernel
 ) -> jax.Array:
-    """Quantize -> bit-plane GeMV -> dequantize. Returns [B, N] float32."""
+    """Quantize -> bit-plane GeMV -> dequantize. Returns [B, N] float32.
+
+    With ``col_ids`` the planes are the physically-placed window layout
+    (repro/pud/placement.py) and the column gather runs fused in the kernel.
+    """
     xq, x_scale = quantize_activations(x)
-    acc = bitplane_gemv(xq, planes, mode=mode, interpret=interpret)
+    if col_ids is not None:
+        acc = bitplane_gemv_placed(xq, planes, col_ids, mode=mode,
+                                   interpret=interpret)
+    else:
+        acc = bitplane_gemv(xq, planes, mode=mode, interpret=interpret)
     return acc.astype(jnp.float32) * x_scale * w_scale
 
 
-def pud_gemv_ref(x, planes, w_scale):
+def pud_gemv_ref(x, planes, w_scale, col_ids=None):
     xq, x_scale = quantize_activations(x)
-    acc = ref.bitplane_gemv_ref(xq, planes)
+    if col_ids is not None:
+        acc = ref.bitplane_gemv_placed_ref(xq, planes, col_ids)
+    else:
+        acc = ref.bitplane_gemv_ref(xq, planes)
     return acc.astype(jnp.float32) * x_scale * w_scale

@@ -68,6 +68,13 @@ def bitplane_gemv_ref(x: jax.Array, planes: jax.Array) -> jax.Array:
         preferred_element_type=jnp.int32)
 
 
+def bitplane_gemv_placed_ref(x: jax.Array, planes: jax.Array,
+                             col_ids: jax.Array) -> jax.Array:
+    """Placed oracle: gather logical columns out of the physical window
+    [WB, K, P] with ``col_ids`` [N], then the plain bit-plane GeMV."""
+    return bitplane_gemv_ref(x, jnp.take(planes, col_ids, axis=2))
+
+
 def pack_bitplanes(w: jax.Array, n_bits: int) -> jax.Array:
     """Signed int weights [K,N] in [-2^{b-1}, 2^{b-1}) -> [WB,K,N] bit-planes.
 

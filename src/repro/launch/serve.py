@@ -3,15 +3,22 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
         --preset smoke --batch 4 --prompt-len 32 --gen 16 --pud-gemv
 
-With ``--pud-gemv`` the FFN and unembed projections are packed into 4-bit
-bit-planes (the PUD/MVDRAM weight layout) and every decode step executes them
-through the Pallas bit-plane kernel. The driver reports:
+With ``--pud-gemv`` the FFN and unembed projections (plus attention with
+``--pud-attention``) are packed into 4-bit bit-planes (the PUD/MVDRAM weight
+layout) and every decode step executes them through the Pallas bit-plane
+kernel. The driver reports:
 
   * numerics: max |logit delta| and token agreement vs the bf16 path,
   * the DRAM-side performance model: tokens/s a real 4-channel DDR4 PUD
     system would sustain for this model at the calibrated error-free column
     fraction — baseline B_{3,0,0} vs PUDTune T_{2,1,0} (the paper's Eq. 1
     applied end-to-end).
+
+With ``--calib-cache`` the device's persisted per-subarray table drives the
+whole chain: calibration masks -> column placement (error-free physical
+columns only, repro/pud/placement.py) -> physically-permuted packs -> the
+placed Pallas kernel, and the serving rate is derived from the actual
+placement occupancy instead of a mean error-free fraction.
 """
 from __future__ import annotations
 
@@ -23,8 +30,11 @@ import jax.numpy as jnp
 
 from repro.configs import get
 from repro.models.params import init_params, param_count
-from repro.pud.gemv import FleetPerfModel, PUDGemvConfig, PUDPerfModel
-from repro.pud.packer import pack_for_serving, packed_bytes
+from repro.pud.gemv import (ATTN_PACKABLE, FFN_PACKABLE, FleetPerfModel,
+                            PUDGemvConfig, PUDPerfModel)
+from repro.pud.packer import pack_for_serving, packed_bytes, packing_requests
+from repro.pud.placement import (PlacementError, plan_for_grid,
+                                 requests_fingerprint)
 from repro.runtime.steps import make_serve_step
 
 
@@ -62,7 +72,13 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--pud-gemv", action="store_true")
+    ap.add_argument("--pud-attention", action="store_true",
+                    help="also pack attention wq/wk/wv/wo onto the PUD path")
     ap.add_argument("--weight-bits", type=int, default=4)
+    ap.add_argument("--no-placement", dest="placement",
+                    action="store_false", default=True,
+                    help="with --calib-cache: skip column placement and "
+                         "pack onto logical columns (faulty ones included)")
     ap.add_argument("--calib-cache", default=None, metavar="DIR",
                     help="persistent calibration-table cache; serving "
                          "starts from the device's stored per-subarray "
@@ -108,15 +124,77 @@ def main(argv=None) -> int:
           f"(CPU wall; TPU perf comes from the dry-run roofline)")
 
     if args.pud_gemv:
-        cfg = PUDGemvConfig(weight_bits=args.weight_bits)
-        packed, report = pack_for_serving(params, cfg)
+        packable = FFN_PACKABLE + (ATTN_PACKABLE if args.pud_attention
+                                   else ())
+        cfg = PUDGemvConfig(weight_bits=args.weight_bits, packable=packable)
+        n_fracs = 3
+
+        # --calib-cache: the persisted table drives placement BEFORE packing
+        # (cache -> masks -> placement -> physically-permuted packs).
+        placement = None
+        tune = None
+        if args.calib_cache:
+            # Device-specific model from the persisted per-subarray table:
+            # a cache hit costs a file read, not an Algorithm-1 run.
+            from repro.core.calibrate import CalibrationConfig
+            from repro.core.fleet import FleetConfig, load_or_calibrate
+            from repro.pud.physics import PhysicsParams
+            from repro.runtime.calib_cache import CalibrationTableCache
+            cache = CalibrationTableCache(args.calib_cache)
+            phys = PhysicsParams()
+            fleet_cfg = FleetConfig(
+                n_channels=1, n_banks=1,
+                n_subarrays=args.fleet_subarrays, n_cols=args.fleet_cols)
+            n_fracs = sum(fleet_cfg.frac_counts)
+            t0 = time.time()
+            _, ecr, masks, hit = load_or_calibrate(
+                cache, args.device_id, jax.random.key(args.seed + 2),
+                fleet_cfg, phys,
+                config=CalibrationConfig(n_iterations=12, n_samples=256))
+            tune = FleetPerfModel.from_table(ecr, n_fracs=n_fracs)
+            status = ("HIT (no recalibration)" if hit
+                      else "MISS (identified + persisted)")
+            print(f"  calibration table [{args.device_id}] {status} "
+                  f"in {time.time() - t0:.2f}s: "
+                  f"{fleet_cfg.n_subarrays_total} subarrays, mean ECR "
+                  f"{1 - tune.mean_error_free_frac:.3f}")
+            if args.placement:
+                reqs = packing_requests(params, cfg)
+                pname = (f"{args.arch}-{args.preset}"
+                         f"-{requests_fingerprint(reqs)}")
+                placement = cache.load_placement(
+                    args.device_id, fleet_cfg, phys, pname)
+                pstatus = "HIT"
+                if placement is None:
+                    pstatus = "planned + persisted"
+                    try:
+                        placement = plan_for_grid(
+                            masks, reqs, fleet_cfg.grid_shape)
+                        cache.save_placement(args.device_id, fleet_cfg,
+                                             phys, pname, placement)
+                    except PlacementError as e:
+                        print(f"  placement: SKIPPED ({e}); serving on "
+                              f"logical columns")
+                if placement is not None:
+                    rep = placement.capacity_report()
+                    print(f"  placement [{pname}] {pstatus}: "
+                          f"{rep['used_cols']:,}/{rep['usable_cols']:,} "
+                          f"error-free columns used "
+                          f"(occupancy {rep['occupancy']:.1%}, "
+                          f"{rep['occupied_subarrays']}"
+                          f"/{rep['n_subarrays']} subarrays, "
+                          f"{len(rep['spilled_tensors'])} tensors spilled)")
+
+        packed, report = pack_for_serving(params, cfg, placement=placement)
         sizes = packed_bytes(packed)
         toks, logits = greedy_generate(
             model, packed, tokens, args.gen, max_len, extras, prefix_len)
         agree = float((toks == ref_toks).mean())
         delta = float(jnp.abs(logits - ref_logits).max())
+        layout = "placed physical" if placement is not None else "logical"
         print(f"  pud-gemv path ({cfg.weight_bits}-bit planes, "
               f"{len(report['packed'])} projections packed, "
+              f"{layout} columns, "
               f"{sizes['pud_bytes'] / 2**20:.1f} MiB planes):")
         print(f"    token agreement vs bf16: {100 * agree:.1f}%   "
               f"max |logit delta|: {delta:.3f} "
@@ -125,36 +203,19 @@ def main(argv=None) -> int:
         # DRAM-side throughput model: what the paper's system sustains.
         flops_per_tok = 2 * spec.n_active_params
         base = PUDPerfModel(error_free_frac=1 - 0.466)   # B300, Table I
-        if args.calib_cache:
-            # Device-specific model from the persisted per-subarray table:
-            # a cache hit costs a file read, not an Algorithm-1 run.
-            from repro.core.calibrate import CalibrationConfig
-            from repro.core.fleet import FleetConfig, load_or_calibrate
-            from repro.runtime.calib_cache import CalibrationTableCache
-            cache = CalibrationTableCache(args.calib_cache)
-            fleet_cfg = FleetConfig(
-                n_channels=1, n_banks=1,
-                n_subarrays=args.fleet_subarrays, n_cols=args.fleet_cols)
-            t0 = time.time()
-            _, ecr, hit = load_or_calibrate(
-                cache, args.device_id, jax.random.key(args.seed + 2),
-                fleet_cfg,
-                config=CalibrationConfig(n_iterations=12, n_samples=256))
-            tune = FleetPerfModel.from_table(
-                ecr, n_fracs=sum(fleet_cfg.frac_counts))
-            status = ("HIT (no recalibration)" if hit
-                      else "MISS (identified + persisted)")
-            print(f"    calibration table [{args.device_id}] {status} "
-                  f"in {time.time() - t0:.2f}s: "
-                  f"{fleet_cfg.n_subarrays_total} subarrays, mean ECR "
-                  f"{1 - tune.mean_error_free_frac:.3f}")
-        else:
+        if tune is None:
             tune = PUDPerfModel(error_free_frac=1 - 0.033)  # T210, Table I
         print(f"    DDR4-PUD serving model ({args.arch} full config, "
               f"{args.weight_bits}-bit): "
               f"baseline {base.tokens_per_second(flops_per_tok):.2f} tok/s"
               f" -> PUDTune {tune.tokens_per_second(flops_per_tok):.2f}"
               f" tok/s ({tune.speedup_vs(base):.2f}x, Eq. 1)")
+        if placement is not None:
+            placed_model = FleetPerfModel.from_placement(
+                placement, n_fracs=n_fracs)
+            print(f"    placement-derived rate (occupied-subarray waves): "
+                  f"{placed_model.tokens_per_second(flops_per_tok):.2f} "
+                  f"tok/s at {placement.occupancy:.1%} occupancy")
     return 0
 
 

@@ -22,6 +22,31 @@ from .params import ParamDef
 from .sharding_ctx import hint, padded_head_count
 
 
+def head_proj(p, name: str, x, heads: int, hdim: int):
+    """x [..., D] @ [D, H, Dh] -> [..., H, Dh], PUD-packed aware.
+
+    ``pud.packer.pack_for_serving`` with attention packing replaces
+    ``<name>`` by ``<name>_pud`` holding bit-planes of the flattened
+    [D, H*Dh] projection; the head split is restored by reshape.
+    """
+    packed = p.get(name + "_pud")
+    if packed is not None:
+        from repro.pud.gemv import pud_linear
+        y = pud_linear(x, packed).astype(x.dtype)
+        return y.reshape(y.shape[:-1] + (heads, hdim))
+    return jnp.einsum("...d,dhk->...hk", x, p[name].astype(x.dtype))
+
+
+def merge_proj(p, name: str, x):
+    """x [..., H, Dh] @ [H, Dh, D] -> [..., D], PUD-packed aware."""
+    packed = p.get(name + "_pud")
+    if packed is not None:
+        from repro.pud.gemv import pud_linear
+        flat = x.reshape(x.shape[:-2] + (x.shape[-2] * x.shape[-1],))
+        return pud_linear(flat, packed).astype(x.dtype)
+    return jnp.einsum("...hk,hkd->...d", x, p[name].astype(x.dtype))
+
+
 @dataclasses.dataclass(frozen=True)
 class AttnConfig:
     d_model: int
@@ -118,10 +143,10 @@ def gqa_attention(p, cfg: AttnConfig, x, positions, kv_override=None):
     Returns (out [B,S,D], (k, v) for cache seeding).
     kv_override: (k, v) from an encoder for cross-attention (no causal).
     """
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    q = head_proj(p, "wq", x, cfg.n_heads, cfg.head_dim)
     if kv_override is None:
-        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
-        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+        k = head_proj(p, "wk", x, cfg.n_kv_heads, cfg.head_dim)
+        v = head_proj(p, "wv", x, cfg.n_kv_heads, cfg.head_dim)
         if cfg.qk_norm:
             q = rmsnorm(p["q_norm"], q)
             k = rmsnorm(p["k_norm"], k)
@@ -154,14 +179,14 @@ def gqa_attention(p, cfg: AttnConfig, x, positions, kv_override=None):
                  kv_chunk=min(cfg.kv_chunk, k.shape[1]))
     if hp != h_true:
         out = out[:, :, :h_true]
-    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    out = merge_proj(p, "wo", out)
     return out, cache_kv
 
 
 def encoder_kv(p, cfg: AttnConfig, memory):
     """Precompute cross-attention K/V from encoder output."""
-    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"].astype(memory.dtype))
-    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"].astype(memory.dtype))
+    k = head_proj(p, "wk", memory, cfg.n_kv_heads, cfg.head_dim)
+    v = head_proj(p, "wv", memory, cfg.n_kv_heads, cfg.head_dim)
     return k, v
 
 
@@ -173,10 +198,10 @@ def gqa_decode(p, cfg: AttnConfig, x, cache_k, cache_v, cur_len,
     For cross-attention the cache holds encoder K/V and is not updated.
     """
     b, smax = cache_k.shape[0], cache_k.shape[1]
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    q = head_proj(p, "wq", x, cfg.n_heads, cfg.head_dim)
     if not cross:
-        k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
-        v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+        k_new = head_proj(p, "wk", x, cfg.n_kv_heads, cfg.head_dim)
+        v_new = head_proj(p, "wv", x, cfg.n_kv_heads, cfg.head_dim)
         if cfg.qk_norm:
             q = rmsnorm(p["q_norm"], q)
             k_new = rmsnorm(p["k_norm"], k_new)
@@ -202,7 +227,7 @@ def gqa_decode(p, cfg: AttnConfig, x, cache_k, cache_v, cur_len,
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgp,bpkd->bkgd", w.astype(cache_v.dtype), cache_v)
     o = o.reshape(b, 1, h, d)
-    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    out = merge_proj(p, "wo", o)
     return out, cache_k, cache_v
 
 
@@ -247,7 +272,7 @@ def mla_defs(cfg: MLAConfig, dtype=jnp.bfloat16) -> dict:
 
 def mla_attention(p, cfg: MLAConfig, x, positions):
     """Training/prefill MLA. Returns (out, (c_kv, k_rope)) for cache seeding."""
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    q = head_proj(p, "wq", x, cfg.n_heads, cfg.qk_dim)
     q_nope, q_rope = q[..., :cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
     q_rope = rope(q_rope, positions, cfg.rope_theta)
 
@@ -268,7 +293,7 @@ def mla_attention(p, cfg: MLAConfig, x, positions):
     out = _flash(q_full, k, vpad, causal=True,
                  kv_chunk=min(cfg.kv_chunk, x.shape[1]))
     out = out[..., : cfg.v_head_dim]
-    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    out = merge_proj(p, "wo", out)
     return out, (c_kv, k_rope[:, :, 0, :])
 
 
@@ -279,7 +304,7 @@ def mla_decode(p, cfg: MLAConfig, x, cache_ckv, cache_kr, cur_len):
     cache_ckv: [B, Smax, R]; cache_kr: [B, Smax, dr].
     """
     b, smax, r = cache_ckv.shape
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))[:, 0]
+    q = head_proj(p, "wq", x, cfg.n_heads, cfg.qk_dim)[:, 0]
     q_nope, q_rope = q[..., :cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
     pos = jnp.full((b, 1), cur_len)
     q_rope = rope(q_rope[:, None], pos, cfg.rope_theta)[:, 0]
@@ -311,5 +336,5 @@ def mla_decode(p, cfg: MLAConfig, x, cache_ckv, cache_kr, cur_len):
     w = jax.nn.softmax(s, axis=-1)
     o_lat = jnp.einsum("bhp,bpr->bhr", w.astype(cache_ckv.dtype), cache_ckv)
     o = jnp.einsum("bhr,rhk->bhk", o_lat, p["wuv"].astype(x.dtype))
-    out = jnp.einsum("bhk,hkd->bd", o, p["wo"].astype(x.dtype))[:, None]
+    out = merge_proj(p, "wo", o)[:, None]
     return out, cache_ckv, cache_kr

@@ -23,6 +23,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.ops import pud_gemv
 from repro.kernels.ref import pack_bitplanes
@@ -30,12 +31,20 @@ from repro.kernels.ref import pack_bitplanes
 from .bitserial import add8_counts, mul8_counts
 from .timing import SystemConfig, wave_latency_ns
 
+# Default packable set: FFN projections (dominant decode GeMV flops).
+# Entries are "scope.name" (scope = any path component) or a bare name.
+FFN_PACKABLE = ("mixer.wi", "mixer.wg", "mixer.wo")
+# Attention projections (2-D case: head axes flattened to one column axis).
+ATTN_PACKABLE = ("attn.wq", "attn.wk", "attn.wv", "attn.wo")
+
 
 @dataclasses.dataclass(frozen=True)
 class PUDGemvConfig:
     weight_bits: int = 4
     mode: str = "folded"         # "planes" (faithful) | "folded" (optimized)
     interpret: bool = True       # CPU container; False on real TPU
+    # Which projections pack_for_serving swaps onto the PUD path.
+    packable: tuple[str, ...] = FFN_PACKABLE
 
 
 def pack_linear(w: jax.Array, n_bits: int = 4) -> dict:
@@ -57,7 +66,8 @@ def pud_linear(x: jax.Array, packed: dict,
     lead = x.shape[:-1]
     x2 = x.reshape((-1, x.shape[-1]))
     y = pud_gemv(x2, packed["planes"], packed["scale"],
-                 mode=cfg.mode, interpret=cfg.interpret)
+                 mode=cfg.mode, interpret=cfg.interpret,
+                 col_ids=packed.get("col_ids"))
     return y.reshape(lead + (y.shape[-1],))
 
 
@@ -128,6 +138,25 @@ class FleetPerfModel:
     def from_table(cls, ecr_per_subarray, n_fracs: int = 3,
                    sys: SystemConfig | None = None) -> "FleetPerfModel":
         fracs = tuple(float(1.0 - e) for e in ecr_per_subarray)
+        return cls(error_free_fracs=fracs, n_fracs=n_fracs,
+                   sys=sys or SystemConfig())
+
+    @classmethod
+    def from_placement(cls, placement, n_fracs: int = 3,
+                       sys: SystemConfig | None = None) -> "FleetPerfModel":
+        """Rate from the *actual* column placement, not a mean fraction.
+
+        Waves rotate over the subarrays the placement occupies; each wave
+        executes exactly the columns placed there (repro/pud/placement.py),
+        so the per-wave usable fraction is used/total per occupied
+        subarray rather than the device-mean error-free fraction.
+        """
+        used = np.asarray(placement.used_per_subarray, np.float64)
+        occupied = used[used > 0]
+        if occupied.size == 0:
+            raise ValueError("placement occupies no subarray")
+        fracs = tuple(float(u / placement.n_cols_per_subarray)
+                      for u in occupied)
         return cls(error_free_fracs=fracs, n_fracs=n_fracs,
                    sys=sys or SystemConfig())
 

@@ -1,28 +1,79 @@
 """Serving-time weight packer: swap model projections onto the PUD path.
 
 ``pack_for_serving`` walks a trained/initialized parameter tree and replaces
-selected 2-D projections with PUD bit-plane packs ({"planes", "scale"}),
-which ``models.layers.linear`` dispatches to the Pallas bit-plane GeMV.
-This is how the paper's technique becomes a first-class serving feature:
-any arch config can be served with ``--pud-gemv`` and its FFN/unembed
+selected projections with PUD bit-plane packs ({"planes", "scale"}), which
+``models.layers.linear`` / ``models.attention`` dispatch to the Pallas
+bit-plane GeMV.  This is how the paper's technique becomes a first-class
+serving feature: any arch config can be served with ``--pud-gemv`` and its
 projections execute in the (simulated) DRAM layout.
 
-Scope (documented in DESIGN.md §4): FFN wi/wg/wo and the unembed projection
-— the dominant GeMV flops at decode time. Attention projections and MoE
-expert banks keep the bf16 path (same mechanism would apply; the expert dim
-adds a leading axis the serving kernel does not tile yet).
+Which projections pack is configured by ``PUDGemvConfig.packable`` — entries
+are either a bare key name ("wi") or scoped "component.key" ("mixer.wi",
+matching when "mixer" appears on the tree path).  The default covers FFN
+wi/wg/wo; add ``ATTN_PACKABLE`` for attention wq/wk/wv/wo, whose 3-D
+``[D, H, Dh]`` weights pack as the flattened 2-D ``[D, H*Dh]`` case (the
+head split is a view — the GeMV columns are the same either way).  MoE
+routed expert banks keep the bf16 path (the expert dim adds a leading axis
+the serving kernel does not tile yet).
 
 Stacked (scanned) layers pack per-slice: [L, K, N] -> [L, WB, K, N]; under
 the layer ``lax.scan`` each iteration sees one [WB, K, N] pack.
+
+With a ``Placement`` (repro/pud/placement.py) the packer emits
+*physically-permuted* planes: each slice's bit-planes are scattered into the
+physical column window its logical columns were placed on, plus the
+``col_ids`` gather map the placed kernel consumes.  Faulty physical columns
+inside the window hold zeros and are never addressed.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .gemv import PUDGemvConfig, pack_linear
+from .gemv import ATTN_PACKABLE, FFN_PACKABLE, PUDGemvConfig, pack_linear
+from .placement import Placement, PlacementRequest, TensorPlacement
 
-PACKABLE = ("wi", "wg", "wo")
+
+def _match(packable: tuple[str, ...], key: str, path: tuple[str, ...]) -> bool:
+    """Does ``key`` at ``path`` belong to the packable set?
+
+    "scope.name" entries require ``scope`` somewhere on the path; bare
+    entries match the key in any context.
+    """
+    for entry in packable:
+        if "." in entry:
+            scope, name = entry.rsplit(".", 1)
+            if key == name and scope in path:
+                return True
+        elif key == entry:
+            return True
+    return False
+
+
+def _canonical(key: str, path: tuple[str, ...], w: jax.Array):
+    """Matched projection -> canonical [K, N] / [L, K, N] view, or None.
+
+    Attention weights carry explicit head axes; the PUD column layout does
+    not care about the split, so wq/wk/wv flatten the trailing (H, Dh) axes
+    and wo the leading ones.  Everything else (FFN, unembed) must already be
+    2-D, optionally with a stacked-layer axis in front.
+    """
+    if "attn" in path:
+        if key in ("wq", "wk", "wv"):
+            if w.ndim == 3:       # [D, H, Dh]
+                return w.reshape(w.shape[0], -1)
+            if w.ndim == 4:       # [L, D, H, Dh]
+                return w.reshape(w.shape[0], w.shape[1], -1)
+        elif key == "wo":
+            if w.ndim == 3:       # [H, Dh, D]
+                return w.reshape(-1, w.shape[-1])
+            if w.ndim == 4:       # [L, H, Dh, D]
+                return w.reshape(w.shape[0], -1, w.shape[-1])
+        return None
+    if w.ndim in (2, 3):
+        return w
+    return None
 
 
 def _pack_stacked(w: jax.Array, n_bits: int) -> dict:
@@ -34,11 +85,84 @@ def _pack_stacked(w: jax.Array, n_bits: int) -> dict:
             "scale": jnp.stack([p["scale"] for p in packs])}
 
 
+def _pack_placed(w: jax.Array, n_bits: int, tp: TensorPlacement) -> dict:
+    """Physically-placed pack: planes scattered into the column window.
+
+    Returns {"planes": [L?, WB, K, P], "scale": [L?, N],
+    "col_ids": [L?, N]} with P = tp.region_size.
+    """
+    local = np.asarray(tp.local_cols)
+
+    def one(w2, loc):
+        pk = pack_linear(w2, n_bits)
+        planes = jnp.zeros(pk["planes"].shape[:2] + (tp.region_size,),
+                           jnp.int8)
+        idx = jnp.asarray(loc, jnp.int32)
+        planes = planes.at[:, :, idx].set(pk["planes"])
+        return {"planes": planes, "scale": pk["scale"], "col_ids": idx}
+
+    if w.ndim == 2:
+        return one(w, local)
+    packs = [one(w[i], local[i]) for i in range(w.shape[0])]
+    return {k: jnp.stack([p[k] for p in packs]) for k in packs[0]}
+
+
+def _pack_any(w, n_bits: int, name: str, placement: Placement | None) -> dict:
+    if placement is None:
+        return _pack_stacked(w, n_bits)
+    tp = placement.entries.get(name)
+    if tp is None:
+        raise KeyError(
+            f"placement has no entry for packed tensor {name!r}; plan it "
+            f"from packing_requests() of the same params/config "
+            f"(have: {sorted(placement.entries)})")
+    return _pack_placed(w, n_bits, tp)
+
+
+def packing_requests(params: dict, cfg: PUDGemvConfig = PUDGemvConfig(),
+                     include_unembed: bool = True) -> list[PlacementRequest]:
+    """Column demand of every projection ``pack_for_serving`` would pack.
+
+    Feed this to ``placement.plan_placement`` — the request names match the
+    report/placement keys the packer uses.
+    """
+    reqs: list[PlacementRequest] = []
+
+    def walk(tree, path):
+        for key, sub in tree.items():
+            p = path + (key,)
+            if isinstance(sub, dict):
+                walk(sub, p)
+            elif (isinstance(sub, jax.Array)
+                  and _match(cfg.packable, key, path)):
+                w = _canonical(key, path, sub)
+                if w is None:
+                    continue
+                if w.ndim == 2:
+                    reqs.append(PlacementRequest("/".join(p), w.shape[1], 0))
+                else:
+                    reqs.append(PlacementRequest(
+                        "/".join(p), w.shape[2], w.shape[0]))
+
+    walk(params, ())
+    if include_unembed and "w" in params.get("unembed", {}):
+        reqs.append(PlacementRequest(
+            "unembed/w", params["unembed"]["w"].shape[1], 0))
+    return reqs
+
+
 def pack_for_serving(params: dict, cfg: PUDGemvConfig = PUDGemvConfig(),
-                     include_unembed: bool = True) -> tuple[dict, dict]:
+                     include_unembed: bool = True,
+                     placement: Placement | None = None) -> tuple[dict, dict]:
     """Returns (serving params, report). Original fp weights are dropped
-    from packed projections (the bit-planes ARE the stored layout)."""
-    report = {"packed": [], "skipped": [], "bits": cfg.weight_bits}
+    from packed projections (the bit-planes ARE the stored layout).
+
+    With ``placement``, every pack is emitted in its physical column layout
+    (see ``_pack_placed``); the placement must cover exactly the tensors
+    this config packs — build it from ``packing_requests(params, cfg)``.
+    """
+    report = {"packed": [], "skipped": [], "bits": cfg.weight_bits,
+              "placed": placement is not None}
 
     def walk(tree, path):
         if not isinstance(tree, dict):
@@ -46,25 +170,26 @@ def pack_for_serving(params: dict, cfg: PUDGemvConfig = PUDGemvConfig(),
         out = {}
         for key, sub in tree.items():
             p = path + (key,)
-            if (key in PACKABLE and isinstance(sub, jax.Array)
-                    and sub.ndim in (2, 3) and "mixer" in path):
-                out[key + "_pud"] = _pack_stacked(sub, cfg.weight_bits)
-                report["packed"].append("/".join(p))
-            elif key in PACKABLE and not isinstance(sub, jax.Array):
-                out[key] = walk(sub, p)   # nested dict coincidence
-            else:
-                if isinstance(sub, dict):
-                    out[key] = walk(sub, p)
-                else:
-                    out[key] = sub
-                    if key in PACKABLE and isinstance(sub, jax.Array):
-                        report["skipped"].append("/".join(p))
+            if isinstance(sub, dict):
+                out[key] = walk(sub, p)
+                continue
+            if isinstance(sub, jax.Array) and _match(cfg.packable, key, path):
+                w = _canonical(key, path, sub)
+                if w is not None:
+                    name = "/".join(p)
+                    out[key + "_pud"] = _pack_any(
+                        w, cfg.weight_bits, name, placement)
+                    report["packed"].append(name)
+                    continue
+                report["skipped"].append("/".join(p))
+            out[key] = sub
         return out
 
     packed = walk(params, ())
     if include_unembed and "unembed" in packed:
         w = packed["unembed"].pop("w")
-        packed["unembed"]["w_pud"] = _pack_stacked(w, cfg.weight_bits)
+        packed["unembed"]["w_pud"] = _pack_any(
+            w, cfg.weight_bits, "unembed/w", placement)
         report["packed"].append("unembed/w")
     return packed, report
 
@@ -80,6 +205,8 @@ def packed_bytes(params: dict) -> dict:
                     if "planes" in v and "scale" in v and k.endswith("_pud"):
                         stats["pud_bytes"] += v["planes"].size // 8 \
                             + v["scale"].size * 4
+                        if "col_ids" in v:
+                            stats["pud_bytes"] += v["col_ids"].size * 4
                     else:
                         walk(v)
                 elif isinstance(v, jax.Array):

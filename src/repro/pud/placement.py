@@ -1,0 +1,381 @@
+"""Physical column placement: calibration masks -> the serving layout.
+
+The paper's calibration decides *which physical columns* are safe to compute
+on (Eq. 1, Table I); this module is the layer that makes serving actually run
+on those columns.  ``plan_placement`` takes the fleet's per-column error-prone
+masks (``core/ecr.measure_ecr_fleet``) and maps every packed projection's
+logical columns onto error-free physical columns across the
+``(channel, bank, subarray)`` grid — greedy first-fit bin-packing inside a
+subarray with spill into the next one.  The result is a ``Placement`` pytree:
+per-tensor column index maps plus a capacity report, persisted alongside the
+calibration table by ``runtime/calib_cache.py``.
+
+Layout model (matches the MVDRAM weight layout of kernels/bitplane_gemv.py):
+a packed ``[K, N]`` projection occupies one physical column per output column
+n — its WB bit-planes live in that column's rows — so a tensor's demand is N
+columns per stacked slice.  Physical columns are numbered subarray-major:
+``global_col = subarray_index * n_cols + col``.
+
+Fault model (``inject_read_faults``): an error-prone column is one whose
+sense-amp threshold offset exceeds the SiMRA margin (pud/physics), so its
+reads saturate to a *stuck* value regardless of the stored charge —
+``offset < 0`` lowers the threshold and reads 1, otherwise 0.  Injecting
+this corruption into the physical planes breaks serving numerics exactly
+when a logical column was placed on a faulty physical column; a placement
+built with ``avoid_faulty=True`` is immune by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import zipfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PLACEMENT_FORMAT = "pud-placement-v1"
+
+
+class PlacementError(RuntimeError):
+    """Raised when the error-free capacity cannot hold the requested layout."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementRequest:
+    """Column demand of one packable projection."""
+
+    name: str                 # tensor path, e.g. "layers_0_dense/mixer/wi"
+    n_cols: int               # logical (output) columns per slice
+    n_slices: int = 0         # leading stacked-layer count; 0 = unstacked
+
+    @property
+    def total_cols(self) -> int:
+        return self.n_cols * max(1, self.n_slices)
+
+
+def requests_fingerprint(requests: list[PlacementRequest]) -> str:
+    """Stable short hash of a request list (keys persisted placements)."""
+    blob = json.dumps([(r.name, r.n_cols, r.n_slices) for r in requests])
+    return hashlib.sha256(blob.encode()).hexdigest()[:10]
+
+
+@dataclasses.dataclass
+class TensorPlacement:
+    """Column index maps of one placed tensor.
+
+    Shapes: unstacked tensors use ``[N]`` maps; stacked use ``[L, N]`` with a
+    per-slice region.  ``phys_cols`` are global physical column ids;
+    ``region_start``/``region_size`` define the physical window the packer
+    materializes per slice (all slices padded to one common ``region_size``
+    so stacked planes keep a uniform shape for ``lax.scan``);
+    ``faulty``/``stuck`` describe the error-prone columns inside each window
+    for the fault-injection model.
+    """
+
+    phys_cols: np.ndarray      # [L?, N] int32 global physical column ids
+    region_start: np.ndarray   # [L?] int32 window start per slice
+    region_size: int           # common padded window span P
+    faulty: np.ndarray         # [L?, P] bool — error-prone cols in window
+    stuck: np.ndarray          # [L?, P] int8 — read value of faulty cols
+
+    @property
+    def local_cols(self) -> np.ndarray:
+        """[L?, N] column ids relative to the slice window (kernel gather)."""
+        if self.phys_cols.ndim == 1:
+            return (self.phys_cols - self.region_start).astype(np.int32)
+        return (self.phys_cols
+                - self.region_start[:, None]).astype(np.int32)
+
+
+@dataclasses.dataclass
+class Placement:
+    """Device-wide placement: per-tensor maps + capacity accounting."""
+
+    entries: dict[str, TensorPlacement]
+    grid_shape: tuple[int, int, int]
+    n_cols_per_subarray: int
+    used_per_subarray: np.ndarray      # [G] int32 columns holding weights
+    usable_per_subarray: np.ndarray    # [G] int32 allocatable columns
+    avoid_faulty: bool
+
+    @property
+    def n_subarrays(self) -> int:
+        return int(np.prod(self.grid_shape))
+
+    @property
+    def used_total(self) -> int:
+        return int(self.used_per_subarray.sum())
+
+    @property
+    def usable_total(self) -> int:
+        return int(self.usable_per_subarray.sum())
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of allocatable (error-free) columns holding weights."""
+        return self.used_total / max(1, self.usable_total)
+
+    @property
+    def spilled_tensors(self) -> list[str]:
+        """Tensors whose slices cross a subarray boundary."""
+        n = self.n_cols_per_subarray
+        out = []
+        for name, tp in self.entries.items():
+            cols = tp.phys_cols
+            if (cols // n).min() != (cols // n).max():
+                out.append(name)
+        return out
+
+    def capacity_report(self) -> dict:
+        used = self.used_per_subarray
+        return {
+            "n_subarrays": self.n_subarrays,
+            "n_cols_per_subarray": self.n_cols_per_subarray,
+            "usable_cols": self.usable_total,
+            "used_cols": self.used_total,
+            "occupancy": self.occupancy,
+            "occupied_subarrays": int((used > 0).sum()),
+            "spilled_tensors": self.spilled_tensors,
+            "avoid_faulty": self.avoid_faulty,
+        }
+
+
+def _register(cls, array_fields, aux_fields):
+    def flatten(obj):
+        children = tuple(getattr(obj, f) for f in array_fields)
+        aux = tuple(getattr(obj, f) for f in aux_fields)
+        return children, aux
+
+    def unflatten(aux, children):
+        return cls(**dict(zip(array_fields, children)),
+                   **dict(zip(aux_fields, aux)))
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+
+
+_register(TensorPlacement,
+          ("phys_cols", "region_start", "faulty", "stuck"), ("region_size",))
+_register(Placement,
+          ("entries", "used_per_subarray", "usable_per_subarray"),
+          ("grid_shape", "n_cols_per_subarray", "avoid_faulty"))
+
+
+# ---------------------------------------------------------------------------
+# Allocator
+# ---------------------------------------------------------------------------
+
+
+def _stuck_values(global_cols: np.ndarray,
+                  sense_offsets: np.ndarray | None) -> np.ndarray:
+    """Stuck read value of faulty columns (pud/physics sense convention).
+
+    With the per-column sense offsets available, a negative offset lowers
+    the threshold so every read saturates to 1; positive saturates to 0.
+    From a warm cache only the masks persist — fall back to a deterministic
+    per-column value so injection stays reproducible.
+    """
+    if sense_offsets is not None:
+        flat = np.asarray(sense_offsets).reshape(-1)
+        return (flat[global_cols] < 0).astype(np.int8)
+    return (global_cols % 2).astype(np.int8)
+
+
+def plan_placement(
+    masks,                              # [G, n_cols] bool, True = error-prone
+    requests: list[PlacementRequest],
+    *,
+    avoid_faulty: bool = True,
+    sense_offsets=None,                 # [G, n_cols] float, optional
+) -> Placement:
+    """Greedy first-fit allocation of every request onto the column grid.
+
+    Requests are placed in order; each slice draws consecutive usable
+    columns from the current subarray and spills into the next when the
+    subarray is exhausted.  ``avoid_faulty=False`` builds the *identity*
+    layout (logical columns land on physical columns in raw order, faulty
+    or not) — the comparison baseline for fault injection.
+
+    Raises ``PlacementError`` when total demand exceeds usable capacity.
+    """
+    masks = np.asarray(masks, bool)
+    g, n_cols = masks.shape
+    flat_faulty = masks.reshape(-1)
+    if avoid_faulty:
+        usable_ids = np.nonzero(~flat_faulty)[0].astype(np.int64)
+    else:
+        usable_ids = np.arange(g * n_cols, dtype=np.int64)
+
+    demand = sum(r.total_cols for r in requests)
+    if demand > usable_ids.size:
+        raise PlacementError(
+            f"placement demand {demand} columns exceeds usable capacity "
+            f"{usable_ids.size} ({g} subarrays x {n_cols} cols, "
+            f"avoid_faulty={avoid_faulty})")
+
+    entries: dict[str, TensorPlacement] = {}
+    cursor = 0
+    for req in requests:
+        n_slices = max(1, req.n_slices)
+        slice_cols, starts, spans = [], [], []
+        for _ in range(n_slices):
+            cols = usable_ids[cursor:cursor + req.n_cols]
+            cursor += req.n_cols
+            slice_cols.append(cols.astype(np.int32))
+            starts.append(int(cols[0]))
+            spans.append(int(cols[-1]) - int(cols[0]) + 1)
+        region = max(spans)
+
+        faulty, stuck = [], []
+        for cols, start in zip(slice_cols, starts):
+            window = np.arange(start, start + region, dtype=np.int64)
+            in_dev = window < g * n_cols
+            f = np.zeros(region, bool)
+            f[in_dev] = flat_faulty[window[in_dev]]
+            s = np.zeros(region, np.int8)
+            s[in_dev] = _stuck_values(window[in_dev], sense_offsets)
+            faulty.append(f)
+            stuck.append(s)
+
+        if req.n_slices:
+            tp = TensorPlacement(
+                phys_cols=np.stack(slice_cols),
+                region_start=np.asarray(starts, np.int32),
+                region_size=region,
+                faulty=np.stack(faulty), stuck=np.stack(stuck))
+        else:
+            tp = TensorPlacement(
+                phys_cols=slice_cols[0],
+                region_start=np.int32(starts[0]),
+                region_size=region,
+                faulty=faulty[0], stuck=stuck[0])
+        entries[req.name] = tp
+
+    used = np.zeros(g * n_cols, bool)
+    used[usable_ids[:cursor]] = True
+    usable_per = (~masks).sum(axis=1) if avoid_faulty \
+        else np.full(g, n_cols)
+    return Placement(
+        entries=entries,
+        grid_shape=(1, 1, g),
+        n_cols_per_subarray=n_cols,
+        used_per_subarray=used.reshape(g, n_cols).sum(axis=1)
+                              .astype(np.int32),
+        usable_per_subarray=np.asarray(usable_per, np.int32),
+        avoid_faulty=avoid_faulty,
+    )
+
+
+def plan_for_grid(masks, requests, grid_shape, **kw) -> Placement:
+    """``plan_placement`` with the true (channels, banks, subarrays) shape."""
+    p = plan_placement(masks, requests, **kw)
+    return dataclasses.replace(p, grid_shape=tuple(grid_shape))
+
+
+# ---------------------------------------------------------------------------
+# Fault injection (pud/physics stuck-read model)
+# ---------------------------------------------------------------------------
+
+
+def corrupt_planes(planes: jax.Array, tp: TensorPlacement) -> jax.Array:
+    """Replace every bit stored on an error-prone column with its stuck read.
+
+    planes: [WB, K, P] (or [L, WB, K, P]); the trailing axis is the physical
+    window of ``tp``.  Column-wide corruption — every bit-plane and row of a
+    faulty column reads the same stuck value.
+    """
+    faulty = jnp.asarray(tp.faulty)[..., None, None, :]
+    stuck = jnp.asarray(tp.stuck)[..., None, None, :].astype(planes.dtype)
+    return jnp.where(faulty, stuck, planes)
+
+
+def inject_read_faults(packed_params: dict, placement: Placement) -> dict:
+    """Simulate serving from the real (faulty) device.
+
+    Walks a ``pack_for_serving`` output tree and corrupts the physical
+    planes of every placed pack per ``corrupt_planes``.  With
+    ``avoid_faulty=True`` placements the gather indices never touch a
+    corrupted column, so serving numerics are bit-identical; identity
+    placements put logical columns on faulty physical columns and break.
+    """
+
+    def walk(tree, path):
+        if not isinstance(tree, dict):
+            return tree
+        out = {}
+        for key, sub in tree.items():
+            if (key.endswith("_pud") and isinstance(sub, dict)
+                    and "col_ids" in sub):
+                name = "/".join(path + (key[: -len("_pud")],))
+                tp = placement.entries.get(name)
+                if tp is None:
+                    raise KeyError(
+                        f"packed tensor {name!r} has no placement entry "
+                        f"(have: {sorted(placement.entries)})")
+                out[key] = dict(sub, planes=corrupt_planes(sub["planes"], tp))
+            elif isinstance(sub, dict):
+                out[key] = walk(sub, path + (key,))
+            else:
+                out[key] = sub
+        return out
+
+    return walk(packed_params, ())
+
+
+# ---------------------------------------------------------------------------
+# Serialization (used by runtime/calib_cache.py)
+# ---------------------------------------------------------------------------
+
+
+def save_placement_npz(path, placement: Placement) -> None:
+    """Write a Placement to ``path`` as a single .npz (no pickle)."""
+    meta = {
+        "format": PLACEMENT_FORMAT,
+        "names": list(placement.entries),
+        "region_sizes": [placement.entries[n].region_size
+                         for n in placement.entries],
+        "grid_shape": list(placement.grid_shape),
+        "n_cols_per_subarray": placement.n_cols_per_subarray,
+        "avoid_faulty": placement.avoid_faulty,
+    }
+    arrays = {
+        "meta": np.array(json.dumps(meta)),
+        "used": np.asarray(placement.used_per_subarray, np.int32),
+        "usable": np.asarray(placement.usable_per_subarray, np.int32),
+    }
+    for i, name in enumerate(placement.entries):
+        tp = placement.entries[name]
+        arrays[f"e{i}_phys"] = np.asarray(tp.phys_cols, np.int32)
+        arrays[f"e{i}_start"] = np.asarray(tp.region_start, np.int32)
+        arrays[f"e{i}_faulty"] = np.asarray(tp.faulty, bool)
+        arrays[f"e{i}_stuck"] = np.asarray(tp.stuck, np.int8)
+    with open(path, "wb") as f:
+        np.savez(f, **arrays)
+
+
+def load_placement_npz(path) -> Placement | None:
+    """Read a Placement back; None on any corruption or format mismatch."""
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            meta = json.loads(str(z["meta"]))
+            if meta.get("format") != PLACEMENT_FORMAT:
+                return None
+            entries = {}
+            for i, name in enumerate(meta["names"]):
+                entries[name] = TensorPlacement(
+                    phys_cols=z[f"e{i}_phys"],
+                    region_start=z[f"e{i}_start"],
+                    region_size=int(meta["region_sizes"][i]),
+                    faulty=z[f"e{i}_faulty"],
+                    stuck=z[f"e{i}_stuck"])
+            return Placement(
+                entries=entries,
+                grid_shape=tuple(meta["grid_shape"]),
+                n_cols_per_subarray=int(meta["n_cols_per_subarray"]),
+                used_per_subarray=z["used"],
+                usable_per_subarray=z["usable"],
+                avoid_faulty=bool(meta["avoid_faulty"]))
+    except (OSError, ValueError, KeyError, EOFError, json.JSONDecodeError,
+            zipfile.BadZipFile):
+        return None

@@ -9,14 +9,22 @@ physics fingerprint):
   <root>/<device_id>/<table_key>/
       levels.npy        [G, n_cols] int32 ladder level per column
       ecr.npy           [G] float32 measured per-subarray ECR (optional)
+      masks.npy         [G, n_cols] bool per-column error-prone mask
+                        (optional; what column placement consumes)
+      placements/       <name>.npz serialized ``pud.placement.Placement``s,
+                        keyed by the packing-request fingerprint — the
+                        physical layout serving actually runs on
       manifest.json     format version, grid shape, frac_counts, params
                         fingerprint, crc32, user metadata
 
 Same durability idioms as runtime/checkpoint.py: writes go to a ``.tmp-<pid>``
-directory and are ``os.rename``d into place, so a crash mid-save can never
-leave a torn table; loads verify format version + shape + fingerprint and
-report a miss (None) on any mismatch, which callers treat as "recalibrate".
-A ``format`` bump invalidates old entries instead of misreading them.
+directory (files: ``.tmp-<pid>`` suffix) and are ``os.rename``/``os.replace``d
+into place, so a crash mid-save can never leave a torn table; loads verify
+format version + shape + fingerprint and report a miss (None) on any
+mismatch, which callers treat as "recalibrate".  A ``format`` bump
+invalidates old entries instead of misreading them — v1 tables lacked the
+error-prone masks, so they read as misses under v2 and the device is simply
+re-characterized once.
 """
 from __future__ import annotations
 
@@ -25,12 +33,13 @@ import hashlib
 import json
 import os
 import pathlib
+import re
 import shutil
 import zlib
 
 import numpy as np
 
-FORMAT = "fleet-calib-v1"
+FORMAT = "fleet-calib-v2"
 
 
 def params_fingerprint(params) -> str:
@@ -53,7 +62,12 @@ class CalibrationTable:
     device_id: str
     levels: np.ndarray                # [G, n_cols] int32
     ecr: np.ndarray | None            # [G] float32
+    masks: np.ndarray | None          # [G, n_cols] bool (True = error-prone)
     metadata: dict
+
+
+def _safe_name(name: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]", "_", name)
 
 
 class CalibrationTableCache:
@@ -67,6 +81,7 @@ class CalibrationTableCache:
 
     def save(self, device_id: str, cfg, params, levels: np.ndarray,
              ecr: np.ndarray | None = None,
+             masks: np.ndarray | None = None,
              metadata: dict | None = None) -> pathlib.Path:
         final = self._entry_dir(device_id, cfg, params)
         # sweep staging dirs of crashed earlier saves of this entry
@@ -89,11 +104,37 @@ class CalibrationTableCache:
         }
         if ecr is not None:
             np.save(tmp / "ecr.npy", np.asarray(ecr, np.float32))
+        if masks is not None:
+            np.save(tmp / "masks.npy", np.asarray(masks, bool))
         (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
         if final.exists():
             shutil.rmtree(final)
         final.parent.mkdir(parents=True, exist_ok=True)
         os.rename(tmp, final)
+        return final
+
+    def save_placement(self, device_id: str, cfg, params, name: str,
+                       placement) -> pathlib.Path:
+        """Persist one ``pud.placement.Placement`` under the table entry.
+
+        ``name`` keys the placement (use the packing-request fingerprint);
+        the write is atomic (tmp file + replace).  Requires the table entry
+        to exist — a placement without its masks is meaningless.
+        """
+        from repro.pud.placement import save_placement_npz
+        entry = self._entry_dir(device_id, cfg, params)
+        if not (entry / "manifest.json").exists():
+            raise FileNotFoundError(
+                f"no calibration table for {device_id!r} at {entry}; "
+                "save the table before its placements")
+        d = entry / "placements"
+        d.mkdir(exist_ok=True)
+        final = d / f"{_safe_name(name)}.npz"
+        for stale in d.glob(final.name + ".tmp-*"):   # crashed earlier saves
+            stale.unlink(missing_ok=True)
+        tmp = final.with_name(final.name + f".tmp-{os.getpid()}")
+        save_placement_npz(tmp, placement)
+        os.replace(tmp, final)
         return final
 
     # -- load ---------------------------------------------------------------
@@ -130,8 +171,32 @@ class CalibrationTableCache:
                 ecr = np.load(d / "ecr.npy")
             except (OSError, ValueError):
                 ecr = None
+        masks = None
+        if (d / "masks.npy").exists():
+            try:
+                masks = np.load(d / "masks.npy")
+            except (OSError, ValueError):
+                masks = None
+            if masks is not None and tuple(masks.shape) != want_shape:
+                masks = None
         return CalibrationTable(device_id=device_id, levels=levels, ecr=ecr,
+                                masks=masks,
                                 metadata=manifest.get("metadata", {}))
+
+    def load_placement(self, device_id: str, cfg, params, name: str):
+        """One persisted Placement, or None on absence/corruption/mismatch."""
+        from repro.pud.placement import load_placement_npz
+        path = (self._entry_dir(device_id, cfg, params) / "placements"
+                / f"{_safe_name(name)}.npz")
+        if not path.exists():
+            return None
+        placement = load_placement_npz(path)
+        if placement is None:
+            return None
+        if (placement.n_cols_per_subarray != cfg.n_cols
+                or placement.n_subarrays != cfg.n_subarrays_total):
+            return None
+        return placement
 
     # -- inspection ---------------------------------------------------------
 
@@ -148,6 +213,12 @@ class CalibrationTableCache:
             except (OSError, json.JSONDecodeError):
                 continue
         return out
+
+    def placements(self, device_id: str, cfg, params) -> list[str]:
+        """Names of the placements persisted for one table entry."""
+        d = self._entry_dir(device_id, cfg, params) / "placements"
+        return sorted(p.stem for p in d.glob("*.npz")
+                      if ".tmp-" not in p.name) if d.exists() else []
 
     def evict(self, device_id: str) -> int:
         """Drop every table of one device; returns the number removed."""

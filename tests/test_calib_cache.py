@@ -1,0 +1,132 @@
+"""Calibration-cache failure paths: every corruption/mismatch mode must read
+as a miss and fall back to recalibration — never raise, never serve a stale
+or torn table."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.calibrate import CalibrationConfig
+from repro.core.fleet import FleetConfig, load_or_calibrate
+from repro.pud.physics import PhysicsParams
+from repro.runtime.calib_cache import (FORMAT, CalibrationTableCache,
+                                       params_fingerprint, table_key)
+
+P = PhysicsParams()
+CFG = FleetConfig(n_channels=1, n_banks=1, n_subarrays=2, n_cols=128)
+CAL = CalibrationConfig(n_iterations=4, n_samples=64)
+KEY = jax.random.key(41)
+
+
+@pytest.fixture
+def warm(tmp_path):
+    """A cache warmed by one real load_or_calibrate miss."""
+    cache = CalibrationTableCache(tmp_path)
+    levels, ecr, masks, hit = load_or_calibrate(
+        cache, "dev", KEY, CFG, P, CAL, n_trials_ecr=128)
+    assert not hit
+    entry = tmp_path / "dev" / table_key(CFG, P)
+    assert (entry / "manifest.json").exists()
+    return cache, entry, (np.asarray(levels), np.asarray(ecr),
+                          np.asarray(masks))
+
+
+def _reload(cache):
+    return load_or_calibrate(cache, "dev", KEY, CFG, P, CAL,
+                             n_trials_ecr=128)
+
+
+def test_warm_hit_is_deterministic(warm):
+    cache, _, (levels, ecr, masks) = warm
+    lv, e, m, hit = _reload(cache)
+    assert hit
+    np.testing.assert_array_equal(np.asarray(lv), levels)
+    np.testing.assert_allclose(np.asarray(e), ecr)
+    np.testing.assert_array_equal(np.asarray(m), masks)
+
+
+def test_torn_levels_fall_back_to_recalibration(warm):
+    cache, entry, (levels, _, _) = warm
+    payload = entry / "levels.npy"
+    payload.write_bytes(payload.read_bytes()[:40])    # truncated mid-write
+    assert cache.load("dev", CFG, P) is None          # miss, not a raise
+    lv, _, _, hit = _reload(cache)
+    assert not hit                                    # recalibrated ...
+    np.testing.assert_array_equal(np.asarray(lv), levels)  # ... same result
+    assert cache.load("dev", CFG, P) is not None      # and re-persisted
+
+
+def test_corrupt_manifest_falls_back(warm):
+    cache, entry, _ = warm
+    (entry / "manifest.json").write_text("{not json")
+    assert cache.load("dev", CFG, P) is None
+    _, _, _, hit = _reload(cache)
+    assert not hit
+
+
+def test_version_mismatch_falls_back(warm):
+    """A format bump must invalidate old entries instead of misreading."""
+    cache, entry, _ = warm
+    manifest = json.loads((entry / "manifest.json").read_text())
+    assert manifest["format"] == FORMAT
+    manifest["format"] = "fleet-calib-v1"             # pre-masks era
+    (entry / "manifest.json").write_text(json.dumps(manifest))
+    assert cache.load("dev", CFG, P) is None
+    _, _, _, hit = _reload(cache)
+    assert not hit
+    # the recalibration re-saved under the current format
+    got = json.loads((entry / "manifest.json").read_text())
+    assert got["format"] == FORMAT
+
+
+def test_fingerprint_mismatch_falls_back(warm):
+    """Changed physics constants can never silently reuse a stale table."""
+    cache, entry, _ = warm
+    manifest = json.loads((entry / "manifest.json").read_text())
+    manifest["params_fingerprint"] = "0" * 12
+    (entry / "manifest.json").write_text(json.dumps(manifest))
+    assert manifest["params_fingerprint"] != params_fingerprint(P)
+    assert cache.load("dev", CFG, P) is None
+    _, _, _, hit = _reload(cache)
+    assert not hit
+
+
+def test_missing_masks_treated_as_miss(warm):
+    """v2 tables without masks can't drive placement: re-identify."""
+    cache, entry, _ = warm
+    (entry / "masks.npy").unlink()
+    table = cache.load("dev", CFG, P)
+    assert table is not None and table.masks is None  # load is lenient ...
+    _, _, masks, hit = _reload(cache)
+    assert not hit and masks is not None              # ... the glue is not
+
+
+def test_wrong_shape_masks_treated_as_missing(warm):
+    cache, entry, _ = warm
+    np.save(entry / "masks.npy", np.zeros((1, 3), bool))
+    table = cache.load("dev", CFG, P)
+    assert table is not None and table.masks is None
+
+
+def test_evict_then_recalibrate(warm):
+    cache, entry, _ = warm
+    assert cache.evict("dev") == 1
+    assert cache.load("dev", CFG, P) is None
+    assert cache.evict("dev") == 0                    # idempotent
+    _, _, _, hit = _reload(cache)
+    assert not hit
+    assert len(cache.entries()) == 1
+
+
+def test_crashed_staging_dir_swept_on_save(warm, tmp_path):
+    cache, entry, _ = warm
+    torn = entry.with_name(entry.name + ".tmp-9999")
+    torn.mkdir()
+    (torn / "levels.npy").write_bytes(b"garbage")
+    assert len(cache.entries()) == 1                  # staging is invisible
+    lv, ecr, masks, hit = _reload(cache)
+    assert hit                                        # real entry untouched
+    cache.save("dev", CFG, P, np.asarray(lv), ecr=np.asarray(ecr),
+               masks=np.asarray(masks))
+    assert not torn.exists()                          # gc on the next save

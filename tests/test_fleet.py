@@ -134,14 +134,18 @@ def test_fleet_ecr_row_matches_single_subarray_protocol():
 
 def test_cache_round_trip(tmp_path):
     cache = CalibrationTableCache(tmp_path)
-    levels = np.random.default_rng(0).integers(
+    rng = np.random.default_rng(0)
+    levels = rng.integers(
         0, 8, (CFG.n_subarrays_total, CFG.n_cols)).astype(np.int32)
     ecr = np.linspace(0.01, 0.05, CFG.n_subarrays_total).astype(np.float32)
-    cache.save("dimm7", CFG, P, levels, ecr=ecr, metadata={"method": "fused"})
+    masks = rng.random((CFG.n_subarrays_total, CFG.n_cols)) < 0.05
+    cache.save("dimm7", CFG, P, levels, ecr=ecr, masks=masks,
+               metadata={"method": "fused"})
     hit = cache.load("dimm7", CFG, P, verify=True)
     assert hit is not None
     np.testing.assert_array_equal(hit.levels, levels)
     np.testing.assert_array_equal(hit.ecr, ecr)
+    np.testing.assert_array_equal(hit.masks, masks)
     assert hit.metadata["method"] == "fused"
     # keyed misses: unknown device, different ladder, different physics
     assert cache.load("other", CFG, P) is None
@@ -163,14 +167,18 @@ def test_load_or_calibrate_hits_without_recalibrating(tmp_path):
     cache = CalibrationTableCache(tmp_path)
     key = jax.random.key(29)
     small = FleetConfig(n_channels=1, n_banks=1, n_subarrays=2, n_cols=256)
-    lv1, ecr1, hit1 = load_or_calibrate(
+    lv1, ecr1, masks1, hit1 = load_or_calibrate(
         cache, "d0", key, small, P, CAL, n_trials_ecr=256)
     assert not hit1
-    lv2, ecr2, hit2 = load_or_calibrate(
+    lv2, ecr2, masks2, hit2 = load_or_calibrate(
         cache, "d0", key, small, P, CAL, n_trials_ecr=256)
     assert hit2
     np.testing.assert_array_equal(np.asarray(lv1), np.asarray(lv2))
     np.testing.assert_allclose(np.asarray(ecr1), np.asarray(ecr2))
+    np.testing.assert_array_equal(np.asarray(masks1), np.asarray(masks2))
+    # the persisted masks are the ECR measurement's error-prone columns
+    np.testing.assert_allclose(np.asarray(masks1).mean(axis=1),
+                               np.asarray(ecr1), atol=1e-6)
 
 
 def test_fleet_throughput_and_perf_model():
