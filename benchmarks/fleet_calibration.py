@@ -31,16 +31,16 @@ else:  # run directly: python benchmarks/fleet_calibration.py
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
     from common import emit, ratio_line
 
+from repro.api import PUDSession
 from repro.core.calibrate import CalibrationConfig, identify_calibration
 from repro.core.ecr import fleet_ecr_summary, measure_ecr_fleet, \
     measure_ecr_maj5
 from repro.core.fleet import (FleetConfig, calibrate_fleet,
-                              fleet_calib_charges, load_or_calibrate,
-                              manufacture_fleet, subarray_key)
+                              fleet_calib_charges, manufacture_fleet,
+                              subarray_key)
 from repro.core.offsets import baseline_charges
 from repro.core.throughput import fleet_throughput
 from repro.pud.physics import PhysicsParams
-from repro.runtime.calib_cache import CalibrationTableCache
 
 PAPER_ADD_GAIN = 1.81   # Table I: ADD8 throughput gain T210 vs B300
 PAPER_MUL_GAIN = 1.88   # Table I: MUL8 throughput gain
@@ -146,16 +146,16 @@ def main(argv=None) -> int:
     assert abs(gain_fleet - gain_single) < 0.05 * gain_single, (
         gain_fleet, gain_single)
 
-    # --- cached-table startup (what serve/gemv do) ------------------------
+    # --- cached-table startup (what a PUDSession does) --------------------
     with tempfile.TemporaryDirectory() as d:
-        cache = CalibrationTableCache(d)
-        cache.save("bench0", cfg, params, np.asarray(cal.levels),
-                   ecr=np.asarray(ecr_tune), masks=np.asarray(masks))
-        t0 = time.time()
-        lv_hit, ecr_hit, _masks_hit, hit = load_or_calibrate(
-            cache, "bench0", key, cfg, params, cal_cfg)
-        t_hit = time.time() - t0
-        assert hit and (np.asarray(lv_hit) == np.asarray(cal.levels)).all()
+        session = PUDSession.open(grid=cfg, cache_dir=d, device_id="bench0",
+                                  calib=cal_cfg, key=key)
+        session.cache.save("bench0", cfg, params, np.asarray(cal.levels),
+                           ecr=np.asarray(ecr_tune), masks=np.asarray(masks))
+        state = session.calibrate()
+        t_hit = state.wall_s
+        assert state.cache_hit
+        assert (np.asarray(state.levels) == np.asarray(cal.levels)).all()
         print(f"  cached-table startup: HIT in {t_hit:.3f}s "
               f"(vs {t_fleet:.1f}s recalibration) — serve starts "
               f"{t_fleet / max(t_hit, 1e-3):.0f}x faster")

@@ -5,23 +5,22 @@ to the bit-serial MAC schedule of pud/bitserial.py priced on DDR4-2133).
 This is the paper's own motivation ("MVDRAM accelerates matrix-vector
 multiplication for LLM inference") quantified per model: tokens/s a
 4-channel DDR4 PUD system sustains for batch-1 decode with 8-bit weights,
-and how much of that rate PUDTune's extra error-free columns buy.
+and how much of that rate PUDTune's extra error-free columns buy.  Rates
+come from ``PUDSession``s pinned at the Table-I operating points
+(``PUDSession.at_operating_point``) — swap in ``PUDSession.open`` with a
+``cache_dir`` to price a *measured* device instead.
 """
 from __future__ import annotations
 
+from repro.api import ECR_BASELINE_B300, ECR_PUDTUNE_T210, PUDSession
 from repro.configs import all_archs, get
-from repro.pud.gemv import PUDPerfModel
 
-from .common import emit, parse_scale
-
-# Table-I operating points (measured in benchmarks/table1.py)
-ECR_BASELINE = 0.466
-ECR_PUDTUNE = 0.033
+from .common import emit, parse_scale  # noqa: F401  (parse_scale: CLI compat)
 
 
 def run(scale=None) -> list[dict]:
-    base = PUDPerfModel(error_free_frac=1 - ECR_BASELINE)
-    tune = PUDPerfModel(error_free_frac=1 - ECR_PUDTUNE)
+    base = PUDSession.at_operating_point(ECR_BASELINE_B300)
+    tune = PUDSession.at_operating_point(ECR_PUDTUNE_T210)
     rows = []
     for arch in all_archs():
         spec = get(arch)
@@ -31,7 +30,8 @@ def run(scale=None) -> list[dict]:
             "active_params_B": spec.n_active_params / 1e9,
             "baseline_tok_s": base.tokens_per_second(flops_tok),
             "pudtune_tok_s": tune.tokens_per_second(flops_tok),
-            "gain": tune.speedup_vs(base),
+            "gain": tune.tuned_perf_model().speedup_vs(
+                base.tuned_perf_model()),
         })
     return rows
 

@@ -1,8 +1,8 @@
 """Column-placement benchmark: what faulty-column avoidance costs and buys.
 
-Calibrates a small fleet, measures its per-column error-prone masks, places
-a smoke model's packable projections onto the error-free columns
-(repro/pud/placement.py), and reports:
+Opens a ``PUDSession`` on a small fleet, calibrates it in memory, packs a
+smoke model's packable projections onto the error-free columns, and
+reports:
 
   * capacity/occupancy of the placement (used vs usable error-free columns),
   * serving rate priced three ways — mean-ECR fleet model, placement-derived
@@ -15,21 +15,13 @@ the placement subsystem (``python -m benchmarks.run --only placement``).
 """
 from __future__ import annotations
 
-import time
-
-import jax
 import numpy as np
 
+from repro.api import (ATTN_PACKABLE, CalibrationConfig, FFN_PACKABLE,
+                       FleetConfig, PUDGemvConfig, PUDSession,
+                       packing_requests)
 from repro.configs import get
-from repro.core.calibrate import CalibrationConfig
-from repro.core.ecr import measure_ecr_fleet
-from repro.core.fleet import (FleetConfig, calibrate_fleet,
-                              fleet_calib_charges, manufacture_fleet)
 from repro.models.params import init_params
-from repro.pud.gemv import (ATTN_PACKABLE, FFN_PACKABLE, FleetPerfModel,
-                            PUDGemvConfig)
-from repro.pud.packer import packing_requests
-from repro.pud.physics import PhysicsParams
 from repro.pud.placement import plan_for_grid
 
 from .common import emit
@@ -38,56 +30,46 @@ ARCH = "qwen3-1.7b"
 
 
 def run(scale=None) -> list[dict]:
-    params = PhysicsParams()
-    cfg = FleetConfig(n_channels=1, n_banks=2, n_subarrays=4, n_cols=512)
-    key = jax.random.key(11)
+    import jax
 
-    t0 = time.time()
-    offsets = manufacture_fleet(key, cfg, params)
-    cal = calibrate_fleet(key, offsets, cfg, params,
-                          CalibrationConfig(n_iterations=8, n_samples=128),
-                          method="reference")
-    ladder = cfg.ladder(params)
-    ecr, masks = measure_ecr_fleet(
-        jax.random.fold_in(key, 1), offsets,
-        fleet_calib_charges(ladder, cal.levels, params), params,
-        ladder.n_fracs, n_trials=512, chunk=128)
-    t_cal = time.time() - t0
+    cfg = FleetConfig(n_channels=1, n_banks=2, n_subarrays=4, n_cols=512)
+    session = PUDSession.open(
+        ARCH, grid=cfg, key=11,
+        calib=CalibrationConfig(n_iterations=8, n_samples=128),
+        n_trials_ecr=512)
+    state = session.calibrate()          # in-memory: no cache_dir given
 
     model = get(ARCH).make_smoke()
     weights = init_params(model.param_defs(), jax.random.key(0))
     gcfg = PUDGemvConfig(packable=FFN_PACKABLE + ATTN_PACKABLE)
-    reqs = packing_requests(weights, gcfg)
-    placed = plan_for_grid(masks, reqs, cfg.grid_shape,
-                           sense_offsets=offsets)
-    identity = plan_for_grid(masks, reqs, cfg.grid_shape,
-                             avoid_faulty=False, sense_offsets=offsets)
+    session.pack(weights, gcfg, name=f"{ARCH}-smoke")
+    assert session.placement_status == "planned", session.placement_error
 
-    flops_tok = 2 * get(ARCH).n_active_params
-    n_fracs = ladder.n_fracs
-    mean_model = FleetPerfModel.from_table(np.asarray(ecr), n_fracs=n_fracs)
-    placed_model = FleetPerfModel.from_placement(placed, n_fracs=n_fracs)
     # the no-placement layout computes on every column it touches, faulty
     # included — only its error-free fraction produces usable results
+    reqs = packing_requests(weights, gcfg)
+    masks = np.asarray(state.masks)
+    identity = plan_for_grid(masks, reqs, cfg.grid_shape, avoid_faulty=False)
     ident_cols = np.concatenate(
         [np.asarray(tp.phys_cols).reshape(-1)
          for tp in identity.entries.values()])
-    faulty_frac = float(np.asarray(masks).reshape(-1)[ident_cols].mean())
+    faulty_frac = float(masks.reshape(-1)[ident_cols].mean())
 
-    rep = placed.capacity_report()
+    perf = session.perf_report()
+    rep = perf["placement"]
     rows = [{
         "arch": ARCH,
         "subarrays": cfg.n_subarrays_total,
         "cols_per_subarray": cfg.n_cols,
-        "mean_ecr": float(np.asarray(ecr).mean()),
+        "mean_ecr": state.mean_ecr,
         "demand_cols": sum(r.total_cols for r in reqs),
         "usable_cols": rep["usable_cols"],
         "occupancy": rep["occupancy"],
         "spilled_tensors": len(rep["spilled_tensors"]),
         "unplaced_faulty_frac": faulty_frac,
-        "tok_s_mean_ecr": mean_model.tokens_per_second(flops_tok),
-        "tok_s_placed": placed_model.tokens_per_second(flops_tok),
-        "calib_s": t_cal,
+        "tok_s_mean_ecr": perf["tuned_tok_s"],
+        "tok_s_placed": perf["placed_tok_s"],
+        "calib_s": state.wall_s,
     }]
     return rows
 

@@ -1,49 +1,46 @@
-"""PUDTune quickstart: calibrate a simulated DRAM subarray, watch the
-error-prone column ratio collapse, and price the throughput gain (Eq. 1).
+"""PUDTune quickstart: open a session on a simulated DRAM device, calibrate
+it, watch the error-prone column ratio collapse, and price the throughput
+gain (Eq. 1).
 
     PYTHONPATH=src python examples/quickstart.py
-"""
-import jax
-import jax.numpy as jnp
 
-from repro.core.calibrate import CalibrationConfig, identify_calibration
-from repro.core.ecr import measure_ecr_maj5
-from repro.core.offsets import (baseline_charges, levels_to_charges,
-                                make_ladder)
+``PUDSession`` owns the whole chain (manufacture -> Algorithm 1 -> ECR/mask
+measurement -> rate models); this example runs it in memory — pass
+``cache_dir=`` to ``PUDSession.open`` and the identified table persists
+across restarts instead.
+"""
+import sys
+
+from repro.api import FleetConfig, PUDSession
 from repro.pud.bitserial import maj5_standalone_counts
-from repro.pud.physics import PhysicsParams
 from repro.pud.timing import SystemConfig, throughput_ops
 
-N_COLS = 8192
-params = PhysicsParams()          # constants fitted once to the paper's Table I
 system = SystemConfig()           # 4-channel DDR4-2133, 16-bank-parallel PUD
 
-# 1. "Manufacture" a subarray: per-column sense-amp threshold offsets.
-k_mfg, k_cal, k_b, k_t = jax.random.split(jax.random.key(0), 4)
-sense_offset = params.sigma_static * jax.random.normal(
-    k_mfg, (N_COLS,), jnp.float32)
+# 1. Open a session on a small simulated device: 2 subarrays x 4096 columns,
+#    T_{2,1,0} offset ladder (the paper's configuration).
+session = PUDSession.open(
+    FleetConfig(n_channels=1, n_banks=1, n_subarrays=2, n_cols=4096), key=0)
 
-# 2. Baseline B_{3,0,0}: neutral row (3 Fracs) + constant 0/1 rows.
-ecr_base, _ = measure_ecr_maj5(
-    k_b, sense_offset, baseline_charges(3, N_COLS, params), params, n_fracs=3)
+# 2. Baseline B_{3,0,0}: neutral rows only, no calibration.
+ecr_base = session.baseline_ecr()
 
-# 3. PUDTune T_{2,1,0}: run Algorithm 1 (20 iters x 512 samples), then
-#    re-measure with the identified per-column calibration data.
-ladder = make_ladder((2, 1, 0), params)
-levels = identify_calibration(
-    k_cal, sense_offset, ladder, params, CalibrationConfig())
-ecr_tune, _ = measure_ecr_maj5(
-    k_t, sense_offset, levels_to_charges(ladder, levels, params), params,
-    n_fracs=ladder.n_fracs)
+# 3. PUDTune T_{2,1,0}: Algorithm 1 over the whole grid (one jitted call),
+#    then the per-column ECR re-measured with the identified offsets.
+state = session.calibrate()
+ecr_tune = state.mean_ecr
 
 # 4. Eq. 1: throughput = error-free columns / MAJ5 latency.
-tp = lambda ecr, nf: throughput_ops(
-    maj5_standalone_counts(nf), (1 - ecr) * system.n_cols_per_subarray,
-    system)
+tp = lambda ecr: throughput_ops(
+    maj5_standalone_counts(session.n_fracs),
+    (1 - ecr) * system.n_cols_per_subarray, system)
 
-print(f"offset ladder T210: {[f'{o:+.3f}' for o in ladder.offsets_units]}")
+print(f"offset ladder T210: "
+      f"{[f'{o:+.3f}' for o in session.ladder.offsets_units]}")
 print(f"ECR   baseline {100 * ecr_base:5.1f}%  (paper: 46.6%)")
 print(f"ECR   PUDTune  {100 * ecr_tune:5.1f}%  (paper:  3.3%)")
-print(f"MAJ5  baseline {tp(ecr_base, 3) / 1e12:.2f} TOPS (paper: 0.89)")
-print(f"MAJ5  PUDTune  {tp(ecr_tune, 3) / 1e12:.2f} TOPS (paper: 1.62)")
-print(f"gain  {tp(ecr_tune, 3) / tp(ecr_base, 3):.2f}x      (paper: 1.81x)")
+print(f"MAJ5  baseline {tp(ecr_base) / 1e12:.2f} TOPS (paper: 0.89)")
+print(f"MAJ5  PUDTune  {tp(ecr_tune) / 1e12:.2f} TOPS (paper: 1.62)")
+print(f"gain  {tp(ecr_tune) / tp(ecr_base):.2f}x      (paper: 1.81x)")
+
+sys.exit(0)

@@ -1,0 +1,58 @@
+"""Public API surface of the PUDTune reproduction.
+
+One import site for the serving stack — the session facade, the typed pack
+pytrees, the execution-backend registry, and the placement/config types they
+speak.  Workloads should depend on this module; the deeper layers
+(``repro.pud``, ``repro.kernels``, ``repro.core``) stay free to refactor.
+
+    from repro.api import PUDSession, PUDGemvConfig
+
+    session = PUDSession.open("qwen3-1.7b", grid=FleetConfig(...),
+                              cache_dir="~/.pud-cache")
+    session.calibrate()
+    packed = session.pack(params, PUDGemvConfig(weight_bits=4))
+    y = session.linear(x, "unembed/w", backend="reference")
+
+See docs/api.md for the lifecycle and the old->new call-site migration
+table.
+"""
+from __future__ import annotations
+
+from repro.core.calibrate import CalibrationConfig
+from repro.core.fleet import FleetConfig, load_or_calibrate
+from repro.kernels.backends import (Backend, backend_names, get_backend,
+                                    register_backend)
+from repro.pud.gemv import (ATTN_PACKABLE, ECR_BASELINE_B300,
+                            ECR_PUDTUNE_T210, FFN_PACKABLE, FleetPerfModel,
+                            PUDGemvConfig, PUDPerfModel, pack_linear,
+                            pud_linear)
+from repro.pud.packed import (PackedModel, PackedTensor, as_packed_tensor,
+                              packed_bytes)
+from repro.pud.packer import pack_for_serving, pack_model, packing_requests
+from repro.pud.physics import PhysicsParams
+from repro.pud.placement import (Placement, PlacementError, PlacementRequest,
+                                 TensorPlacement, inject_read_faults)
+from repro.runtime.calib_cache import CalibrationTableCache
+from repro.runtime.session import CalibrationState, PUDSession
+
+__all__ = [
+    # session lifecycle
+    "PUDSession", "CalibrationState",
+    # configs
+    "PUDGemvConfig", "FleetConfig", "CalibrationConfig", "PhysicsParams",
+    "FFN_PACKABLE", "ATTN_PACKABLE",
+    # typed packs
+    "PackedTensor", "PackedModel", "as_packed_tensor", "packed_bytes",
+    "pack_model", "packing_requests",
+    # backends
+    "Backend", "register_backend", "get_backend", "backend_names",
+    # placement
+    "Placement", "TensorPlacement", "PlacementRequest", "PlacementError",
+    "inject_read_faults",
+    # perf models + Table-I operating points
+    "PUDPerfModel", "FleetPerfModel",
+    "ECR_BASELINE_B300", "ECR_PUDTUNE_T210",
+    # persistence + legacy shims
+    "CalibrationTableCache", "load_or_calibrate",
+    "pack_for_serving", "pack_linear", "pud_linear",
+]

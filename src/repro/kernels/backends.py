@@ -1,0 +1,94 @@
+"""Named execution backends for the bit-plane GeMV.
+
+The serving stack picks *where* a packed GeMV executes by name instead of
+threading ``interpret``/oracle flags through every call site:
+
+  * ``pallas``    — the Pallas TPU kernel; lowers natively on TPU and falls
+    back to interpret mode elsewhere (this container is CPU-only).
+  * ``interpret`` — the same Pallas kernel forced through the interpreter,
+    regardless of platform.  Useful for debugging kernel changes on TPU.
+  * ``reference`` — the pure-jnp oracle (kernels/ref.py).
+
+Every backend implements the same two entry points (``gemv`` for the logical
+layout, ``gemv_placed`` for the column-placed layout) and all are bit-exact
+against each other — enforced by tests/test_session.py across placed and
+unplaced packs.  ``PUDSession`` selects a backend per session and per call;
+register custom ones (e.g. a future GPU lowering) with ``register_backend``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+
+from . import ref
+from .bitplane_gemv import bitplane_gemv, bitplane_gemv_placed
+
+DEFAULT_BACKEND = "pallas"
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One named lowering of the bit-plane GeMV.
+
+    ``gemv(x, planes, mode)``: [B, K] int8 x [WB, K, N] planes -> [B, N]
+    int32.  ``gemv_placed(x, planes, col_ids, mode)``: same, with planes in
+    the physical-window layout and the logical->window gather map.
+    """
+
+    name: str
+    gemv: Callable[..., jax.Array]
+    gemv_placed: Callable[..., jax.Array]
+
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend) -> Backend:
+    if backend.name in _REGISTRY:
+        raise ValueError(f"backend {backend.name!r} already registered")
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown backend {name!r}; registered: "
+                       f"{backend_names()}") from None
+
+
+def backend_names() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def _pallas_interpret() -> bool:
+    # Lower natively only where the BlockSpecs actually target hardware.
+    return jax.default_backend() != "tpu"
+
+
+register_backend(Backend(
+    name="pallas",
+    gemv=lambda x, planes, mode="folded": bitplane_gemv(
+        x, planes, mode=mode, interpret=_pallas_interpret()),
+    gemv_placed=lambda x, planes, col_ids, mode="folded":
+        bitplane_gemv_placed(x, planes, col_ids, mode=mode,
+                             interpret=_pallas_interpret()),
+))
+
+register_backend(Backend(
+    name="interpret",
+    gemv=lambda x, planes, mode="folded": bitplane_gemv(
+        x, planes, mode=mode, interpret=True),
+    gemv_placed=lambda x, planes, col_ids, mode="folded":
+        bitplane_gemv_placed(x, planes, col_ids, mode=mode, interpret=True),
+))
+
+register_backend(Backend(
+    name="reference",
+    gemv=lambda x, planes, mode="folded": ref.bitplane_gemv_ref(x, planes),
+    gemv_placed=lambda x, planes, col_ids, mode="folded":
+        ref.bitplane_gemv_placed_ref(x, planes, col_ids),
+))

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .backends import get_backend
 from .bitplane_gemv import bitplane_gemv, bitplane_gemv_placed
 from .majx import majx_sense
 
@@ -33,18 +34,22 @@ def pud_gemv(
     mode: str = "folded",
     interpret: bool = True,
     col_ids: jax.Array | None = None,   # [N] window map -> placed kernel
+    backend: str | None = None,         # named backend (kernels/backends.py)
 ) -> jax.Array:
     """Quantize -> bit-plane GeMV -> dequantize. Returns [B, N] float32.
 
     With ``col_ids`` the planes are the physically-placed window layout
     (repro/pud/placement.py) and the column gather runs fused in the kernel.
+    ``backend`` names a registered lowering; without one the legacy
+    ``interpret`` flag picks between the interpreted and native Pallas
+    kernel.  All backends are bit-exact against each other.
     """
     xq, x_scale = quantize_activations(x)
+    be = get_backend(backend or ("interpret" if interpret else "pallas"))
     if col_ids is not None:
-        acc = bitplane_gemv_placed(xq, planes, col_ids, mode=mode,
-                                   interpret=interpret)
+        acc = be.gemv_placed(xq, planes, col_ids, mode)
     else:
-        acc = bitplane_gemv(xq, planes, mode=mode, interpret=interpret)
+        acc = be.gemv(xq, planes, mode)
     return acc.astype(jnp.float32) * x_scale * w_scale
 
 

@@ -19,6 +19,9 @@ whole chain: calibration masks -> column placement (error-free physical
 columns only, repro/pud/placement.py) -> physically-permuted packs -> the
 placed Pallas kernel, and the serving rate is derived from the actual
 placement occupancy instead of a mean error-free fraction.
+
+All of that wiring lives behind ``repro.api.PUDSession`` (docs/api.md);
+this driver is one consumer of the session, not the owner of the chain.
 """
 from __future__ import annotations
 
@@ -30,11 +33,7 @@ import jax.numpy as jnp
 
 from repro.configs import get
 from repro.models.params import init_params, param_count
-from repro.pud.gemv import (ATTN_PACKABLE, FFN_PACKABLE, FleetPerfModel,
-                            PUDGemvConfig, PUDPerfModel)
-from repro.pud.packer import pack_for_serving, packed_bytes, packing_requests
-from repro.pud.placement import (PlacementError, plan_for_grid,
-                                 requests_fingerprint)
+from repro.pud.gemv import ATTN_PACKABLE, FFN_PACKABLE, PUDGemvConfig
 from repro.runtime.steps import make_serve_step
 
 
@@ -127,95 +126,74 @@ def main(argv=None) -> int:
         packable = FFN_PACKABLE + (ATTN_PACKABLE if args.pud_attention
                                    else ())
         cfg = PUDGemvConfig(weight_bits=args.weight_bits, packable=packable)
-        n_fracs = 3
 
-        # --calib-cache: the persisted table drives placement BEFORE packing
-        # (cache -> masks -> placement -> physically-permuted packs).
-        placement = None
-        tune = None
+        # All PUD wiring (calibration table, persistence, placement,
+        # packing, rate models) lives behind the session facade.
+        from repro.core.calibrate import CalibrationConfig
+        from repro.core.fleet import FleetConfig
+        from repro.runtime.session import PUDSession
+        session = PUDSession.open(
+            args.arch,
+            grid=FleetConfig(n_channels=1, n_banks=1,
+                             n_subarrays=args.fleet_subarrays,
+                             n_cols=args.fleet_cols),
+            cache_dir=args.calib_cache, device_id=args.device_id,
+            calib=CalibrationConfig(n_iterations=12, n_samples=256),
+            key=jax.random.key(args.seed + 2), placement=args.placement)
         if args.calib_cache:
             # Device-specific model from the persisted per-subarray table:
             # a cache hit costs a file read, not an Algorithm-1 run.
-            from repro.core.calibrate import CalibrationConfig
-            from repro.core.fleet import FleetConfig, load_or_calibrate
-            from repro.pud.physics import PhysicsParams
-            from repro.runtime.calib_cache import CalibrationTableCache
-            cache = CalibrationTableCache(args.calib_cache)
-            phys = PhysicsParams()
-            fleet_cfg = FleetConfig(
-                n_channels=1, n_banks=1,
-                n_subarrays=args.fleet_subarrays, n_cols=args.fleet_cols)
-            n_fracs = sum(fleet_cfg.frac_counts)
-            t0 = time.time()
-            _, ecr, masks, hit = load_or_calibrate(
-                cache, args.device_id, jax.random.key(args.seed + 2),
-                fleet_cfg, phys,
-                config=CalibrationConfig(n_iterations=12, n_samples=256))
-            tune = FleetPerfModel.from_table(ecr, n_fracs=n_fracs)
-            status = ("HIT (no recalibration)" if hit
+            st = session.calibrate()
+            status = ("HIT (no recalibration)" if st.cache_hit
                       else "MISS (identified + persisted)")
+            mean_ecr = 1 - session.tuned_perf_model().mean_error_free_frac
             print(f"  calibration table [{args.device_id}] {status} "
-                  f"in {time.time() - t0:.2f}s: "
-                  f"{fleet_cfg.n_subarrays_total} subarrays, mean ECR "
-                  f"{1 - tune.mean_error_free_frac:.3f}")
-            if args.placement:
-                reqs = packing_requests(params, cfg)
-                pname = (f"{args.arch}-{args.preset}"
-                         f"-{requests_fingerprint(reqs)}")
-                placement = cache.load_placement(
-                    args.device_id, fleet_cfg, phys, pname)
-                pstatus = "HIT"
-                if placement is None:
-                    pstatus = "planned + persisted"
-                    try:
-                        placement = plan_for_grid(
-                            masks, reqs, fleet_cfg.grid_shape)
-                        cache.save_placement(args.device_id, fleet_cfg,
-                                             phys, pname, placement)
-                    except PlacementError as e:
-                        print(f"  placement: SKIPPED ({e}); serving on "
-                              f"logical columns")
-                if placement is not None:
-                    rep = placement.capacity_report()
-                    print(f"  placement [{pname}] {pstatus}: "
-                          f"{rep['used_cols']:,}/{rep['usable_cols']:,} "
-                          f"error-free columns used "
-                          f"(occupancy {rep['occupancy']:.1%}, "
-                          f"{rep['occupied_subarrays']}"
-                          f"/{rep['n_subarrays']} subarrays, "
-                          f"{len(rep['spilled_tensors'])} tensors spilled)")
+                  f"in {st.wall_s:.2f}s: "
+                  f"{session.fleet_cfg.n_subarrays_total} subarrays, "
+                  f"mean ECR {mean_ecr:.3f}")
 
-        packed, report = pack_for_serving(params, cfg, placement=placement)
-        sizes = packed_bytes(packed)
+        packed = session.pack(params, cfg,
+                              name=f"{args.arch}-{args.preset}")
+        if session.placement_status == "skipped":
+            print(f"  placement: SKIPPED ({session.placement_error}); "
+                  f"serving on logical columns")
+        elif session.placement is not None:
+            rep = session.perf_report()["placement"]
+            pstatus = ("HIT" if session.placement_status == "hit"
+                       else "planned + persisted")
+            print(f"  placement [{session.placement_name}] {pstatus}: "
+                  f"{rep['used_cols']:,}/{rep['usable_cols']:,} "
+                  f"error-free columns used "
+                  f"(occupancy {rep['occupancy']:.1%}, "
+                  f"{rep['occupied_subarrays']}"
+                  f"/{rep['n_subarrays']} subarrays, "
+                  f"{len(rep['spilled_tensors'])} tensors spilled)")
+
+        extras_rep = session.decode_extras()
         toks, logits = greedy_generate(
-            model, packed, tokens, args.gen, max_len, extras, prefix_len)
+            model, packed.params, tokens, args.gen, max_len, extras,
+            prefix_len)
         agree = float((toks == ref_toks).mean())
         delta = float(jnp.abs(logits - ref_logits).max())
-        layout = "placed physical" if placement is not None else "logical"
         print(f"  pud-gemv path ({cfg.weight_bits}-bit planes, "
-              f"{len(report['packed'])} projections packed, "
-              f"{layout} columns, "
-              f"{sizes['pud_bytes'] / 2**20:.1f} MiB planes):")
+              f"{extras_rep['n_packed']} projections packed, "
+              f"{extras_rep['layout']} columns, "
+              f"{extras_rep['pud_bytes'] / 2**20:.1f} MiB planes):")
         print(f"    token agreement vs bf16: {100 * agree:.1f}%   "
               f"max |logit delta|: {delta:.3f} "
               f"(quantization, not error — the kernel is exact int math)")
 
         # DRAM-side throughput model: what the paper's system sustains.
-        flops_per_tok = 2 * spec.n_active_params
-        base = PUDPerfModel(error_free_frac=1 - 0.466)   # B300, Table I
-        if tune is None:
-            tune = PUDPerfModel(error_free_frac=1 - 0.033)  # T210, Table I
+        perf = session.perf_report(2 * spec.n_active_params)
         print(f"    DDR4-PUD serving model ({args.arch} full config, "
               f"{args.weight_bits}-bit): "
-              f"baseline {base.tokens_per_second(flops_per_tok):.2f} tok/s"
-              f" -> PUDTune {tune.tokens_per_second(flops_per_tok):.2f}"
-              f" tok/s ({tune.speedup_vs(base):.2f}x, Eq. 1)")
-        if placement is not None:
-            placed_model = FleetPerfModel.from_placement(
-                placement, n_fracs=n_fracs)
+              f"baseline {perf['baseline_tok_s']:.2f} tok/s"
+              f" -> PUDTune {perf['tuned_tok_s']:.2f}"
+              f" tok/s ({perf['gain']:.2f}x, Eq. 1)")
+        if session.placement is not None:
             print(f"    placement-derived rate (occupied-subarray waves): "
-                  f"{placed_model.tokens_per_second(flops_per_tok):.2f} "
-                  f"tok/s at {placement.occupancy:.1%} occupancy")
+                  f"{perf['placed_tok_s']:.2f} "
+                  f"tok/s at {session.placement.occupancy:.1%} occupancy")
     return 0
 
 

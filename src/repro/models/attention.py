@@ -25,9 +25,10 @@ from .sharding_ctx import hint, padded_head_count
 def head_proj(p, name: str, x, heads: int, hdim: int):
     """x [..., D] @ [D, H, Dh] -> [..., H, Dh], PUD-packed aware.
 
-    ``pud.packer.pack_for_serving`` with attention packing replaces
-    ``<name>`` by ``<name>_pud`` holding bit-planes of the flattened
-    [D, H*Dh] projection; the head split is restored by reshape.
+    ``pud.packer.pack_model`` (via ``PUDSession.pack``) with attention
+    packing replaces ``<name>`` by a ``<name>_pud`` ``PackedTensor``
+    holding bit-planes of the flattened [D, H*Dh] projection; the head
+    split is restored by reshape.
     """
     packed = p.get(name + "_pud")
     if packed is not None:

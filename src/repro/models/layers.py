@@ -104,9 +104,10 @@ def ffn_defs(d_model: int, d_ff: int, gated: bool = True,
 def linear(p, name: str, x):
     """Projection dispatch: PUD bit-plane GeMV when a packed variant exists.
 
-    ``repro.pud.packer.pack_for_serving`` replaces ``<name>`` with
-    ``<name>_pud`` = {"planes", "scale"}; the forward then routes through the
-    Pallas bit-plane kernel (the MVDRAM serving path) with no model changes.
+    ``repro.pud.packer.pack_model`` (via ``PUDSession.pack``) replaces
+    ``<name>`` with a ``<name>_pud`` ``PackedTensor``; the forward then
+    routes through the Pallas bit-plane kernel (the MVDRAM serving path)
+    with no model changes.
     """
     packed = p.get(name + "_pud")
     if packed is not None:

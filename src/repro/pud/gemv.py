@@ -29,6 +29,7 @@ from repro.kernels.ops import pud_gemv
 from repro.kernels.ref import pack_bitplanes
 
 from .bitserial import add8_counts, mul8_counts
+from .packed import PackedTensor, as_packed_tensor
 from .timing import SystemConfig, wave_latency_ns
 
 # Default packable set: FFN projections (dominant decode GeMV flops).
@@ -36,6 +37,12 @@ from .timing import SystemConfig, wave_latency_ns
 FFN_PACKABLE = ("mixer.wi", "mixer.wg", "mixer.wo")
 # Attention projections (2-D case: head axes flattened to one column axis).
 ATTN_PACKABLE = ("attn.wq", "attn.wk", "attn.wv", "attn.wo")
+
+# Table-I operating points: ECR of the uncalibrated B_{3,0,0} baseline vs
+# the calibrated T_{2,1,0} ladder (the paper's headline 1.81x comes from
+# the ratio of the error-free fractions these leave).
+ECR_BASELINE_B300 = 0.466
+ECR_PUDTUNE_T210 = 0.033
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,29 +52,46 @@ class PUDGemvConfig:
     interpret: bool = True       # CPU container; False on real TPU
     # Which projections pack_for_serving swaps onto the PUD path.
     packable: tuple[str, ...] = FFN_PACKABLE
+    # Named execution backend (kernels/backends.py); None falls back to the
+    # legacy interpret flag ("interpret" when True, "pallas" when False).
+    backend: str | None = None
 
 
-def pack_linear(w: jax.Array, n_bits: int = 4) -> dict:
+def pack_linear(w: jax.Array, n_bits: int = 4,
+                backend: str | None = None) -> PackedTensor:
     """[K, N] float weights -> per-output-channel-quantized bit-planes.
 
-    Returns {"planes": [WB, K, N] int8 in {0,1}, "scale": [N] float32}.
+    Returns a ``PackedTensor`` (planes [WB, K, N] int8 in {0,1}, scale [N]
+    float32) — the legacy ``pack["planes"]`` mapping access still works.
     Symmetric per-channel: w ~ scale * q, q in [-2^{b-1}, 2^{b-1}).
+    ``backend`` stamps the pack with the execution backend model forwards
+    should dispatch it through.
     """
     qmax = (1 << (n_bits - 1)) - 1
     scale = jnp.maximum(jnp.abs(w).max(axis=0), 1e-8) / qmax       # [N]
     q = jnp.clip(jnp.round(w / scale[None, :]), -qmax - 1, qmax)
-    return {"planes": pack_bitplanes(q.astype(jnp.int32), n_bits),
-            "scale": scale.astype(jnp.float32)}
+    return PackedTensor(planes=pack_bitplanes(q.astype(jnp.int32), n_bits),
+                        scale=scale.astype(jnp.float32), backend=backend)
 
 
-def pud_linear(x: jax.Array, packed: dict,
-               cfg: PUDGemvConfig = PUDGemvConfig()) -> jax.Array:
-    """x: [..., K] float -> [..., N] float32 through the bit-plane GeMV."""
+def pud_linear(x: jax.Array, packed: "PackedTensor | dict",
+               cfg: PUDGemvConfig = PUDGemvConfig(),
+               backend: str | None = None) -> jax.Array:
+    """x: [..., K] float -> [..., N] float32 through the bit-plane GeMV.
+
+    ``packed`` is a ``PackedTensor`` (or a legacy pack dict, coerced).
+    Backend resolution: explicit ``backend`` arg > ``cfg.backend`` > the
+    backend stamped on the pack (how a session's choice reaches model
+    forwards, which call this with the default config) > the legacy
+    ``interpret`` flag.
+    """
+    pt = as_packed_tensor(packed)
     lead = x.shape[:-1]
     x2 = x.reshape((-1, x.shape[-1]))
-    y = pud_gemv(x2, packed["planes"], packed["scale"],
+    y = pud_gemv(x2, pt.planes, pt.scale,
                  mode=cfg.mode, interpret=cfg.interpret,
-                 col_ids=packed.get("col_ids"))
+                 col_ids=pt.col_ids,
+                 backend=backend or cfg.backend or pt.backend)
     return y.reshape(lead + (y.shape[-1],))
 
 

@@ -1,0 +1,196 @@
+"""Typed pack pytrees: the PUD serving weight format as first-class objects.
+
+``PackedTensor`` is one projection in the PUD layout — WB bit-planes over
+columns, the per-output-channel dequant scale, and (when column placement is
+active) the ``col_ids`` gather map into the physical window.  ``PackedModel``
+is a whole serving tree (bf16 leaves + ``PackedTensor`` packs) plus the
+packing metadata that used to live in an ad-hoc report dict.
+
+Both are registered JAX pytrees, so they jit, ``lax.scan`` (stacked layers
+slice leaf-wise along the L axis), shard, and checkpoint like any other
+params.  ``PackedTensor`` also speaks the legacy mapping protocol
+(``pack["planes"]``, ``pack.get("col_ids")``, ``"col_ids" in pack``) so
+pre-session call sites and raw-dict packs keep working; ``as_packed_tensor``
+is the one coercion point between the two worlds.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+_FIELDS = ("planes", "scale", "col_ids")
+
+
+@dataclasses.dataclass(eq=False)
+class PackedTensor:
+    """One projection in the PUD bit-plane layout.
+
+    Shapes (optionally with a leading stacked-layer axis L):
+      planes   [L?, WB, K, N]  int8 in {0,1} — offset-binary weight bits;
+               with placement the trailing axis is the physical window P
+      scale    [L?, N]         float32 per-output-channel dequant scale
+      col_ids  [L?, N]         int32 logical -> window column map, or None
+                               for the logical (unplaced) layout
+
+    ``backend`` (pytree aux, not data) names the execution backend the pack
+    was built for: model forwards dispatch packed projections without access
+    to the session, so the backend choice rides on the pack itself
+    (``pud_linear`` resolution: explicit arg > config > pack > legacy flag).
+    """
+
+    planes: jax.Array
+    scale: jax.Array
+    col_ids: jax.Array | None = None
+    backend: str | None = None
+
+    @property
+    def placed(self) -> bool:
+        return self.col_ids is not None
+
+    def replace(self, **kw) -> "PackedTensor":
+        return dataclasses.replace(self, **kw)
+
+    # -- legacy mapping protocol (the pre-PUDSession dict pack format) ------
+
+    def __getitem__(self, key: str):
+        if key not in _FIELDS:
+            raise KeyError(key)
+        value = getattr(self, key)
+        if value is None:
+            raise KeyError(key)
+        return value
+
+    def get(self, key: str, default=None):
+        value = getattr(self, key, None) if key in _FIELDS else None
+        return default if value is None else value
+
+    def __contains__(self, key: str) -> bool:
+        return key in _FIELDS and getattr(self, key) is not None
+
+    def keys(self):
+        return tuple(f for f in _FIELDS if getattr(self, f) is not None)
+
+    def items(self):
+        return tuple((k, getattr(self, k)) for k in self.keys())
+
+    def __iter__(self):
+        return iter(self.keys())
+
+
+def as_packed_tensor(pack) -> PackedTensor:
+    """Coerce a legacy {"planes", "scale", "col_ids"?} dict (or a
+    PackedTensor, passed through) to the typed form."""
+    if isinstance(pack, PackedTensor):
+        return pack
+    return PackedTensor(planes=pack["planes"], scale=pack["scale"],
+                        col_ids=pack.get("col_ids"))
+
+
+def is_pack(value) -> bool:
+    """Is ``value`` a pack in either format (typed or legacy dict)?"""
+    if isinstance(value, PackedTensor):
+        return True
+    return (isinstance(value, dict) and "planes" in value and "scale" in value)
+
+
+jax.tree_util.register_pytree_node(
+    PackedTensor,
+    lambda pt: ((pt.planes, pt.scale, pt.col_ids), pt.backend),
+    lambda aux, ch: PackedTensor(*ch, backend=aux))
+
+
+@dataclasses.dataclass(eq=False)
+class PackedModel:
+    """A whole serving tree packed for the PUD path.
+
+    ``params`` is the tree ``model.prefill``/``decode_step`` consume: packed
+    projections replaced by ``<name>_pud`` ``PackedTensor``s, everything else
+    untouched.  The static metadata (what packed, what skipped, bit width,
+    layout) rides along as pytree aux data so a jitted function treats two
+    packs of the same shape+metadata as one trace.
+    """
+
+    params: dict
+    packed_names: tuple[str, ...] = ()
+    skipped_names: tuple[str, ...] = ()
+    weight_bits: int = 4
+    placed: bool = False
+
+    @property
+    def report(self) -> dict:
+        """The legacy ``pack_for_serving`` report dict."""
+        return {"packed": list(self.packed_names),
+                "skipped": list(self.skipped_names),
+                "bits": self.weight_bits, "placed": self.placed}
+
+    @property
+    def tensors(self) -> dict[str, PackedTensor]:
+        """Flat view: tensor path (report name) -> its PackedTensor.
+
+        Computed once per instance and cached — per-call lookups
+        (``PUDSession.linear``) must not re-walk the whole tree.
+        """
+        cached = self.__dict__.get("_tensors")
+        if cached is not None:
+            return cached
+        out: dict[str, PackedTensor] = {}
+
+        def walk(tree, path):
+            for key, sub in tree.items():
+                if key.endswith("_pud") and is_pack(sub):
+                    name = "/".join(path + (key[: -len("_pud")],))
+                    out[name] = as_packed_tensor(sub)
+                elif isinstance(sub, dict):
+                    walk(sub, path + (key,))
+
+        walk(self.params, ())
+        self.__dict__["_tensors"] = out
+        return out
+
+    def tensor(self, name: str) -> PackedTensor:
+        """Look up one pack by its report name (or unique path suffix)."""
+        tensors = self.tensors
+        if name in tensors:
+            return tensors[name]
+        hits = [k for k in tensors if k.endswith(name)]
+        if len(hits) == 1:
+            return tensors[hits[0]]
+        raise KeyError(
+            f"packed tensor {name!r} "
+            + (f"is ambiguous: {sorted(hits)}" if hits
+               else f"not found (have: {sorted(tensors)})"))
+
+
+jax.tree_util.register_pytree_node(
+    PackedModel,
+    lambda pm: ((pm.params,),
+                (pm.packed_names, pm.skipped_names, pm.weight_bits,
+                 pm.placed)),
+    lambda aux, ch: PackedModel(ch[0], *aux))
+
+
+def packed_bytes(params) -> dict:
+    """Storage accounting: bf16 bytes vs packed bit-plane bytes.
+
+    Accepts a ``PackedModel`` or a raw serving tree in either pack format.
+    """
+    if isinstance(params, PackedModel):
+        params = params.params
+    stats = {"bf16_bytes": 0, "pud_bytes": 0}
+
+    def count(pack):
+        stats["pud_bytes"] += pack.planes.size // 8 + pack.scale.size * 4
+        if pack.col_ids is not None:
+            stats["pud_bytes"] += pack.col_ids.size * 4
+
+    def walk(tree):
+        for k, v in tree.items():
+            if k.endswith("_pud") and is_pack(v):
+                count(as_packed_tensor(v))
+            elif isinstance(v, dict):
+                walk(v)
+            elif isinstance(v, jax.Array):
+                stats["bf16_bytes"] += v.size * v.dtype.itemsize
+    walk(params)
+    return stats

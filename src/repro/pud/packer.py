@@ -1,11 +1,12 @@
 """Serving-time weight packer: swap model projections onto the PUD path.
 
-``pack_for_serving`` walks a trained/initialized parameter tree and replaces
-selected projections with PUD bit-plane packs ({"planes", "scale"}), which
-``models.layers.linear`` / ``models.attention`` dispatch to the Pallas
-bit-plane GeMV.  This is how the paper's technique becomes a first-class
-serving feature: any arch config can be served with ``--pud-gemv`` and its
-projections execute in the (simulated) DRAM layout.
+``pack_model`` walks a trained/initialized parameter tree and replaces
+selected projections with ``PackedTensor`` bit-plane packs (repro/pud/
+packed.py), which ``models.layers.linear`` / ``models.attention`` dispatch
+to the Pallas bit-plane GeMV.  This is how the paper's technique becomes a
+first-class serving feature: any arch config can be served with
+``--pud-gemv`` and its projections execute in the (simulated) DRAM layout.
+``pack_for_serving`` is the legacy tuple-returning shim over it.
 
 Which projections pack is configured by ``PUDGemvConfig.packable`` — entries
 are either a bare key name ("wi") or scoped "component.key" ("mixer.wi",
@@ -27,11 +28,15 @@ inside the window hold zeros and are never addressed.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .gemv import ATTN_PACKABLE, FFN_PACKABLE, PUDGemvConfig, pack_linear
+from .packed import PackedModel, PackedTensor
+from .packed import packed_bytes  # noqa: F401  (legacy import location)
 from .placement import Placement, PlacementRequest, TensorPlacement
 
 
@@ -76,47 +81,55 @@ def _canonical(key: str, path: tuple[str, ...], w: jax.Array):
     return None
 
 
-def _pack_stacked(w: jax.Array, n_bits: int) -> dict:
-    """[L, K, N] (or [K, N]) weights -> stacked {"planes", "scale"}."""
+def _pack_stacked(w: jax.Array, n_bits: int,
+                  backend: str | None) -> PackedTensor:
+    """[L, K, N] (or [K, N]) weights -> stacked ``PackedTensor``."""
     if w.ndim == 2:
-        return pack_linear(w, n_bits)
+        return pack_linear(w, n_bits, backend)
     packs = [pack_linear(w[i], n_bits) for i in range(w.shape[0])]
-    return {"planes": jnp.stack([p["planes"] for p in packs]),
-            "scale": jnp.stack([p["scale"] for p in packs])}
+    return PackedTensor(planes=jnp.stack([p.planes for p in packs]),
+                        scale=jnp.stack([p.scale for p in packs]),
+                        backend=backend)
 
 
-def _pack_placed(w: jax.Array, n_bits: int, tp: TensorPlacement) -> dict:
+def _pack_placed(w: jax.Array, n_bits: int, tp: TensorPlacement,
+                 backend: str | None) -> PackedTensor:
     """Physically-placed pack: planes scattered into the column window.
 
-    Returns {"planes": [L?, WB, K, P], "scale": [L?, N],
-    "col_ids": [L?, N]} with P = tp.region_size.
+    Returns a ``PackedTensor`` with planes [L?, WB, K, P], scale [L?, N]
+    and col_ids [L?, N], where P = tp.region_size.
     """
     local = np.asarray(tp.local_cols)
 
     def one(w2, loc):
         pk = pack_linear(w2, n_bits)
-        planes = jnp.zeros(pk["planes"].shape[:2] + (tp.region_size,),
+        planes = jnp.zeros(pk.planes.shape[:2] + (tp.region_size,),
                            jnp.int8)
         idx = jnp.asarray(loc, jnp.int32)
-        planes = planes.at[:, :, idx].set(pk["planes"])
-        return {"planes": planes, "scale": pk["scale"], "col_ids": idx}
+        planes = planes.at[:, :, idx].set(pk.planes)
+        return PackedTensor(planes=planes, scale=pk.scale, col_ids=idx)
 
     if w.ndim == 2:
-        return one(w, local)
+        return dataclasses.replace(one(w, local), backend=backend)
     packs = [one(w[i], local[i]) for i in range(w.shape[0])]
-    return {k: jnp.stack([p[k] for p in packs]) for k in packs[0]}
+    return PackedTensor(
+        planes=jnp.stack([p.planes for p in packs]),
+        scale=jnp.stack([p.scale for p in packs]),
+        col_ids=jnp.stack([p.col_ids for p in packs]),
+        backend=backend)
 
 
-def _pack_any(w, n_bits: int, name: str, placement: Placement | None) -> dict:
+def _pack_any(w, n_bits: int, name: str, placement: Placement | None,
+              backend: str | None) -> PackedTensor:
     if placement is None:
-        return _pack_stacked(w, n_bits)
+        return _pack_stacked(w, n_bits, backend)
     tp = placement.entries.get(name)
     if tp is None:
         raise KeyError(
             f"placement has no entry for packed tensor {name!r}; plan it "
             f"from packing_requests() of the same params/config "
             f"(have: {sorted(placement.entries)})")
-    return _pack_placed(w, n_bits, tp)
+    return _pack_placed(w, n_bits, tp, backend)
 
 
 def packing_requests(params: dict, cfg: PUDGemvConfig = PUDGemvConfig(),
@@ -151,18 +164,19 @@ def packing_requests(params: dict, cfg: PUDGemvConfig = PUDGemvConfig(),
     return reqs
 
 
-def pack_for_serving(params: dict, cfg: PUDGemvConfig = PUDGemvConfig(),
-                     include_unembed: bool = True,
-                     placement: Placement | None = None) -> tuple[dict, dict]:
-    """Returns (serving params, report). Original fp weights are dropped
-    from packed projections (the bit-planes ARE the stored layout).
+def pack_model(params: dict, cfg: PUDGemvConfig = PUDGemvConfig(),
+               include_unembed: bool = True,
+               placement: Placement | None = None) -> PackedModel:
+    """Pack a parameter tree for PUD serving; returns a ``PackedModel``.
 
-    With ``placement``, every pack is emitted in its physical column layout
-    (see ``_pack_placed``); the placement must cover exactly the tensors
-    this config packs — build it from ``packing_requests(params, cfg)``.
+    Original fp weights are dropped from packed projections (the bit-planes
+    ARE the stored layout).  With ``placement``, every pack is emitted in
+    its physical column layout (see ``_pack_placed``); the placement must
+    cover exactly the tensors this config packs — build it from
+    ``packing_requests(params, cfg)``.
     """
-    report = {"packed": [], "skipped": [], "bits": cfg.weight_bits,
-              "placed": placement is not None}
+    packed_names: list[str] = []
+    skipped: list[str] = []
 
     def walk(tree, path):
         if not isinstance(tree, dict):
@@ -178,10 +192,10 @@ def pack_for_serving(params: dict, cfg: PUDGemvConfig = PUDGemvConfig(),
                 if w is not None:
                     name = "/".join(p)
                     out[key + "_pud"] = _pack_any(
-                        w, cfg.weight_bits, name, placement)
-                    report["packed"].append(name)
+                        w, cfg.weight_bits, name, placement, cfg.backend)
+                    packed_names.append(name)
                     continue
-                report["skipped"].append("/".join(p))
+                skipped.append("/".join(p))
             out[key] = sub
         return out
 
@@ -189,27 +203,24 @@ def pack_for_serving(params: dict, cfg: PUDGemvConfig = PUDGemvConfig(),
     if include_unembed and "unembed" in packed:
         w = packed["unembed"].pop("w")
         packed["unembed"]["w_pud"] = _pack_any(
-            w, cfg.weight_bits, "unembed/w", placement)
-        report["packed"].append("unembed/w")
-    return packed, report
+            w, cfg.weight_bits, "unembed/w", placement, cfg.backend)
+        packed_names.append("unembed/w")
+    return PackedModel(params=packed,
+                       packed_names=tuple(packed_names),
+                       skipped_names=tuple(skipped),
+                       weight_bits=cfg.weight_bits,
+                       placed=placement is not None)
 
 
-def packed_bytes(params: dict) -> dict:
-    """Storage accounting: bf16 bytes vs packed bit-plane bytes."""
-    stats = {"bf16_bytes": 0, "pud_bytes": 0}
+def pack_for_serving(params: dict, cfg: PUDGemvConfig = PUDGemvConfig(),
+                     include_unembed: bool = True,
+                     placement: Placement | None = None) -> tuple[dict, dict]:
+    """Legacy entry point: returns (serving params tree, report dict).
 
-    def walk(tree):
-        if isinstance(tree, dict):
-            for k, v in tree.items():
-                if isinstance(v, dict):
-                    if "planes" in v and "scale" in v and k.endswith("_pud"):
-                        stats["pud_bytes"] += v["planes"].size // 8 \
-                            + v["scale"].size * 4
-                        if "col_ids" in v:
-                            stats["pud_bytes"] += v["col_ids"].size * 4
-                    else:
-                        walk(v)
-                elif isinstance(v, jax.Array):
-                    stats["bf16_bytes"] += v.size * v.dtype.itemsize
-    walk(params)
-    return stats
+    Thin shim over ``pack_model`` — new code should use that (or
+    ``PUDSession.pack``, which also owns calibration + placement) and work
+    with the typed ``PackedModel`` instead of the loose tuple.
+    """
+    pm = pack_model(params, cfg, include_unembed=include_unembed,
+                    placement=placement)
+    return pm.params, pm.report

@@ -300,20 +300,22 @@ def inject_read_faults(packed_params: dict, placement: Placement) -> dict:
     placements put logical columns on faulty physical columns and break.
     """
 
+    from .packed import as_packed_tensor, is_pack
+
     def walk(tree, path):
         if not isinstance(tree, dict):
             return tree
         out = {}
         for key, sub in tree.items():
-            if (key.endswith("_pud") and isinstance(sub, dict)
-                    and "col_ids" in sub):
+            if key.endswith("_pud") and is_pack(sub) and "col_ids" in sub:
                 name = "/".join(path + (key[: -len("_pud")],))
                 tp = placement.entries.get(name)
                 if tp is None:
                     raise KeyError(
                         f"packed tensor {name!r} has no placement entry "
                         f"(have: {sorted(placement.entries)})")
-                out[key] = dict(sub, planes=corrupt_planes(sub["planes"], tp))
+                pt = as_packed_tensor(sub)
+                out[key] = pt.replace(planes=corrupt_planes(pt.planes, tp))
             elif isinstance(sub, dict):
                 out[key] = walk(sub, path + (key,))
             else:

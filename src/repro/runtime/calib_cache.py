@@ -229,3 +229,93 @@ class CalibrationTableCache:
                 if ".tmp-" not in m.parent.name)
         shutil.rmtree(d)
         return n
+
+
+# ---------------------------------------------------------------------------
+# CLI: inspect/evict persisted device tables without writing any Python.
+#
+#     python -m repro.runtime.calib_cache --root DIR --list
+#     python -m repro.runtime.calib_cache --root DIR --stats
+#     python -m repro.runtime.calib_cache --root DIR --evict DEVICE
+#
+# Deliberately jax-free: operators can poke a serving host's cache from any
+# Python without pulling in the accelerator stack.
+# ---------------------------------------------------------------------------
+
+
+def _dir_bytes(path: pathlib.Path) -> int:
+    return sum(f.stat().st_size for f in path.rglob("*") if f.is_file())
+
+
+def _entry_rows(root: pathlib.Path) -> list[dict]:
+    rows = []
+    for manifest in sorted(root.glob("*/*/manifest.json")):
+        entry = manifest.parent
+        if ".tmp-" in entry.name:
+            continue
+        try:
+            m = json.loads(manifest.read_text())
+        except (OSError, json.JSONDecodeError):
+            m = {}
+        placements = entry / "placements"
+        rows.append({
+            "device_id": entry.parent.name,
+            "table_key": entry.name,
+            "format": m.get("format", "?"),
+            "grid_shape": m.get("grid_shape"),
+            "n_cols": m.get("n_cols"),
+            "frac_counts": m.get("frac_counts"),
+            "n_placements": (sum(1 for p in placements.glob("*.npz")
+                                 if ".tmp-" not in p.name)
+                             if placements.exists() else 0),
+            "bytes": _dir_bytes(entry),
+        })
+    return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.runtime.calib_cache",
+        description="Inspect a persistent calibration-table cache.")
+    ap.add_argument("--root", required=True, metavar="DIR",
+                    help="cache root (the --calib-cache directory)")
+    g = ap.add_mutually_exclusive_group(required=True)
+    g.add_argument("--list", action="store_true",
+                   help="one line per persisted table entry")
+    g.add_argument("--stats", action="store_true",
+                   help="aggregate counts and on-disk size")
+    g.add_argument("--evict", metavar="DEVICE",
+                   help="drop every table of one device")
+    args = ap.parse_args(argv)
+
+    root = pathlib.Path(args.root)
+    if args.evict:
+        n = CalibrationTableCache(root).evict(args.evict)
+        print(f"evicted {n} table(s) of device {args.evict!r}")
+        return 0
+    rows = _entry_rows(root) if root.exists() else []
+    if args.list:
+        if not rows:
+            print(f"no cache entries under {root}")
+            return 0
+        for r in rows:
+            grid = "x".join(str(s) for s in (r["grid_shape"] or ["?"]))
+            frac = "".join(str(f) for f in (r["frac_counts"] or ["?"]))
+            print(f"{r['device_id']:<12s} {r['table_key']:<40s} "
+                  f"{r['format']:<15s} grid {grid} x {r['n_cols']} cols "
+                  f"T{frac}  {r['n_placements']} placement(s)  "
+                  f"{r['bytes'] / 1024:.1f} KiB")
+        return 0
+    devices = {r["device_id"] for r in rows}
+    print(f"cache root       {root}")
+    print(f"devices          {len(devices)}")
+    print(f"table entries    {len(rows)}")
+    print(f"placements       {sum(r['n_placements'] for r in rows)}")
+    print(f"on-disk size     "
+          f"{(_dir_bytes(root) if root.exists() else 0) / 1024:.1f} KiB")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,398 @@
+"""PUDSession: the one public API for the PUD serving lifecycle.
+
+Everything a workload needs from a calibrated PUD device used to be ~120
+lines of hand-wiring per call site: load-or-run fleet calibration, persist
+the table, plan column placement from the masks, pack weights into placed
+bit-planes, dispatch the kernel, price the serving rate.  ``PUDSession``
+owns that chain behind five calls:
+
+    from repro.api import PUDSession
+
+    session = PUDSession.open("qwen3-1.7b", grid=FleetConfig(...),
+                              cache_dir="~/.pud-cache", backend="pallas")
+    state  = session.calibrate()            # cache hit (ms) or Algorithm 1
+    packed = session.pack(params, cfg)      # placement-aware PackedModel
+    y      = session.linear(x, "unembed/w") # kernel via the named backend
+    rep    = session.perf_report()          # Eq.-1 rates, occupancy, ECR
+    extras = session.decode_extras()        # layout/bytes/report diagnostics
+
+The session hides per-device reliability state (which physical columns are
+safe) from the workload: callers speak logical tensors, the session speaks
+placed physical columns.  Backends (kernels/backends.py) are selectable per
+session and per call and are bit-exact against each other, so the same
+session code serves the TPU Pallas lowering, the forced interpreter, and the
+pure-jnp reference.
+
+A session without ``cache_dir`` still works — calibration runs in memory
+and is simply not persisted (the null-cache path); a session that never
+calibrates packs onto logical columns, exactly like serving without
+``--calib-cache``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibrate import CalibrationConfig
+from repro.core.fleet import FleetConfig, load_or_calibrate, manufacture_fleet
+from repro.kernels.backends import DEFAULT_BACKEND, backend_names
+from repro.pud.gemv import (ECR_BASELINE_B300, ECR_PUDTUNE_T210,
+                            FleetPerfModel, PUDGemvConfig, PUDPerfModel,
+                            pud_linear)
+from repro.pud.packed import PackedModel, packed_bytes
+from repro.pud.packer import pack_model, packing_requests
+from repro.pud.physics import PhysicsParams
+from repro.pud.placement import (Placement, PlacementError, plan_for_grid,
+                                 requests_fingerprint)
+from repro.runtime.calib_cache import CalibrationTableCache
+
+
+@dataclasses.dataclass
+class CalibrationState:
+    """One device's reliability state, as loaded or identified."""
+
+    levels: jax.Array          # [G, C] int32 ladder level per column
+    ecr: jax.Array             # [G] float32 per-subarray ECR
+    masks: jax.Array           # [G, C] bool per-column error-prone mask
+    cache_hit: bool
+    wall_s: float
+
+    @property
+    def mean_ecr(self) -> float:
+        return float(np.asarray(self.ecr).mean())
+
+
+class _NullCache:
+    """In-memory stand-in when no cache_dir is given: every load misses,
+    every save is dropped — calibration still runs, nothing persists."""
+
+    def load(self, *a, **kw):
+        return None
+
+    def save(self, *a, **kw):
+        return None
+
+
+class PUDSession:
+    """Facade over the calibrate -> cache -> place -> pack -> execute chain.
+
+    Build one with ``PUDSession.open``; the constructor takes the already-
+    resolved pieces.
+    """
+
+    def __init__(self, *, arch: str | None, fleet_cfg: FleetConfig,
+                 cache: CalibrationTableCache | None, device_id: str,
+                 backend: str, physics: PhysicsParams,
+                 calib: CalibrationConfig, key: jax.Array,
+                 placement: bool, method: str, n_trials_ecr: int):
+        if backend not in backend_names():
+            raise KeyError(f"unknown backend {backend!r}; registered: "
+                           f"{backend_names()}")
+        self.arch = arch
+        self.fleet_cfg = fleet_cfg
+        self.cache = cache
+        self.device_id = device_id
+        self.backend = backend
+        self.physics = physics
+        self.calib_cfg = calib
+        self.key = key
+        self.placement_enabled = placement
+        self.method = method
+        self.n_trials_ecr = n_trials_ecr
+
+        self._state: CalibrationState | None = None
+        self._operating_point: float | None = None
+        self._packed: PackedModel | None = None
+        self._pack_cfg: PUDGemvConfig | None = None
+        self._placement: Placement | None = None
+        self._placement_name: str | None = None
+        self._placement_status: str | None = None   # hit | planned | skipped
+        self._placement_error: str | None = None
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def open(cls, arch_or_grid: "str | FleetConfig | None" = None, *,
+             grid: FleetConfig | None = None,
+             cache_dir=None, device_id: str = "dimm0",
+             backend: str = DEFAULT_BACKEND,
+             physics: PhysicsParams | None = None,
+             calib: CalibrationConfig | None = None,
+             key: "jax.Array | int" = 0,
+             placement: bool = True,
+             method: str = "reference",
+             n_trials_ecr: int = 1024) -> "PUDSession":
+        """Open a session on one device.
+
+        ``arch_or_grid``: either the architecture name this session serves
+        (used for perf pricing and placement naming) or the device's
+        ``FleetConfig`` grid; pass the other via ``grid``.  ``cache_dir``
+        enables persistence (tables + placements survive restarts);
+        without it calibration runs in memory.  ``key`` seeds manufacture/
+        calibration (an int is wrapped with ``jax.random.key``).
+        """
+        arch = None
+        if isinstance(arch_or_grid, FleetConfig):
+            if grid is not None:
+                raise ValueError("grid given twice")
+            grid = arch_or_grid
+        elif arch_or_grid is not None:
+            arch = str(arch_or_grid)
+        if not isinstance(key, jax.Array):
+            key = jax.random.key(int(key))
+        return cls(
+            arch=arch,
+            fleet_cfg=grid or FleetConfig(n_channels=1, n_banks=1,
+                                          n_subarrays=16, n_cols=2048),
+            cache=(CalibrationTableCache(cache_dir)
+                   if cache_dir is not None else None),
+            device_id=device_id, backend=backend,
+            physics=physics or PhysicsParams(),
+            calib=calib or CalibrationConfig(),
+            key=key, placement=placement, method=method,
+            n_trials_ecr=n_trials_ecr)
+
+    @classmethod
+    def at_operating_point(cls, ecr: float, *, arch: str | None = None,
+                           n_fracs_cfg: tuple[int, ...] = (2, 1, 0),
+                           backend: str = DEFAULT_BACKEND) -> "PUDSession":
+        """Session pinned to a fixed mean ECR (e.g. the Table-I operating
+        points) instead of a measured device — for pricing/what-if runs."""
+        s = cls.open(arch, grid=FleetConfig(frac_counts=n_fracs_cfg),
+                     backend=backend)
+        s._operating_point = float(ecr)
+        return s
+
+    # -- calibration --------------------------------------------------------
+
+    @property
+    def calibration(self) -> CalibrationState | None:
+        return self._state
+
+    @property
+    def n_fracs(self) -> int:
+        return sum(self.fleet_cfg.frac_counts)
+
+    @property
+    def ladder(self):
+        return self.fleet_cfg.ladder(self.physics)
+
+    def calibrate(self, force: bool = False) -> CalibrationState:
+        """Load the device's persisted table, or identify + persist it.
+
+        A cache hit costs a file read; a miss runs the fleet Algorithm 1 +
+        ECR/mask measurement and (with a cache) persists the table.
+        """
+        if self._state is not None and not force:
+            return self._state
+        t0 = time.time()
+        levels, ecr, masks, hit = load_or_calibrate(
+            self.cache if self.cache is not None else _NullCache(),
+            self.device_id, self.key, self.fleet_cfg, self.physics,
+            config=self.calib_cfg, method=self.method,
+            n_trials_ecr=self.n_trials_ecr)
+        self._state = CalibrationState(
+            levels=levels, ecr=ecr, masks=masks,
+            cache_hit=bool(hit), wall_s=time.time() - t0)
+        return self._state
+
+    def baseline_ecr(self, n_trials: int | None = None) -> float:
+        """Mean fleet ECR of the uncalibrated B_{3,0,0} baseline on this
+        device's manufactured offsets (the before-picture of Table I)."""
+        from repro.core.ecr import measure_ecr_fleet
+        from repro.core.offsets import baseline_charges
+        cfg = self.fleet_cfg
+        offsets = manufacture_fleet(self.key, cfg, self.physics)
+        base = jnp.broadcast_to(
+            baseline_charges(3, cfg.n_cols, self.physics)[None],
+            (cfg.n_subarrays_total, 3, cfg.n_cols))
+        ecr, _ = measure_ecr_fleet(
+            jax.random.fold_in(self.key, 0x0ECB), offsets, base,
+            self.physics, 3, n_trials=n_trials or self.n_trials_ecr)
+        return float(np.asarray(ecr).mean())
+
+    # -- placement + packing ------------------------------------------------
+
+    @property
+    def placement(self) -> Placement | None:
+        return self._placement
+
+    @property
+    def placement_status(self) -> str | None:
+        """After ``pack``: "hit" | "planned" | "skipped" | None (placement
+        not attempted — disabled or uncalibrated)."""
+        return self._placement_status
+
+    @property
+    def placement_error(self) -> str | None:
+        return self._placement_error
+
+    @property
+    def placement_name(self) -> str | None:
+        return self._placement_name
+
+    @property
+    def packed(self) -> PackedModel | None:
+        return self._packed
+
+    def _plan(self, params: dict, cfg: PUDGemvConfig,
+              name: str | None) -> Placement | None:
+        reqs = packing_requests(params, cfg)
+        pname = f"{name or self.arch or 'model'}-{requests_fingerprint(reqs)}"
+        self._placement_name = pname
+        placement = None
+        if self.cache is not None:
+            placement = self.cache.load_placement(
+                self.device_id, self.fleet_cfg, self.physics, pname)
+        if placement is not None:
+            self._placement_status = "hit"
+            return placement
+        try:
+            placement = plan_for_grid(
+                self._state.masks, reqs, self.fleet_cfg.grid_shape)
+        except PlacementError as e:
+            self._placement_status, self._placement_error = "skipped", str(e)
+            return None
+        if self.cache is not None:
+            self.cache.save_placement(self.device_id, self.fleet_cfg,
+                                      self.physics, pname, placement)
+        self._placement_status = "planned"
+        return placement
+
+    def pack(self, params: dict, cfg: PUDGemvConfig | None = None, *,
+             name: str | None = None,
+             include_unembed: bool = True) -> PackedModel:
+        """Pack a parameter tree for this device.
+
+        With placement enabled and a calibrated session, every packable
+        projection's columns are planned onto error-free physical columns
+        (loaded from the cache when a plan for the same request fingerprint
+        is already persisted, planned + persisted otherwise) and the packs
+        come out in the placed physical layout.  ``name`` labels the
+        persisted placement (default: the session's arch).
+
+        The packs are stamped with the session backend (unless the config
+        names its own), so model forwards dispatch them through it too.
+        """
+        if cfg is None:
+            cfg = PUDGemvConfig(backend=self.backend)
+        elif cfg.backend is None:
+            cfg = dataclasses.replace(cfg, backend=self.backend)
+        self._placement_status = self._placement_error = None
+        self._placement = None
+        if (self.placement_enabled and self._state is not None
+                and self._state.masks is not None):
+            self._placement = self._plan(params, cfg, name)
+        pm = pack_model(params, cfg, include_unembed=include_unembed,
+                        placement=self._placement)
+        self._packed, self._pack_cfg = pm, cfg
+        return pm
+
+    # -- execution ----------------------------------------------------------
+
+    def linear(self, x: jax.Array, name: str, *,
+               backend: str | None = None) -> jax.Array:
+        """Run one packed projection: x [..., K] -> [..., N] float32.
+
+        ``name`` is the pack's report name or a unique path suffix
+        ("unembed/w", "mixer/wi").  ``backend`` overrides the session
+        backend for this call; all backends are bit-exact.
+        """
+        if self._packed is None:
+            raise RuntimeError("no packed model: call session.pack() first")
+        pt = self._packed.tensor(name)
+        cfg = self._pack_cfg or PUDGemvConfig()
+        return pud_linear(x, pt, cfg, backend=backend or self.backend)
+
+    # -- reporting ----------------------------------------------------------
+
+    def baseline_perf_model(self) -> PUDPerfModel:
+        """The uncalibrated B_{3,0,0} Table-I operating point."""
+        return PUDPerfModel(error_free_frac=1 - ECR_BASELINE_B300)
+
+    def tuned_perf_model(self) -> "FleetPerfModel | PUDPerfModel":
+        """The calibrated device's rate model: the measured per-subarray
+        table when calibrated, the pinned operating point for
+        ``at_operating_point`` sessions, the Table-I T_{2,1,0} constant
+        otherwise."""
+        if self._operating_point is not None:
+            return PUDPerfModel(error_free_frac=1 - self._operating_point)
+        if self._state is not None:
+            return FleetPerfModel.from_table(
+                self._state.ecr, n_fracs=self.n_fracs)
+        return PUDPerfModel(error_free_frac=1 - ECR_PUDTUNE_T210)
+
+    def placement_perf_model(self) -> FleetPerfModel | None:
+        """Rate from the actual column placement (occupied-subarray waves),
+        None when serving on the logical layout."""
+        if self._placement is None:
+            return None
+        return FleetPerfModel.from_placement(
+            self._placement, n_fracs=self.n_fracs)
+
+    def flops_per_token(self) -> float | None:
+        """2 x active params of the session's arch (one MAC = 2 flops)."""
+        if self.arch is None:
+            return None
+        from repro.configs import get
+        return 2.0 * get(self.arch).n_active_params
+
+    def tokens_per_second(self, flops_per_token: float | None = None) -> float:
+        flops = flops_per_token or self.flops_per_token()
+        if flops is None:
+            raise ValueError("no arch on this session: pass flops_per_token")
+        return self.tuned_perf_model().tokens_per_second(flops)
+
+    def perf_report(self, flops_per_token: float | None = None) -> dict:
+        """Everything the serving driver prints: calibration status, Eq.-1
+        rate models, and the placement occupancy report."""
+        base, tune = self.baseline_perf_model(), self.tuned_perf_model()
+        rep: dict = {
+            "device_id": self.device_id,
+            "backend": self.backend,
+            "n_subarrays": self.fleet_cfg.n_subarrays_total,
+            "n_fracs": self.n_fracs,
+            "calibrated": self._state is not None,
+            "cache_hit": (self._state.cache_hit if self._state else None),
+            "mean_ecr": (self._state.mean_ecr if self._state
+                         else self._operating_point),
+            "baseline_model": base,
+            "tuned_model": tune,
+            "gain": tune.speedup_vs(base),
+            "placement": (self._placement.capacity_report()
+                          if self._placement is not None else None),
+            "placement_status": self._placement_status,
+            "placement_model": self.placement_perf_model(),
+        }
+        flops = flops_per_token or self.flops_per_token()
+        if flops is not None:
+            rep["flops_per_token"] = flops
+            rep["baseline_tok_s"] = base.tokens_per_second(flops)
+            rep["tuned_tok_s"] = tune.tokens_per_second(flops)
+            if rep["placement_model"] is not None:
+                rep["placed_tok_s"] = \
+                    rep["placement_model"].tokens_per_second(flops)
+        return rep
+
+    def decode_extras(self) -> dict:
+        """Decode-path diagnostics of the last ``pack``: layout, byte
+        accounting, and the packing report."""
+        if self._packed is None:
+            raise RuntimeError("no packed model: call session.pack() first")
+        return {
+            "backend": self.backend,
+            "layout": ("placed physical" if self._placed_layout
+                       else "logical"),
+            "weight_bits": self._packed.weight_bits,
+            "n_packed": len(self._packed.packed_names),
+            "report": self._packed.report,
+            **packed_bytes(self._packed),
+        }
+
+    @property
+    def _placed_layout(self) -> bool:
+        return self._packed is not None and self._packed.placed

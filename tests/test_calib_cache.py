@@ -130,3 +130,37 @@ def test_crashed_staging_dir_swept_on_save(warm, tmp_path):
     cache.save("dev", CFG, P, np.asarray(lv), ecr=np.asarray(ecr),
                masks=np.asarray(masks))
     assert not torn.exists()                          # gc on the next save
+
+
+# ---------------------------------------------------------------------------
+# CLI (python -m repro.runtime.calib_cache)
+# ---------------------------------------------------------------------------
+
+def test_cli_list_and_stats(warm, tmp_path, capsys):
+    from repro.runtime.calib_cache import main as cli
+    assert cli(["--root", str(tmp_path), "--list"]) == 0
+    out = capsys.readouterr().out
+    assert "dev" in out and table_key(CFG, P) in out and FORMAT in out
+    assert cli(["--root", str(tmp_path), "--stats"]) == 0
+    out = capsys.readouterr().out
+    assert "devices          1" in out
+    assert "table entries    1" in out
+
+
+def test_cli_evict_and_empty(warm, tmp_path, capsys):
+    from repro.runtime.calib_cache import main as cli
+    assert cli(["--root", str(tmp_path), "--evict", "dev"]) == 0
+    assert "evicted 1 table(s)" in capsys.readouterr().out
+    assert cli(["--root", str(tmp_path), "--list"]) == 0
+    assert "no cache entries" in capsys.readouterr().out
+    # missing root reads as empty, not an error
+    assert cli(["--root", str(tmp_path / "nope"), "--stats"]) == 0
+    assert "table entries    0" in capsys.readouterr().out
+
+
+def test_cli_requires_exactly_one_action(tmp_path):
+    from repro.runtime.calib_cache import main as cli
+    with pytest.raises(SystemExit):
+        cli(["--root", str(tmp_path)])
+    with pytest.raises(SystemExit):
+        cli(["--root", str(tmp_path), "--list", "--stats"])

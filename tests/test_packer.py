@@ -1,0 +1,133 @@
+"""``PUDGemvConfig.packable`` matching edge cases: scoped vs bare entries,
+non-packable shapes, and the FFN/attention packing overlap."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.pud.gemv import PUDGemvConfig
+from repro.pud.packer import pack_for_serving, packing_requests
+
+
+def _w(key, *shape):
+    return 0.05 * jax.random.normal(jax.random.key(key), shape, jnp.float32)
+
+
+def _names(params, cfg):
+    return {r.name for r in packing_requests(params, cfg,
+                                             include_unembed=False)}
+
+
+def test_scoped_entry_requires_scope_on_path():
+    params = {
+        "layers_0": {"mixer": {"wi": _w(0, 16, 32)}},
+        "adapter": {"wi": _w(1, 16, 32)},        # same key, wrong scope
+    }
+    cfg = PUDGemvConfig(packable=("mixer.wi",))
+    assert _names(params, cfg) == {"layers_0/mixer/wi"}
+    packed, report = pack_for_serving(params, cfg, include_unembed=False)
+    assert report["packed"] == ["layers_0/mixer/wi"]
+    assert "wi_pud" in packed["layers_0"]["mixer"]
+    assert "wi" in packed["adapter"]             # untouched
+    assert "wi_pud" not in packed["adapter"]
+
+
+def test_scope_matches_any_path_component():
+    # "mixer" may sit anywhere on the path, not just the direct parent.
+    params = {"mixer": {"inner": {"wi": _w(0, 16, 32)}}}
+    cfg = PUDGemvConfig(packable=("mixer.wi",))
+    assert _names(params, cfg) == {"mixer/inner/wi"}
+
+
+def test_bare_entry_matches_in_any_context():
+    params = {
+        "layers_0": {"mixer": {"wi": _w(0, 16, 32)}},
+        "adapter": {"wi": _w(1, 16, 32)},
+    }
+    cfg = PUDGemvConfig(packable=("wi",))
+    assert _names(params, cfg) == {"layers_0/mixer/wi", "adapter/wi"}
+
+
+def test_non_packable_shapes_are_reported_skipped():
+    params = {"layers_0": {"mixer": {
+        "wi": _w(0, 2, 3, 16, 32),     # 4-D non-attn (e.g. MoE expert bank)
+    }}}
+    cfg = PUDGemvConfig(packable=("mixer.wi",))
+    assert _names(params, cfg) == set()
+    packed, report = pack_for_serving(params, cfg, include_unembed=False)
+    assert report["packed"] == []
+    assert report["skipped"] == ["layers_0/mixer/wi"]
+    assert "wi" in packed["layers_0"]["mixer"]   # kept on the bf16 path
+
+
+def test_attn_2d_weight_is_not_packable():
+    # attention keys demand the explicit-head-axis layout; a pre-flattened
+    # 2-D wq under attn is ambiguous and stays unpacked.
+    params = {"layers_0": {"attn": {"wq": _w(0, 16, 32)}}}
+    cfg = PUDGemvConfig(packable=("attn.wq",))
+    packed, report = pack_for_serving(params, cfg, include_unembed=False)
+    assert report["skipped"] == ["layers_0/attn/wq"]
+    assert "wq_pud" not in packed["layers_0"]["attn"]
+
+
+def test_attention_heads_flatten_to_gemv_columns():
+    d, h, dh, n_layers = 16, 4, 8, 2
+    params = {"layers_0": {"attn": {
+        "wq": _w(0, d, h, dh),                   # [D, H, Dh]
+        "wo": _w(1, h, dh, d),                   # [H, Dh, D]
+    }, "stacked_attn": {}}}
+    params["layers_1"] = {"attn": {
+        "wq": _w(2, n_layers, d, h, dh),         # [L, D, H, Dh]
+        "wo": _w(3, n_layers, h, dh, d),         # [L, H, Dh, D]
+    }}
+    cfg = PUDGemvConfig(packable=("attn.wq", "attn.wo"))
+    reqs = {r.name: r for r in packing_requests(params, cfg,
+                                                include_unembed=False)}
+    assert reqs["layers_0/attn/wq"].n_cols == h * dh
+    assert reqs["layers_0/attn/wq"].n_slices == 0
+    assert reqs["layers_0/attn/wo"].n_cols == d
+    assert reqs["layers_1/attn/wq"].n_cols == h * dh
+    assert reqs["layers_1/attn/wq"].n_slices == n_layers
+    packed, report = pack_for_serving(params, cfg, include_unembed=False)
+    assert packed["layers_0"]["attn"]["wq_pud"].planes.shape == \
+        (4, d, h * dh)
+    assert packed["layers_1"]["attn"]["wq_pud"].planes.shape == \
+        (n_layers, 4, d, h * dh)
+
+
+def test_ffn_and_attention_packing_overlap_via_bare_key():
+    # A bare "wo" entry claims both the FFN wo and the attention wo; each
+    # resolves through its own canonicalization.
+    params = {"layers_0": {
+        "mixer": {"wo": _w(0, 32, 16)},
+        "attn": {"wo": _w(1, 4, 8, 16)},
+    }}
+    cfg = PUDGemvConfig(packable=("wo",))
+    assert _names(params, cfg) == {"layers_0/mixer/wo", "layers_0/attn/wo"}
+    packed, report = pack_for_serving(params, cfg, include_unembed=False)
+    assert sorted(report["packed"]) == ["layers_0/attn/wo",
+                                       "layers_0/mixer/wo"]
+    assert packed["layers_0"]["attn"]["wo_pud"].planes.shape == (4, 32, 16)
+    assert packed["layers_0"]["mixer"]["wo_pud"].planes.shape == (4, 32, 16)
+
+
+def test_requests_match_report_names():
+    # the placement contract: packing_requests names == pack report names
+    params = {
+        "layers_0": {"mixer": {"wi": _w(0, 16, 32), "wg": _w(1, 16, 32)},
+                     "attn": {"wq": _w(2, 16, 4, 8)}},
+        "unembed": {"w": _w(3, 16, 64)},
+    }
+    cfg = PUDGemvConfig(packable=("mixer.wi", "mixer.wg", "attn.wq"))
+    reqs = {r.name for r in packing_requests(params, cfg)}
+    _, report = pack_for_serving(params, cfg)
+    assert reqs == set(report["packed"])
+
+
+@pytest.mark.parametrize("entry,key,should", [
+    ("mixer.wi", "wi", True), ("mixer.wi", "wig", False),
+    ("wi", "wi", True), ("wi", "wo", False),
+])
+def test_match_is_exact_on_key_names(entry, key, should):
+    params = {"mixer": {key: _w(0, 16, 32)}}
+    got = _names(params, PUDGemvConfig(packable=(entry,)))
+    assert bool(got) == should

@@ -1,0 +1,300 @@
+"""PUDSession facade + typed packs + backend registry: the public API that
+owns the calibrate -> cache -> place -> pack -> execute chain."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (CalibrationConfig, FleetConfig, PackedModel,
+                       PackedTensor, PUDGemvConfig, PUDSession,
+                       as_packed_tensor, backend_names, get_backend,
+                       pack_model, packed_bytes)
+
+SMALL_CALIB = CalibrationConfig(n_iterations=4, n_samples=64)
+
+
+def _params(key=0, k=64, n=128, n_unembed=256, stacked=0):
+    kw = jax.random.split(jax.random.key(key), 4)
+    shape = (stacked, k, n) if stacked else (k, n)
+
+    def w(i, s):
+        return 0.05 * jax.random.normal(kw[i], s, jnp.float32)
+
+    return {
+        "layers_0": {"mixer": {"wi": w(0, shape),
+                               "wo": w(1, shape[:-2] + (n, k))}},
+        "unembed": {"w": w(2, (k, n_unembed))},
+        "embed": {"w": w(3, (8, k))},
+    }
+
+
+CFG = PUDGemvConfig(weight_bits=4, packable=("mixer.wi", "mixer.wo"))
+
+
+def _session(tmp_path=None, **kw):
+    kw.setdefault("grid", FleetConfig(n_channels=1, n_banks=1,
+                                      n_subarrays=4, n_cols=256))
+    kw.setdefault("calib", SMALL_CALIB)
+    kw.setdefault("n_trials_ecr", 128)
+    kw.setdefault("key", 7)
+    return PUDSession.open(
+        cache_dir=None if tmp_path is None else tmp_path, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Typed packs
+# ---------------------------------------------------------------------------
+
+def test_packed_tensor_mapping_protocol_and_pytree():
+    pt = PackedTensor(planes=jnp.zeros((4, 8, 16), jnp.int8),
+                      scale=jnp.ones((16,), jnp.float32))
+    assert not pt.placed
+    assert pt["planes"].shape == (4, 8, 16)
+    assert pt.get("col_ids") is None
+    assert "col_ids" not in pt and "scale" in pt
+    assert set(pt.keys()) == {"planes", "scale"}
+    with pytest.raises(KeyError):
+        pt["col_ids"]
+    with pytest.raises(KeyError):
+        pt["planes_typo"]
+    # pytree: jit/tree_map round-trip, None col_ids preserved
+    mapped = jax.tree_util.tree_map(lambda x: x + 0, pt)
+    assert isinstance(mapped, PackedTensor) and mapped.col_ids is None
+    out = jax.jit(lambda p: p.planes.sum() + p.scale.sum())(pt)
+    assert float(out) == 16.0
+    # legacy dict coercion
+    legacy = {"planes": pt.planes, "scale": pt.scale}
+    assert isinstance(as_packed_tensor(legacy), PackedTensor)
+    assert as_packed_tensor(pt) is pt
+
+
+def test_packed_tensor_scan_slices_like_dict_packs():
+    pt = PackedTensor(planes=jnp.arange(2 * 4 * 8 * 16, dtype=jnp.int8)
+                      .reshape(2, 4, 8, 16),
+                      scale=jnp.ones((2, 16), jnp.float32),
+                      col_ids=jnp.tile(jnp.arange(16, dtype=jnp.int32),
+                                       (2, 1)))
+
+    def body(carry, p):
+        return carry + p.planes.astype(jnp.int32).sum(), p.col_ids.sum()
+
+    total, ys = jax.lax.scan(body, jnp.int32(0), pt)
+    assert int(total) == int(pt.planes.astype(jnp.int32).sum())
+    assert ys.shape == (2,)
+
+
+def test_pack_model_typed_and_legacy_views():
+    pm = pack_model(_params(), CFG)
+    assert isinstance(pm, PackedModel)
+    assert set(pm.packed_names) == {"layers_0/mixer/wi", "layers_0/mixer/wo",
+                                    "unembed/w"}
+    assert pm.report["packed"] == list(pm.packed_names)
+    assert not pm.placed
+    # flat tensor view + suffix lookup
+    assert set(pm.tensors) == set(pm.packed_names)
+    assert pm.tensor("unembed/w") is not None
+    assert pm.tensor("mixer/wi").planes.shape == (4, 64, 128)
+    with pytest.raises(KeyError, match="not found"):
+        pm.tensor("nope/w")
+    # embed untouched, fp weight dropped from packed projections
+    assert "w" in pm.params["embed"]
+    assert "wi" not in pm.params["layers_0"]["mixer"]
+    sizes = packed_bytes(pm)
+    assert sizes["pud_bytes"] > 0
+    # PackedModel is a pytree: metadata rides aux, params are leaves
+    mapped = jax.tree_util.tree_map(lambda x: x, pm)
+    assert isinstance(mapped, PackedModel)
+    assert mapped.packed_names == pm.packed_names
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+def test_registry_contains_required_backends():
+    names = backend_names()
+    for required in ("pallas", "reference", "interpret"):
+        assert required in names
+    with pytest.raises(KeyError, match="unknown backend"):
+        get_backend("cuda")
+
+
+def test_session_rejects_unknown_backend():
+    with pytest.raises(KeyError, match="unknown backend"):
+        PUDSession.open(backend="not-a-backend")
+
+
+# ---------------------------------------------------------------------------
+# Session lifecycle
+# ---------------------------------------------------------------------------
+
+def test_session_calibrate_miss_then_hit(tmp_path):
+    s1 = _session(tmp_path)
+    st1 = s1.calibrate()
+    assert not st1.cache_hit
+    assert st1.masks.shape == (4, 256)
+    assert s1.calibrate() is st1          # memoized
+    # a fresh session on the same cache dir hits the persisted table
+    s2 = _session(tmp_path)
+    st2 = s2.calibrate()
+    assert st2.cache_hit
+    np.testing.assert_array_equal(np.asarray(st2.levels),
+                                  np.asarray(st1.levels))
+    assert st2.mean_ecr == pytest.approx(st1.mean_ecr)
+
+
+def test_session_pack_places_and_persists(tmp_path):
+    s1 = _session(tmp_path)
+    s1.calibrate()
+    pm = s1.pack(_params(), CFG, name="toy")
+    assert pm.placed and s1.placement_status == "planned"
+    assert s1.placement_name.startswith("toy-")
+    for pt in pm.tensors.values():
+        assert pt.placed
+    # second session: placement comes back from the cache, packs identical
+    s2 = _session(tmp_path)
+    s2.calibrate()
+    pm2 = s2.pack(_params(), CFG, name="toy")
+    assert s2.placement_status == "hit"
+    np.testing.assert_array_equal(
+        np.asarray(pm2.tensor("unembed/w").col_ids),
+        np.asarray(pm.tensor("unembed/w").col_ids))
+
+
+def test_session_uncalibrated_packs_logical():
+    s = _session()
+    pm = s.pack(_params(), CFG)
+    assert not pm.placed and s.placement_status is None
+    assert s.placement is None
+
+
+def test_session_capacity_overflow_skips_placement(tmp_path):
+    s = _session(tmp_path, grid=FleetConfig(n_channels=1, n_banks=1,
+                                            n_subarrays=1, n_cols=128))
+    s.calibrate()
+    pm = s.pack(_params(), CFG)            # demand 512 > 128 cols
+    assert s.placement_status == "skipped"
+    assert "exceeds usable capacity" in s.placement_error
+    assert not pm.placed                   # served on logical columns
+
+
+def test_session_linear_requires_pack():
+    s = _session()
+    with pytest.raises(RuntimeError, match="pack"):
+        s.linear(jnp.zeros((2, 64)), "unembed/w")
+    with pytest.raises(RuntimeError, match="pack"):
+        s.decode_extras()
+
+
+# ---------------------------------------------------------------------------
+# Backend parity (acceptance: bit-exact through the session API, placed
+# and logical layouts)
+# ---------------------------------------------------------------------------
+
+def _assert_parity(session):
+    for name in session.packed.packed_names:
+        k = session.packed.tensor(name).planes.shape[-2]
+        x = jax.random.normal(jax.random.key(3), (5, k), jnp.float32)
+        outs = {be: np.asarray(session.linear(x, name, backend=be))
+                for be in backend_names()}
+        ref = outs.pop("reference")
+        assert ref.shape == (5, session.packed.tensor(name).scale.shape[-1])
+        for be, got in outs.items():
+            np.testing.assert_array_equal(
+                got, ref, err_msg=f"{be} != reference on {name}")
+
+
+def test_backend_parity_logical_layout():
+    s = _session()
+    s.pack(_params(), CFG)
+    _assert_parity(s)
+
+
+def test_backend_parity_placed_layout(tmp_path):
+    s = _session(tmp_path)
+    s.calibrate()
+    s.pack(_params(), CFG)
+    assert s.packed.placed
+    _assert_parity(s)
+
+
+def test_session_backend_reaches_model_dispatch(monkeypatch):
+    """Model forwards call pud_linear(x, pack) with the default config; the
+    session's backend choice must still win there, via the pack stamp."""
+    import repro.kernels.ops as ops
+    from repro.pud.gemv import pud_linear
+    s = _session(backend="reference")
+    pm = s.pack(_params(), CFG)
+    assert pm.tensor("unembed/w").backend == "reference"
+    # the stamp survives pytree ops (it is aux data, not a leaf)
+    mapped = jax.tree_util.tree_map(lambda x: x, pm.tensor("unembed/w"))
+    assert mapped.backend == "reference"
+    seen = []
+    real = ops.get_backend
+    monkeypatch.setattr(ops, "get_backend",
+                        lambda name: (seen.append(name), real(name))[1])
+    x = jnp.zeros((2, 64), jnp.float32)
+    pud_linear(x, pm.tensor("unembed/w"))          # model-dispatch shape
+    assert seen == ["reference"]
+    pud_linear(x, pm.tensor("unembed/w"), backend="interpret")
+    assert seen[-1] == "interpret"                 # per-call override wins
+
+
+def test_placed_linear_matches_logical_linear(tmp_path):
+    placed = _session(tmp_path)
+    placed.calibrate()
+    placed.pack(_params(), CFG)
+    logical = _session()
+    logical.pack(_params(), CFG)
+    for name in placed.packed.packed_names:
+        k = placed.packed.tensor(name).planes.shape[-2]
+        x = jax.random.normal(jax.random.key(5), (3, k), jnp.float32)
+        np.testing.assert_array_equal(
+            np.asarray(placed.linear(x, name)),
+            np.asarray(logical.linear(x, name)))
+
+
+# ---------------------------------------------------------------------------
+# Reporting
+# ---------------------------------------------------------------------------
+
+def test_perf_report_and_decode_extras(tmp_path):
+    s = _session(tmp_path)
+    s.calibrate()
+    s.pack(_params(), CFG)
+    rep = s.perf_report(flops_per_token=2e9)
+    assert rep["calibrated"] and rep["cache_hit"] is False
+    assert 0 <= rep["mean_ecr"] < 0.5
+    assert rep["tuned_tok_s"] > rep["baseline_tok_s"] > 0
+    assert rep["gain"] == pytest.approx(
+        rep["tuned_tok_s"] / rep["baseline_tok_s"])
+    assert rep["placement"]["occupancy"] > 0
+    assert rep["placed_tok_s"] > 0
+    extras = s.decode_extras()
+    assert extras["layout"] == "placed physical"
+    assert extras["n_packed"] == 3
+    assert extras["pud_bytes"] > 0
+    assert extras["report"] == s.packed.report
+
+
+def test_perf_report_uncalibrated_falls_back_to_table1():
+    s = _session()
+    rep = s.perf_report(flops_per_token=2e9)
+    assert not rep["calibrated"] and rep["mean_ecr"] is None
+    # T210 vs B300 Table-I points -> the paper's headline gain
+    assert rep["gain"] == pytest.approx(1.81, abs=0.01)
+
+
+def test_at_operating_point_matches_perf_model():
+    from repro.pud.gemv import PUDPerfModel
+    s = PUDSession.at_operating_point(0.033)
+    want = PUDPerfModel(error_free_frac=1 - 0.033).tokens_per_second(2e9)
+    assert s.tokens_per_second(2e9) == pytest.approx(want)
+
+
+def test_session_arch_gives_flops():
+    s = PUDSession.open("qwen3-1.7b", grid=FleetConfig())
+    assert s.flops_per_token() > 1e9
+    assert "tuned_tok_s" in s.perf_report()
+    with pytest.raises(ValueError, match="flops_per_token"):
+        _session().tokens_per_second()
