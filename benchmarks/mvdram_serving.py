@@ -4,15 +4,21 @@ to the bit-serial MAC schedule of pud/bitserial.py priced on DDR4-2133).
 
 This is the paper's own motivation ("MVDRAM accelerates matrix-vector
 multiplication for LLM inference") quantified per model: tokens/s a
-4-channel DDR4 PUD system sustains for batch-1 decode with 8-bit weights,
-and how much of that rate PUDTune's extra error-free columns buy.  Rates
-come from ``PUDSession``s pinned at the Table-I operating points
+4-channel DDR4 PUD system sustains for decode with 8-bit weights, and how
+much of that rate PUDTune's extra error-free columns buy.  Single-request
+rates come from ``PUDSession``s pinned at the Table-I operating points
 (``PUDSession.at_operating_point``) — swap in ``PUDSession.open`` with a
-``cache_dir`` to price a *measured* device instead.
+``cache_dir`` to price a *measured* device instead.  The batched columns
+price continuous-batching decode with the ``FleetPerfModel`` batch
+extension (per-wave weight-staging amortization; replication needs a
+placement, so the pinned operating point stays at one replica) at batch 2
+and at the model's residency-derived optimum (one replica x operand slots;
+a placed device multiplies this by its replica count).
 """
 from __future__ import annotations
 
-from repro.api import ECR_BASELINE_B300, ECR_PUDTUNE_T210, PUDSession
+from repro.api import (ECR_BASELINE_B300, ECR_PUDTUNE_T210, FleetPerfModel,
+                       PUDSession)
 from repro.configs import all_archs, get
 
 from .common import emit, parse_scale  # noqa: F401  (parse_scale: CLI compat)
@@ -21,6 +27,8 @@ from .common import emit, parse_scale  # noqa: F401  (parse_scale: CLI compat)
 def run(scale=None) -> list[dict]:
     base = PUDSession.at_operating_point(ECR_BASELINE_B300)
     tune = PUDSession.at_operating_point(ECR_PUDTUNE_T210)
+    tune_fleet = FleetPerfModel.from_table([ECR_PUDTUNE_T210])
+    opt = tune_fleet.optimal_batch_size()
     rows = []
     for arch in all_archs():
         spec = get(arch)
@@ -32,6 +40,11 @@ def run(scale=None) -> list[dict]:
             "pudtune_tok_s": tune.tokens_per_second(flops_tok),
             "gain": tune.tuned_perf_model().speedup_vs(
                 base.tuned_perf_model()),
+            "batch2_tok_s": tune_fleet.batched_tokens_per_second(
+                flops_tok, 2),
+            "batch_opt": opt,
+            "batch_opt_tok_s": tune_fleet.batched_tokens_per_second(
+                flops_tok, opt),
         })
     return rows
 
@@ -39,14 +52,18 @@ def run(scale=None) -> list[dict]:
 def main(scale=None) -> None:
     rows = run(scale)
     emit("mvdram_serving", rows,
-         header="batch-1 decode on 4-channel DDR4 PUD, 8-bit weights")
+         header="decode on 4-channel DDR4 PUD, 8-bit weights; batched = "
+                "continuous-batching aggregate rate")
     print("MVDRAM serving model (Eq. 1, per calibrated device):")
     for r in rows:
         print(f"  {r['arch']:<26s} {r['active_params_B']:6.2f}B active: "
               f"{r['baseline_tok_s']:7.3f} -> {r['pudtune_tok_s']:7.3f} tok/s"
-              f"  ({r['gain']:.2f}x)")
+              f"  ({r['gain']:.2f}x)"
+              f"  | batched: {r['batch2_tok_s']:7.3f} @2, "
+              f"{r['batch_opt_tok_s']:7.3f} @{r['batch_opt']} (opt)")
     print("  (PUDTune's column gain converts 1:1 into serving throughput "
-          "for every arch)")
+          "for every arch; batching amortizes per-wave weight staging on "
+          "top of it)")
 
 
 if __name__ == "__main__":

@@ -4,18 +4,21 @@
 
 Order: offset ladders (Fig. 3) -> Table I -> Frac sensitivity (Fig. 5) ->
 reliability (Fig. 6) -> Algorithm-1 convergence -> fleet calibration ->
-Pallas kernels -> serving -> MAJX generalization -> column placement ->
-roofline summary (reads dry-run artifacts if present).
+Pallas kernels -> serving -> serving engine (continuous batching) -> MAJX
+generalization -> column placement -> roofline summary (reads dry-run
+artifacts if present).
 
 Benchmarks register in the ``BENCHES`` dict (name -> runner taking a
 ``BenchScale``); imports stay inside the runners so ``--only``/``--list``
-never pay for modules they don't use.
+never pay for modules they don't use.  A raising benchmark is reported,
+the remaining ones still run, and the process exits nonzero.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import time
+import traceback
 from typing import Callable
 
 from .common import BenchScale
@@ -69,6 +72,12 @@ def _serving(scale):
     mvdram_serving.main(scale)
 
 
+def _serving_engine(scale):
+    """Continuous-batching engine: tokens/s vs batch size + occupancy."""
+    from . import serving_engine
+    serving_engine.main(scale)
+
+
 def _majx(scale):
     """MAJX generalization (MAJ3/MAJ7)."""
     from . import majx_general
@@ -105,34 +114,47 @@ BENCHES: dict[str, Callable[[BenchScale], None]] = {
     "fleet": _fleet,
     "kernels": _kernels,
     "serving": _serving,
+    "serving_engine": _serving_engine,
     "majx": _majx,
     "placement": _placement,
     "roofline": _roofline,
 }
 
 
-def main() -> int:
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true",
                     help="paper-scale protocol (65536 columns; slower)")
     ap.add_argument("--only", default=None, choices=sorted(BENCHES))
     ap.add_argument("--list", action="store_true",
                     help="list registered benchmarks and exit")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     if args.list:
         for name, fn in BENCHES.items():
-            print(f"{name:<12s} {(fn.__doc__ or '').strip()}")
+            print(f"{name:<14s} {(fn.__doc__ or '').strip()}")
         return 0
     scale = (BenchScale(n_cols=65536, n_cols_arith=4096, full=True)
              if args.full else BenchScale())
 
     t0 = time.time()
     names = [args.only] if args.only else list(BENCHES)
+    failures: list[str] = []
     for name in names:
         print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}", flush=True)
-        BENCHES[name](scale)
-    print(f"\nall benchmarks done in {time.time() - t0:.0f}s")
-    return 0
+        # A raising benchmark must not take the rest of the suite down with
+        # it — but it MUST fail the run: CI smoke jobs key off the exit
+        # code, and a swallowed exception reads as a green pass.
+        try:
+            BENCHES[name](scale)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+            print(f"[run] benchmark {name!r} FAILED", flush=True)
+    status = (f"{len(failures)} FAILED ({', '.join(failures)})" if failures
+              else "all passed")
+    print(f"\n{len(names)} benchmark(s) in {time.time() - t0:.0f}s: "
+          f"{status}")
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":

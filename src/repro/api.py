@@ -33,11 +33,14 @@ from repro.pud.physics import PhysicsParams
 from repro.pud.placement import (Placement, PlacementError, PlacementRequest,
                                  TensorPlacement, inject_read_faults)
 from repro.runtime.calib_cache import CalibrationTableCache
+from repro.runtime.engine import Completion, Request, ServingEngine
 from repro.runtime.session import CalibrationState, PUDSession
 
 __all__ = [
     # session lifecycle
     "PUDSession", "CalibrationState",
+    # batched serving
+    "ServingEngine", "Request", "Completion",
     # configs
     "PUDGemvConfig", "FleetConfig", "CalibrationConfig", "PhysicsParams",
     "FFN_PACKABLE", "ATTN_PACKABLE",

@@ -9,11 +9,14 @@ threading ``interpret``/oracle flags through every call site:
     regardless of platform.  Useful for debugging kernel changes on TPU.
   * ``reference`` — the pure-jnp oracle (kernels/ref.py).
 
-Every backend implements the same two entry points (``gemv`` for the logical
-layout, ``gemv_placed`` for the column-placed layout) and all are bit-exact
-against each other — enforced by tests/test_session.py across placed and
-unplaced packs.  ``PUDSession`` selects a backend per session and per call;
-register custom ones (e.g. a future GPU lowering) with ``register_backend``.
+Every backend implements the same entry points — ``gemv``/``gemv_placed``
+for the single-block GeMV and ``gemm``/``gemm_placed`` for the batch-tiled
+GEMM the serving engine feeds — and all are bit-exact against each other,
+enforced by tests/test_session.py and tests/test_bitplane_gemm.py across
+placed and unplaced packs.  ``PUDSession`` selects a backend per session and
+per call; register custom ones (e.g. a future GPU lowering) with
+``register_backend`` (backends without GEMM lowerings fall back to their
+GeMV entry, which already accepts a [B, K] operand block).
 """
 from __future__ import annotations
 
@@ -23,6 +26,7 @@ from typing import Callable
 import jax
 
 from . import ref
+from .bitplane_gemm import bitplane_gemm, bitplane_gemm_placed
 from .bitplane_gemv import bitplane_gemv, bitplane_gemv_placed
 
 DEFAULT_BACKEND = "pallas"
@@ -30,16 +34,29 @@ DEFAULT_BACKEND = "pallas"
 
 @dataclasses.dataclass(frozen=True)
 class Backend:
-    """One named lowering of the bit-plane GeMV.
+    """One named lowering of the bit-plane GeMV/GEMM.
 
     ``gemv(x, planes, mode)``: [B, K] int8 x [WB, K, N] planes -> [B, N]
-    int32.  ``gemv_placed(x, planes, col_ids, mode)``: same, with planes in
-    the physical-window layout and the logical->window gather map.
+    int32 with the whole B in one block (decode-shaped).  ``gemv_placed
+    (x, planes, col_ids, mode)``: same, with planes in the physical-window
+    layout and the logical->window gather map.  ``gemm``/``gemm_placed``:
+    identical signatures and numerics with the batch axis tiled into the
+    kernel grid (serving-engine-shaped); None falls back to the GeMV entry.
     """
 
     name: str
     gemv: Callable[..., jax.Array]
     gemv_placed: Callable[..., jax.Array]
+    gemm: Callable[..., jax.Array] | None = None
+    gemm_placed: Callable[..., jax.Array] | None = None
+
+    def matmul(self, x, planes, mode="folded"):
+        """Batch-tiled entry, falling back to the one-block GeMV."""
+        return (self.gemm or self.gemv)(x, planes, mode)
+
+    def matmul_placed(self, x, planes, col_ids, mode="folded"):
+        return (self.gemm_placed or self.gemv_placed)(x, planes, col_ids,
+                                                      mode)
 
 
 _REGISTRY: dict[str, Backend] = {}
@@ -76,6 +93,11 @@ register_backend(Backend(
     gemv_placed=lambda x, planes, col_ids, mode="folded":
         bitplane_gemv_placed(x, planes, col_ids, mode=mode,
                              interpret=_pallas_interpret()),
+    gemm=lambda x, planes, mode="folded": bitplane_gemm(
+        x, planes, mode=mode, interpret=_pallas_interpret()),
+    gemm_placed=lambda x, planes, col_ids, mode="folded":
+        bitplane_gemm_placed(x, planes, col_ids, mode=mode,
+                             interpret=_pallas_interpret()),
 ))
 
 register_backend(Backend(
@@ -84,11 +106,19 @@ register_backend(Backend(
         x, planes, mode=mode, interpret=True),
     gemv_placed=lambda x, planes, col_ids, mode="folded":
         bitplane_gemv_placed(x, planes, col_ids, mode=mode, interpret=True),
+    gemm=lambda x, planes, mode="folded": bitplane_gemm(
+        x, planes, mode=mode, interpret=True),
+    gemm_placed=lambda x, planes, col_ids, mode="folded":
+        bitplane_gemm_placed(x, planes, col_ids, mode=mode, interpret=True),
 ))
 
 register_backend(Backend(
     name="reference",
+    # The jnp oracle is already batch-shaped: the same entry serves both.
     gemv=lambda x, planes, mode="folded": ref.bitplane_gemv_ref(x, planes),
     gemv_placed=lambda x, planes, col_ids, mode="folded":
+        ref.bitplane_gemv_placed_ref(x, planes, col_ids),
+    gemm=lambda x, planes, mode="folded": ref.bitplane_gemv_ref(x, planes),
+    gemm_placed=lambda x, planes, col_ids, mode="folded":
         ref.bitplane_gemv_placed_ref(x, planes, col_ids),
 ))

@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: bit-plane GEMM — the batched MVDRAM compute pattern.
+
+``bitplane_gemv.py`` keeps the whole activation batch in one VMEM block,
+which is exactly right for the single-vector decode the paper evaluates but
+wrong for a serving engine: a continuous-batching scheduler feeds the array
+``(B, K)`` operand matrices whose B is the number of in-flight requests (or
+B*S prefill rows), and a single unblocked batch axis either blows the VMEM
+budget or serializes the MXU.
+
+This kernel is the GEMM generalization: the same HBM bit-plane layout
+(weights as WB planes W_b in {0,1} — what a PUD subarray holds), with the
+batch axis tiled into the grid:
+
+    grid (B/Bb, N/Nb, K/Kb);  blocks x [Bb, Kb] int8,
+    planes [WB, Kb, Nb] int8, out [Bb, Nb] int32.
+
+K is the reduction axis (innermost, accumulated in the output block — the
+out block index depends only on (b, n)).  Both execution modes of the GeMV
+kernel carry over unchanged (``planes`` = one MXU pass per bit-plane,
+``folded`` = planes folded to int8 in VMEM, one pass per K-tile), and the
+placed variant fuses the logical->physical column gather exactly like
+``bitplane_gemv_placed``.
+
+Ragged batches (a continuous-batching step whose live-slot count is not a
+tile multiple) are handled here: B pads up to the batch tile with zero rows,
+which cannot perturb other rows — every output element is an independent
+integer dot product — and the pad is sliced off after the kernel.  Bit-exact
+vs a row-vmapped ``bitplane_gemv`` (enforced in tests/test_bitplane_gemm.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The kernel bodies are the GeMV ones with the K reduction axis moved to
+# grid position 2 (after the new batch axis); only the grid/BlockSpec
+# plumbing differs.
+from .bitplane_gemv import (_gemv_kernel, _gemv_placed_kernel, _sign_fix)
+
+B_BLOCK = 128
+K_BLOCK = 256
+N_BLOCK = 256
+
+
+def _pad_batch(x: jax.Array, bb: int) -> jax.Array:
+    b = x.shape[0]
+    if b % bb == 0:
+        return x
+    return jnp.pad(x, ((0, bb - b % bb), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def bitplane_gemm(
+    x: jax.Array,        # [B, K] int8 activations (any B, padded here)
+    planes: jax.Array,   # [WB, K, N] int8 in {0,1} — offset-binary weight bits
+    mode: str = "planes",
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched offset-binary bit-plane GEMM; returns [B, N] int32 of
+    x @ (W - 2^{WB-1}).  Bit-exact vs ``bitplane_gemv`` row by row."""
+    b, k = x.shape
+    wb, k2, n = planes.shape
+    kb, nb = min(k, K_BLOCK), min(n, N_BLOCK)
+    bb = min(b, B_BLOCK)
+    assert k == k2 and k % kb == 0 and n % nb == 0, (x.shape, planes.shape)
+    xp = _pad_batch(x, bb)
+    bp = xp.shape[0]
+    grid = (bp // bb, n // nb, k // kb)
+    kernel = functools.partial(_gemv_kernel, mode=mode, n_bits=wb, k_axis=2)
+    unsigned = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, kb), lambda jb, jn, jk: (jb, jk)),
+            pl.BlockSpec((wb, kb, nb), lambda jb, jn, jk: (0, jk, jn)),
+        ],
+        out_specs=pl.BlockSpec((bb, nb), lambda jb, jn, jk: (jb, jn)),
+        out_shape=jax.ShapeDtypeStruct((bp, n), jnp.int32),
+        interpret=interpret,
+    )(xp, planes)
+    return unsigned[:b] - _sign_fix(x, wb)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def bitplane_gemm_placed(
+    x: jax.Array,         # [B, K] int8 activations
+    planes: jax.Array,    # [WB, K, P] int8 physical window (placed layout)
+    col_ids: jax.Array,   # [N] int32 logical -> window column map
+    mode: str = "planes",
+    interpret: bool = True,
+) -> jax.Array:
+    """Column-placed batched GEMM; returns [B, N] like ``bitplane_gemm``.
+
+    ``planes`` is the physically-permuted window layout a placement-aware
+    packer emits (repro/pud/placement.py); the gather is fused into the
+    kernel per N-block.  Bit-exact vs ``bitplane_gemv_placed`` row by row.
+    """
+    b, k = x.shape
+    wb, k2, p = planes.shape
+    (n,) = col_ids.shape
+    kb, nb = min(k, K_BLOCK), min(n, N_BLOCK)
+    bb = min(b, B_BLOCK)
+    assert k == k2 and k % kb == 0 and n % nb == 0, \
+        (x.shape, planes.shape, col_ids.shape)
+    xp = _pad_batch(x, bb)
+    bp = xp.shape[0]
+    grid = (bp // bb, n // nb, k // kb)
+    kernel = functools.partial(_gemv_placed_kernel, mode=mode, n_bits=wb,
+                               k_axis=2)
+    unsigned = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, kb), lambda jb, jn, jk: (jb, jk)),
+            pl.BlockSpec((1, nb), lambda jb, jn, jk: (0, jn)),
+            # whole physical window per K-tile: the gather needs arbitrary
+            # window columns, so the P axis stays unblocked
+            pl.BlockSpec((wb, kb, p), lambda jb, jn, jk: (0, jk, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, nb), lambda jb, jn, jk: (jb, jn)),
+        out_shape=jax.ShapeDtypeStruct((bp, n), jnp.int32),
+        interpret=interpret,
+    )(xp, col_ids.astype(jnp.int32)[None, :], planes)
+    return unsigned[:b] - _sign_fix(x, wb)

@@ -58,8 +58,12 @@ def _accumulate(x, planes, out_shape, mode: str, n_bits: int):
     return acc
 
 
-def _gemv_kernel(x_ref, planes_ref, out_ref, *, mode: str, n_bits: int):
-    k_idx = pl.program_id(1)
+def _gemv_kernel(x_ref, planes_ref, out_ref, *, mode: str, n_bits: int,
+                 k_axis: int = 1):
+    """``k_axis`` names the grid position of the K reduction axis: 1 for
+    the GeMV grid (N, K), 2 for the batch-tiled GEMM grid (B, N, K) —
+    bitplane_gemm.py reuses this body with k_axis=2."""
+    k_idx = pl.program_id(k_axis)
 
     @pl.when(k_idx == 0)
     def _init():
@@ -71,7 +75,7 @@ def _gemv_kernel(x_ref, planes_ref, out_ref, *, mode: str, n_bits: int):
 
 
 def _gemv_placed_kernel(x_ref, cols_ref, planes_ref, out_ref, *,
-                        mode: str, n_bits: int):
+                        mode: str, n_bits: int, k_axis: int = 1):
     """Placed variant: gather physical columns inside the kernel.
 
     ``planes_ref`` holds the PHYSICAL window [WB, Kb, P] of this tensor's
@@ -79,7 +83,7 @@ def _gemv_placed_kernel(x_ref, cols_ref, planes_ref, out_ref, *,
     columns onto window positions.  The gather is fused with the matmul —
     the permuted planes never round-trip through HBM.
     """
-    k_idx = pl.program_id(1)
+    k_idx = pl.program_id(k_axis)
 
     @pl.when(k_idx == 0)
     def _init():
@@ -89,6 +93,13 @@ def _gemv_placed_kernel(x_ref, cols_ref, planes_ref, out_ref, *,
     cols = cols_ref[0, :]                          # [Nb] window positions
     planes = jnp.take(planes_ref[...], cols, axis=2)   # [WB, Kb, Nb]
     out_ref[...] += _accumulate(x, planes, out_ref.shape, mode, n_bits)
+
+
+def _sign_fix(x: jax.Array, wb: int) -> jax.Array:
+    """Offset-binary correction shared by the GeMV and GEMM wrappers:
+    planes encode u = w + 2^{WB-1}, so the signed result subtracts
+    2^{WB-1} * sum_k x_k per row."""
+    return (1 << (wb - 1)) * x.astype(jnp.int32).sum(axis=1, keepdims=True)
 
 
 @functools.partial(
@@ -123,8 +134,7 @@ def bitplane_gemv(
         out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
         interpret=interpret,
     )(x, planes)
-    sign_fix = (1 << (wb - 1)) * x.astype(jnp.int32).sum(axis=1, keepdims=True)
-    return unsigned - sign_fix
+    return unsigned - _sign_fix(x, wb)
 
 
 @functools.partial(
@@ -167,5 +177,4 @@ def bitplane_gemv_placed(
         out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
         interpret=interpret,
     )(x, col_ids.astype(jnp.int32)[None, :], planes)
-    sign_fix = (1 << (wb - 1)) * x.astype(jnp.int32).sum(axis=1, keepdims=True)
-    return unsigned - sign_fix
+    return unsigned - _sign_fix(x, wb)

@@ -11,23 +11,30 @@ import jax.numpy as jnp
 
 from . import ref
 from .backends import get_backend
+from .bitplane_gemm import bitplane_gemm, bitplane_gemm_placed
 from .bitplane_gemv import bitplane_gemv, bitplane_gemv_placed
 from .majx import majx_sense
 
 __all__ = [
-    "majx_sense", "bitplane_gemv", "bitplane_gemv_placed", "pud_gemv",
+    "majx_sense", "bitplane_gemv", "bitplane_gemv_placed", "bitplane_gemm",
+    "bitplane_gemm_placed", "pud_matmul", "pud_gemv",
     "quantize_activations",
 ]
 
 
 def quantize_activations(x: jax.Array, clip: float = 4.0) -> tuple[jax.Array, jax.Array]:
-    """Per-row symmetric int8 quantization for the PUD GeMV input."""
+    """Per-row symmetric int8 quantization for the PUD GeMV input.
+
+    Row-independent by construction (per-row scale), so batched and
+    per-request execution quantize each request identically — the property
+    the batched-vs-sequential bit-exactness guarantee rests on.
+    """
     scale = jnp.maximum(jnp.abs(x).max(axis=-1, keepdims=True), 1e-6) / 127.0
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     return q, scale
 
 
-def pud_gemv(
+def pud_matmul(
     x: jax.Array,          # [B, K] float activations
     planes: jax.Array,     # [WB, K, N] int8 bit-planes (offset-binary)
     w_scale: jax.Array,    # [N] or scalar dequant scale
@@ -36,7 +43,12 @@ def pud_gemv(
     col_ids: jax.Array | None = None,   # [N] window map -> placed kernel
     backend: str | None = None,         # named backend (kernels/backends.py)
 ) -> jax.Array:
-    """Quantize -> bit-plane GeMV -> dequantize. Returns [B, N] float32.
+    """Quantize -> bit-plane GEMM -> dequantize. Returns [B, N] float32.
+
+    The batched primary entry of the PUD execution path: B = 1 runs the
+    decode-shaped GeMV kernel (whole batch in one block, the faithful
+    single-vector schedule), B > 1 the batch-tiled GEMM kernel — bit-exact
+    against each other, so the dispatch is purely a tiling decision.
 
     With ``col_ids`` the planes are the physically-placed window layout
     (repro/pud/placement.py) and the column gather runs fused in the kernel.
@@ -46,11 +58,36 @@ def pud_gemv(
     """
     xq, x_scale = quantize_activations(x)
     be = get_backend(backend or ("interpret" if interpret else "pallas"))
+    batched = xq.shape[0] > 1
     if col_ids is not None:
-        acc = be.gemv_placed(xq, planes, col_ids, mode)
+        acc = (be.matmul_placed(xq, planes, col_ids, mode) if batched
+               else be.gemv_placed(xq, planes, col_ids, mode))
     else:
-        acc = be.gemv(xq, planes, mode)
+        acc = (be.matmul(xq, planes, mode) if batched
+               else be.gemv(xq, planes, mode))
     return acc.astype(jnp.float32) * x_scale * w_scale
+
+
+def pud_gemv(
+    x: jax.Array,          # [K] or [B, K] float activations
+    planes: jax.Array,
+    w_scale: jax.Array,
+    mode: str = "folded",
+    interpret: bool = True,
+    col_ids: jax.Array | None = None,
+    backend: str | None = None,
+) -> jax.Array:
+    """Rank-dispatching shim over ``pud_matmul``.
+
+    Kept as the legacy single-request entry: a 1-D ``x`` [K] returns [N],
+    a 2-D ``x`` [B, K] behaves exactly like ``pud_matmul``.
+    """
+    if x.ndim == 1:
+        return pud_matmul(x[None, :], planes, w_scale, mode=mode,
+                          interpret=interpret, col_ids=col_ids,
+                          backend=backend)[0]
+    return pud_matmul(x, planes, w_scale, mode=mode, interpret=interpret,
+                      col_ids=col_ids, backend=backend)
 
 
 def pud_gemv_ref(x, planes, w_scale, col_ids=None):

@@ -20,16 +20,24 @@ columns only, repro/pud/placement.py) -> physically-permuted packs -> the
 placed Pallas kernel, and the serving rate is derived from the actual
 placement occupancy instead of a mean error-free fraction.
 
+With ``--engine`` generation runs through the continuous-batching
+``ServingEngine`` (runtime/engine.py): each prompt row becomes a queued
+request, slots admit/evict at step granularity, and ``--batch-size``
+(default: the session's occupancy-derived optimum) sets the padded decode
+batch.  Batched decode is bit-identical per request to the lockstep loop.
+
 All of that wiring lives behind ``repro.api.PUDSession`` (docs/api.md);
 this driver is one consumer of the session, not the owner of the chain.
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get
 from repro.models.params import init_params, param_count
@@ -37,28 +45,47 @@ from repro.pud.gemv import ATTN_PACKABLE, FFN_PACKABLE, PUDGemvConfig
 from repro.runtime.steps import make_serve_step
 
 
+@functools.lru_cache(maxsize=8)
+def _jitted(model):
+    """Per-model jitted (prefill, serve step) pair, cached so repeated
+    greedy_generate calls (bf16 + pud legs, tests) reuse one trace cache."""
+    return (jax.jit(model.prefill, static_argnames=("max_len",)),
+            jax.jit(make_serve_step(model)))
+
+
 def greedy_generate(model, params, tokens, gen: int, max_len: int,
-                    extras: dict | None = None, prefix_len: int = 0):
+                    extras: dict | None = None, prefix_len: int = 0,
+                    key: jax.Array | None = None):
     """Prefill then ``gen`` greedy steps. Returns [B, gen] tokens.
 
     prefix_len: non-token positions preceding the prompt in the cache
     (VLM patch prefix) — decode positions start after prompt + prefix.
+    key: explicit PRNG key threaded into the serve step (step ``i`` sees
+    ``fold_in(key, i)``); defaults to ``jax.random.key(0)``, the former
+    implicit constant.  Greedy decode never consumes it, but threading it
+    explicitly keeps batched-vs-sequential comparisons (and any sampling
+    serve step) reproducible from one seed.
+
+    Prefill runs jitted (like the decode steps and the ServingEngine's
+    per-request prefill), so per-request sequential decode and batched
+    engine decode see bit-identical logits end to end.
     """
+    prefill, step = _jitted(model)
     if extras:
-        logits, cache = model.prefill(params, tokens, *extras.values(),
-                                      max_len=max_len)
+        logits, cache = prefill(params, tokens, *extras.values(),
+                                max_len=max_len)
     else:
-        logits, cache = model.prefill(params, tokens, max_len=max_len)
+        logits, cache = prefill(params, tokens, max_len=max_len)
     cur = tokens.shape[1] + prefix_len
     out = []
-    step = jax.jit(make_serve_step(model))
     nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-    key = jax.random.key(0)
+    if key is None:
+        key = jax.random.key(0)
     all_logits = [logits]
     for i in range(gen):
         out.append(nxt)
         nxt, logits, cache = step(params, cache, nxt, jnp.int32(cur + i),
-                                  key)
+                                  jax.random.fold_in(key, i))
         all_logits.append(logits)
     return jnp.concatenate(out, axis=1), jnp.stack(all_logits, axis=1)
 
@@ -71,6 +98,14 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--pud-gemv", action="store_true")
+    ap.add_argument("--engine", action="store_true",
+                    help="also serve through the continuous-batching "
+                         "ServingEngine (one request per batch row); "
+                         "combine with --pud-gemv to feed it the packed "
+                         "PUD path, alone it serves the bf16 tree")
+    ap.add_argument("--batch-size", type=int, default=None,
+                    help="engine decode slots; default = the session's "
+                         "occupancy-derived optimal batch")
     ap.add_argument("--pud-attention", action="store_true",
                     help="also pack attention wq/wk/wv/wo onto the PUD path")
     ap.add_argument("--weight-bits", type=int, default=4)
@@ -194,6 +229,43 @@ def main(argv=None) -> int:
             print(f"    placement-derived rate (occupied-subarray waves): "
                   f"{perf['placed_tok_s']:.2f} "
                   f"tok/s at {session.placement.occupancy:.1%} occupancy")
+
+    if args.engine:
+        if extras:
+            print("  engine: vlm/encdec families not supported yet "
+                  "(extras require family-specific prefill); skipping")
+            return 0
+        from repro.runtime.engine import Request, ServingEngine
+        serve_params = packed.params if args.pud_gemv else params
+        engine = ServingEngine(
+            model, serve_params,
+            session=session if args.pud_gemv else None,
+            max_len=max_len, batch_size=args.batch_size)
+        requests = [Request(request_id=i, tokens=tokens[i],
+                            max_new_tokens=args.gen)
+                    for i in range(args.batch)]
+        completions = engine.run(requests)
+        sched = engine.scheduler_report()
+        print(f"  engine: {sched['completed']} requests, "
+              f"{sched['generated_tokens']} tokens in {sched['steps']} steps "
+              f"({sched['batch_size']} slots, "
+              f"occupancy {sched['slot_occupancy']:.1%}, "
+              f"{sched['wall_tok_s']:.1f} tok/s CPU wall)")
+        # continuous batching must not change any request's tokens
+        seq = ref_toks if not args.pud_gemv else toks
+        agree = float(np.mean([c.tokens == list(np.asarray(seq[i]))
+                               for i, c in enumerate(completions)]))
+        print(f"    batched vs lockstep decode: "
+              f"{100 * agree:.1f}% of requests bit-identical")
+        if args.pud_gemv:
+            perf = session.perf_report(2 * spec.n_active_params,
+                                       batch_size=engine.batch_size)
+            if "batched_tok_s" in perf:
+                print(f"    DDR4-PUD batched rate: "
+                      f"{perf['batched_tok_s']:.2f} aggregate tok/s at "
+                      f"batch {perf['batch_size']} "
+                      f"({perf['batch_speedup']:.2f}x over batch-1; "
+                      f"occupancy-derived optimum {perf['optimal_batch']})")
     return 0
 
 

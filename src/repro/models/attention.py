@@ -195,10 +195,19 @@ def gqa_decode(p, cfg: AttnConfig, x, cache_k, cache_v, cur_len,
                cross: bool = False):
     """One-token decode. x: [B, 1, D]; cache_k/v: [B, Smax, KV, D].
 
+    ``cur_len`` is the current cache fill: a scalar (all rows at the same
+    position — the classic single-sequence/batched-prompt decode) or a [B]
+    vector of per-slot lengths (continuous batching: every slot sits at its
+    own position; the cache write becomes a per-row scatter and the causal
+    mask goes per-row).  Rows are independent either way, so the vector
+    path is bit-identical per row to the scalar path at that row's length.
+
     Returns (out [B,1,D], new_cache_k, new_cache_v).
     For cross-attention the cache holds encoder K/V and is not updated.
     """
     b, smax = cache_k.shape[0], cache_k.shape[1]
+    lens = jnp.asarray(cur_len)
+    per_slot = lens.ndim == 1
     q = head_proj(p, "wq", x, cfg.n_heads, cfg.head_dim)
     if not cross:
         k_new = head_proj(p, "wk", x, cfg.n_kv_heads, cfg.head_dim)
@@ -206,25 +215,36 @@ def gqa_decode(p, cfg: AttnConfig, x, cache_k, cache_v, cur_len,
         if cfg.qk_norm:
             q = rmsnorm(p["q_norm"], q)
             k_new = rmsnorm(p["k_norm"], k_new)
-        pos = jnp.full((b, 1), cur_len)
+        pos = lens[:, None] if per_slot else jnp.full((b, 1), lens)
         q = rope(q, pos, cfg.rope_theta)
         k_new = rope(k_new, pos, cfg.rope_theta)
-        cache_k = jax.lax.dynamic_update_slice_in_dim(
-            cache_k, k_new.astype(cache_k.dtype), cur_len, axis=1)
-        cache_v = jax.lax.dynamic_update_slice_in_dim(
-            cache_v, v_new.astype(cache_v.dtype), cur_len, axis=1)
-        valid_len = cur_len + 1
+        if per_slot:
+            rows = jnp.arange(b)
+            cache_k = cache_k.at[rows, lens].set(
+                k_new[:, 0].astype(cache_k.dtype), mode="drop")
+            cache_v = cache_v.at[rows, lens].set(
+                v_new[:, 0].astype(cache_v.dtype), mode="drop")
+        else:
+            cache_k = jax.lax.dynamic_update_slice_in_dim(
+                cache_k, k_new.astype(cache_k.dtype), cur_len, axis=1)
+            cache_v = jax.lax.dynamic_update_slice_in_dim(
+                cache_v, v_new.astype(cache_v.dtype), cur_len, axis=1)
+        valid_len = lens + 1
     else:
         if cfg.qk_norm:
             q = rmsnorm(p["q_norm"], q)
-        valid_len = smax
+        valid_len = jnp.full(lens.shape, smax)
     h, kvh, d = q.shape[2], cache_k.shape[2], q.shape[3]
     g = h // kvh
     qr = q.reshape(b, kvh, g, d)
     s = jnp.einsum("bkgd,bpkd->bkgp", qr, cache_k,
                    preferred_element_type=jnp.float32) * d ** -0.5
-    mask = jnp.arange(smax) < valid_len
-    s = jnp.where(mask[None, None, None, :], s, -jnp.inf)
+    if per_slot:
+        mask = jnp.arange(smax)[None, :] < valid_len[:, None]     # [B, Smax]
+        s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    else:
+        mask = jnp.arange(smax) < valid_len
+        s = jnp.where(mask[None, None, None, :], s, -jnp.inf)
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgp,bpkd->bkgd", w.astype(cache_v.dtype), cache_v)
     o = o.reshape(b, 1, h, d)
@@ -303,20 +323,30 @@ def mla_decode(p, cfg: MLAConfig, x, cache_ckv, cache_kr, cur_len):
     per-step cost is O(S * (R + dr)) instead of O(S * H * head_dim).
 
     cache_ckv: [B, Smax, R]; cache_kr: [B, Smax, dr].
+    ``cur_len``: scalar or per-slot [B] vector, as in ``gqa_decode``.
     """
     b, smax, r = cache_ckv.shape
+    lens = jnp.asarray(cur_len)
+    per_slot = lens.ndim == 1
     q = head_proj(p, "wq", x, cfg.n_heads, cfg.qk_dim)[:, 0]
     q_nope, q_rope = q[..., :cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
-    pos = jnp.full((b, 1), cur_len)
+    pos = lens[:, None] if per_slot else jnp.full((b, 1), lens)
     q_rope = rope(q_rope[:, None], pos, cfg.rope_theta)[:, 0]
 
     c_new = rmsnorm(p["kv_norm"], x @ p["wdkv"].astype(x.dtype))  # [B,1,R]
     kr_new = rope((x @ p["wkr"].astype(x.dtype))[:, :, None, :], pos,
                   cfg.rope_theta)[:, :, 0, :]
-    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
-        cache_ckv, c_new.astype(cache_ckv.dtype), cur_len, axis=1)
-    cache_kr = jax.lax.dynamic_update_slice_in_dim(
-        cache_kr, kr_new.astype(cache_kr.dtype), cur_len, axis=1)
+    if per_slot:
+        rows = jnp.arange(b)
+        cache_ckv = cache_ckv.at[rows, lens].set(
+            c_new[:, 0].astype(cache_ckv.dtype), mode="drop")
+        cache_kr = cache_kr.at[rows, lens].set(
+            kr_new[:, 0].astype(cache_kr.dtype), mode="drop")
+    else:
+        cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+            cache_ckv, c_new.astype(cache_ckv.dtype), cur_len, axis=1)
+        cache_kr = jax.lax.dynamic_update_slice_in_dim(
+            cache_kr, kr_new.astype(cache_kr.dtype), cur_len, axis=1)
 
     # absorb W_uk into the query: scores in latent space.  bf16 inputs with
     # f32 accumulation (preferred_element_type) — an .astype(f32) on the
@@ -332,8 +362,12 @@ def mla_decode(p, cfg: MLAConfig, x, cache_ckv, cache_kr, cur_len):
                       preferred_element_type=jnp.float32))
     s = hint(s, "batch", None, "kv_seq")
     s = s * (cfg.qk_dim ** -0.5)
-    mask = jnp.arange(smax) < cur_len + 1
-    s = jnp.where(mask[None, None, :], s, -jnp.inf)
+    if per_slot:
+        mask = jnp.arange(smax)[None, :] < (lens + 1)[:, None]    # [B, Smax]
+        s = jnp.where(mask[:, None, :], s, -jnp.inf)
+    else:
+        mask = jnp.arange(smax) < lens + 1
+        s = jnp.where(mask[None, None, :], s, -jnp.inf)
     w = jax.nn.softmax(s, axis=-1)
     o_lat = jnp.einsum("bhp,bpr->bhr", w.astype(cache_ckv.dtype), cache_ckv)
     o = jnp.einsum("bhr,rhk->bhk", o_lat, p["wuv"].astype(x.dtype))

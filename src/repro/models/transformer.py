@@ -257,7 +257,9 @@ class TransformerLM:
         return logits_last(params["unembed"], h[:, -1]), cache
 
     def decode_step(self, params, cache, tokens, cur_len):
-        """tokens: [B, 1]; cur_len: scalar int (current cache fill).
+        """tokens: [B, 1]; cur_len: current cache fill — a scalar int, or a
+        [B] int vector of per-slot lengths for continuous batching (each
+        batch slot decodes at its own position; see runtime/engine.py).
 
         Returns (logits [B, V], new cache).
         """

@@ -30,7 +30,7 @@ from repro.kernels.ref import pack_bitplanes
 
 from .bitserial import add8_counts, mul8_counts
 from .packed import PackedTensor, as_packed_tensor
-from .timing import SystemConfig, wave_latency_ns
+from .timing import OpCounts, SystemConfig, wave_latency_ns
 
 # Default packable set: FFN projections (dominant decode GeMV flops).
 # Entries are "scope.name" (scope = any path component) or a bare name.
@@ -152,11 +152,34 @@ class FleetPerfModel:
     sustained rate prices waves rotating uniformly over the grid (mean
     error-free fraction), and the distribution bounds what a worst-case
     subarray placement would cost.
+
+    The batched extension models multi-request (continuous-batching) decode:
+
+      * **Replication** — a placement that occupies ``occupied_subarrays``
+        of ``total_subarrays`` leaves idle subarrays that can hold replicas
+        of the same placed weights; up to ``n_replicas`` requests execute
+        fully in parallel.
+      * **Operand amortization** — within one replica, the weight bit
+        columns are static across the batch, so the weight-side staging row
+        copies of each MAC's MUL8 partial-product ops are paid once per
+        wave instead of once per request; only operand staging + the MAJ
+        graph itself scale with the per-replica batch.
+      * **Operand residency** — a subarray stages at most ``operand_slots``
+        operand vectors per wave; past ``n_replicas * operand_slots``
+        requests serialize into extra wave groups and aggregate throughput
+        stops improving.  That bound is the occupancy-derived optimal
+        batch size (``optimal_batch_size``).
     """
 
     error_free_fracs: tuple[float, ...]      # per subarray
     n_fracs: int = 3
     sys: SystemConfig = dataclasses.field(default_factory=SystemConfig)
+    # Batched-serving shape of the device: how many copies of the placed
+    # weights fit (from placement occupancy), and how many operand vectors
+    # a subarray can stage per wave.
+    occupied_subarrays: int | None = None
+    total_subarrays: int | None = None
+    operand_slots: int = 4
 
     @classmethod
     def from_table(cls, ecr_per_subarray, n_fracs: int = 3,
@@ -182,7 +205,9 @@ class FleetPerfModel:
         fracs = tuple(float(u / placement.n_cols_per_subarray)
                       for u in occupied)
         return cls(error_free_fracs=fracs, n_fracs=n_fracs,
-                   sys=sys or SystemConfig())
+                   sys=sys or SystemConfig(),
+                   occupied_subarrays=int(occupied.size),
+                   total_subarrays=int(placement.n_subarrays))
 
     def _point(self, frac: float) -> PUDPerfModel:
         return PUDPerfModel(error_free_frac=frac, n_fracs=self.n_fracs,
@@ -205,3 +230,60 @@ class FleetPerfModel:
 
     def speedup_vs(self, baseline: "PUDPerfModel | FleetPerfModel") -> float:
         return self.macs_per_second / baseline.macs_per_second
+
+    # -- batched serving ----------------------------------------------------
+
+    @property
+    def n_replicas(self) -> int:
+        """Independent weight copies the grid can hold in parallel."""
+        if self.occupied_subarrays and self.total_subarrays:
+            return max(1, self.total_subarrays // self.occupied_subarrays)
+        return 1
+
+    def _mac_counts_split(self) -> tuple[OpCounts, OpCounts]:
+        """(shared, per-operand) command counts of one MAC's MUL8+ADD8 graph.
+
+        Shared across a batched wave: the weight-bit constant copy of each
+        of the 72 AND/OR partial-product ops (the weight columns are static
+        for the whole batch).  Everything else — operand staging, calib-row
+        copies, Fracs, SiMRAs — executes once per in-flight request.
+        """
+        total = mul8_counts(self.n_fracs) + add8_counts(self.n_fracs)
+        n_andor = sum(2 * (8 - j) for j in range(8))
+        shared = OpCounts(rowcopies=n_andor)
+        per_op = OpCounts(rowcopies=total.rowcopies - n_andor,
+                          fracs=total.fracs, simras=total.simras)
+        return shared, per_op
+
+    def batch_speedup(self, batch: int) -> float:
+        """Aggregate-throughput gain of serving ``batch`` requests vs one.
+
+        Strictly increasing up to ``optimal_batch_size()`` (replication is
+        linear, amortization sub-linear), flat beyond it (operand residency
+        exhausted: extra requests serialize into additional wave groups).
+        """
+        b = max(1, int(batch))
+        b_eff = min(b, self.optimal_batch_size())
+        active = min(self.n_replicas, b_eff)
+        per_rep = b_eff / active
+        shared, per_op = self._mac_counts_split()
+        lat1 = wave_latency_ns(shared + per_op, self.sys)
+        lat_b = wave_latency_ns(shared + per_rep * per_op, self.sys)
+        return b_eff * lat1 / lat_b
+
+    def batched_macs_per_second(self, batch: int) -> float:
+        return self.macs_per_second * self.batch_speedup(batch)
+
+    def batched_tokens_per_second(self, flops_per_token: float,
+                                  batch: int) -> float:
+        """Aggregate decode rate (all requests summed) at ``batch``."""
+        return self.batched_macs_per_second(batch) / (flops_per_token / 2.0)
+
+    def optimal_batch_size(self, max_batch: int | None = None) -> int:
+        """Occupancy-derived optimum: replicas x per-subarray operand slots.
+
+        Aggregate tokens/s increases monotonically up to this batch and is
+        flat beyond it, so it is the smallest batch reaching peak rate.
+        """
+        opt = self.n_replicas * self.operand_slots
+        return min(opt, max_batch) if max_batch else opt

@@ -1,0 +1,306 @@
+"""ServingEngine: continuous-batching request scheduler over a PUDSession.
+
+The calibrated array only pays off when it is kept saturated: PUDTune's
+extra error-free columns buy 1.81x more parallel MACs per wave, but a
+serve loop that decodes one request at a time leaves them idle between
+requests.  This engine turns the single-vector decode path into a
+multi-request system:
+
+  * **Requests** enter a FIFO queue (``submit``); each is one prompt plus a
+    token budget.
+  * **Slots** — the engine owns a fixed-size padded batch of ``batch_size``
+    decode slots and one KV-cache pytree sized ``[L, batch_size, max_len,
+    ...]``; every slot holds at most one in-flight request.
+  * **Continuous batching** — admission and eviction happen at *step*
+    granularity: before every decode step, free slots are filled from the
+    queue (per-request prefill, cache scattered into the slot's batch
+    lane); after it, finished requests are evicted and their slots freed
+    immediately — no waiting for the whole batch to drain.
+  * **Per-slot positions** — one jitted decode step serves all slots at
+    once with a [B] vector of cache lengths (models/attention.py's
+    per-slot decode path), so requests admitted at different times decode
+    correctly side by side with no host-side Python loop over slots.
+
+Bit-exactness: every per-slot computation (per-row activation quantization,
+the integer bit-plane kernel, per-row attention masks, rmsnorm) is
+independent of the other batch lanes, so the tokens a request gets from a
+batched engine are bit-identical to running it alone — enforced across
+backends and layouts by tests/test_engine.py.
+
+Batch-size selection: with a calibrated + placed ``PUDSession``, the
+default ``batch_size`` comes from the placement-derived ``FleetPerfModel``
+(``optimal_batch_size`` — weight replicas x operand residency), the point
+up to which the DRAM-side aggregate tokens/s grows monotonically.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_MAX_BATCH = 32
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: a prompt and a token budget."""
+
+    request_id: int
+    tokens: Any                   # [S] int prompt tokens (array-like)
+    max_new_tokens: int
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.tokens).shape[-1])
+
+
+@dataclasses.dataclass
+class Completion:
+    """A finished request: generated tokens plus scheduling metadata."""
+
+    request_id: int
+    tokens: list[int]             # generated tokens (length = max_new_tokens)
+    slot: int
+    admitted_step: int            # engine step index at admission
+    finished_step: int            # engine step index after the last token
+    logits: np.ndarray | None = None   # [gen, V] when collect_logits
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Request
+    admitted_step: int
+    generated: list[int]
+    logits: list[np.ndarray]
+
+
+class ServingEngine:
+    """Continuous-batching decode engine for one model + packed params.
+
+    ``params`` is the serving tree (``PackedModel.params`` for the PUD path
+    or a raw bf16 tree); ``session`` is the ``PUDSession`` whose packed
+    model is being served — it contributes the default batch size (from
+    placement occupancy) and the DRAM-side rate model for ``perf_report``.
+    The engine itself is execution-agnostic: the PUD-vs-bf16 choice already
+    happened at pack time.
+
+    The model must expose ``prefill(params, tokens, max_len=)`` and a
+    ``decode_step(params, cache, tokens, cur_len)`` that accepts a [B]
+    vector ``cur_len`` (transformer-family models; see models/attention).
+    """
+
+    def __init__(self, model, params, *, max_len: int,
+                 session=None, batch_size: int | None = None,
+                 max_batch: int = DEFAULT_MAX_BATCH,
+                 collect_logits: bool = False):
+        if batch_size is None:
+            batch_size = self._default_batch_size(session, max_batch)
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        self.model = model
+        self.params = params
+        self.session = session
+        self.batch_size = int(batch_size)
+        self.max_len = int(max_len)
+        self.collect_logits = collect_logits
+
+        self._queue: collections.deque[Request] = collections.deque()
+        self._slots: list[_Slot | None] = [None] * self.batch_size
+        self._cache = None                       # allocated on first admit
+        # host-side slot state, shipped to the device once per step
+        self._tokens = np.zeros((self.batch_size, 1), np.int32)
+        self._lens = np.zeros((self.batch_size,), np.int32)
+        self._completions: list[Completion] = []
+        self._step_idx = 0
+        self._active_slot_steps = 0              # sum of live slots per step
+        self._decode_wall_s = 0.0
+
+        # The cache argument is donated: the engine owns the single
+        # [L, B, max_len, ...] KV pytree and rebinds it after every call,
+        # so XLA updates it in place instead of copying it per token.
+        self._prefill = jax.jit(self._prefill_fn, static_argnames=("s",))
+        self._insert = jax.jit(self._insert_fn, donate_argnums=(0,))
+        self._step = jax.jit(self._step_fn, donate_argnums=(1,))
+
+    # -- construction helpers ------------------------------------------------
+
+    @staticmethod
+    def _default_batch_size(session, max_batch: int) -> int:
+        """Occupancy-derived slots: the placement perf model's optimum."""
+        if session is not None:
+            pm = session.placement_perf_model() or session.tuned_perf_model()
+            if hasattr(pm, "optimal_batch_size"):
+                return max(1, pm.optimal_batch_size(max_batch))
+        return max(1, min(4, max_batch))
+
+    # -- jitted inner functions ---------------------------------------------
+
+    def _prefill_fn(self, params, tokens, s):
+        del s  # static: distinct prompt lengths trace separately
+        logits, cache = self.model.prefill(params, tokens,
+                                           max_len=self.max_len)
+        return logits, cache
+
+    def _insert_fn(self, cache, new_cache, slot):
+        """Scatter a batch-1 prefill cache into batch lane ``slot``.
+
+        Cache leaves are [L, B, max_len, ...] (batch axis 1).
+        """
+        return jax.tree.map(
+            lambda c, n: jax.lax.dynamic_update_slice_in_dim(
+                c, n.astype(c.dtype), slot, axis=1),
+            cache, new_cache)
+
+    def _step_fn(self, params, cache, tokens, lens):
+        logits, cache = self.model.decode_step(params, cache, tokens, lens)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt[:, None], logits, cache
+
+    # -- queue / scheduler ---------------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        if request.prompt_len + request.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {request.request_id}: prompt_len "
+                f"{request.prompt_len} + max_new_tokens "
+                f"{request.max_new_tokens} exceeds max_len {self.max_len}")
+        if request.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        self._queue.append(request)
+
+    def submit_all(self, requests) -> None:
+        for r in requests:
+            self.submit(r)
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    @property
+    def free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self._slots) if s is None]
+
+    def _zero_cache_like(self, cache1):
+        """Full-batch cache pytree from a batch-1 prefill cache."""
+        b = self.batch_size
+        return jax.tree.map(
+            lambda c: jnp.zeros(c.shape[:1] + (b,) + c.shape[2:], c.dtype),
+            cache1)
+
+    def _admit(self) -> int:
+        """Fill free slots from the queue (FIFO). Returns #admitted."""
+        admitted = 0
+        for slot in self.free_slots:
+            if not self._queue:
+                break
+            req = self._queue.popleft()
+            tokens = jnp.asarray(np.asarray(req.tokens), jnp.int32)[None, :]
+            logits, cache1 = self._prefill(self.params, tokens,
+                                           tokens.shape[1])
+            if self._cache is None:
+                self._cache = self._zero_cache_like(cache1)
+            self._cache = self._insert(self._cache, cache1, slot)
+            first = int(jnp.argmax(logits, axis=-1)[0])
+            st = _Slot(request=req, admitted_step=self._step_idx,
+                       generated=[first], logits=[])
+            if self.collect_logits:
+                st.logits.append(np.asarray(logits[0]))
+            self._slots[slot] = st
+            self._tokens[slot, 0] = first
+            self._lens[slot] = req.prompt_len
+            admitted += 1
+            if len(st.generated) >= req.max_new_tokens:
+                # degenerate budget: the prefill token already finishes it
+                self._evict(slot)
+        return admitted
+
+    def _evict(self, slot: int) -> None:
+        st = self._slots[slot]
+        self._completions.append(Completion(
+            request_id=st.request.request_id,
+            tokens=list(st.generated),
+            slot=slot,
+            admitted_step=st.admitted_step,
+            finished_step=self._step_idx,
+            logits=(np.stack(st.logits) if st.logits else None)))
+        self._slots[slot] = None
+        self._lens[slot] = 0
+
+    def step(self) -> list[Completion]:
+        """Admit, run one batched decode step, evict finished requests.
+
+        Returns the requests that finished on this step.
+        """
+        self._admit()
+        live = [i for i, s in enumerate(self._slots) if s is not None]
+        if not live:
+            return []
+        self._active_slot_steps += len(live)
+        t0 = time.time()
+        nxt, logits, self._cache = self._step(
+            self.params, self._cache, jnp.asarray(self._tokens),
+            jnp.asarray(self._lens))
+        nxt = np.asarray(nxt)
+        self._decode_wall_s += time.time() - t0
+        self._step_idx += 1
+        done_before = len(self._completions)
+        logits_np = np.asarray(logits) if self.collect_logits else None
+        for i in live:
+            st = self._slots[i]
+            st.generated.append(int(nxt[i, 0]))
+            if self.collect_logits:
+                st.logits.append(logits_np[i])
+            self._tokens[i, 0] = nxt[i, 0]
+            self._lens[i] += 1
+            if len(st.generated) >= st.request.max_new_tokens:
+                self._evict(i)
+        return self._completions[done_before:]
+
+    def run(self, requests=None) -> list[Completion]:
+        """Drain the queue (plus ``requests``, if given) to completion.
+
+        Returns all completions sorted by request_id.
+        """
+        if requests is not None:
+            self.submit_all(requests)
+        while self._queue or self.n_active:
+            self.step()
+        return sorted(self._completions, key=lambda c: c.request_id)
+
+    # -- reporting -----------------------------------------------------------
+
+    def scheduler_report(self) -> dict:
+        """Scheduler counters: slot occupancy, steps, measured decode rate."""
+        steps = self._step_idx
+        gen_tokens = sum(len(c.tokens) for c in self._completions)
+        occ = (self._active_slot_steps / (steps * self.batch_size)
+               if steps else 0.0)
+        return {
+            "batch_size": self.batch_size,
+            "steps": steps,
+            "completed": len(self._completions),
+            "pending": self.n_pending,
+            "active": self.n_active,
+            "generated_tokens": gen_tokens,
+            "slot_occupancy": occ,
+            "decode_wall_s": self._decode_wall_s,
+            "wall_tok_s": (gen_tokens / self._decode_wall_s
+                           if self._decode_wall_s else 0.0),
+        }
+
+    def perf_report(self, flops_per_token: float | None = None) -> dict:
+        """Scheduler counters + the session's batch-aware DRAM-side rates."""
+        rep = self.scheduler_report()
+        if self.session is not None:
+            rep.update(self.session.perf_report(
+                flops_per_token, batch_size=self.batch_size))
+        return rep

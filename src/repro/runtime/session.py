@@ -347,9 +347,31 @@ class PUDSession:
             raise ValueError("no arch on this session: pass flops_per_token")
         return self.tuned_perf_model().tokens_per_second(flops)
 
-    def perf_report(self, flops_per_token: float | None = None) -> dict:
+    def optimal_batch_size(self, max_batch: int | None = None) -> int:
+        """Occupancy-derived serving batch: the placement-derived rate
+        model's optimum (weight replicas x operand residency), 1 when the
+        session has no fleet-shaped model to derive it from."""
+        pm = self.placement_perf_model() or self.tuned_perf_model()
+        if isinstance(pm, FleetPerfModel):
+            return pm.optimal_batch_size(max_batch)
+        return 1
+
+    def serving_engine(self, model, *, max_len: int,
+                       batch_size: int | None = None, **kw):
+        """A continuous-batching ``ServingEngine`` over this session's
+        packed model (``pack`` must have run).  ``batch_size`` defaults to
+        ``optimal_batch_size()``."""
+        from repro.runtime.engine import ServingEngine
+        if self._packed is None:
+            raise RuntimeError("no packed model: call session.pack() first")
+        return ServingEngine(model, self._packed.params, session=self,
+                             max_len=max_len, batch_size=batch_size, **kw)
+
+    def perf_report(self, flops_per_token: float | None = None,
+                    batch_size: int | None = None) -> dict:
         """Everything the serving driver prints: calibration status, Eq.-1
-        rate models, and the placement occupancy report."""
+        rate models, the placement occupancy report and — when
+        ``batch_size`` is given — the batch-aware aggregate rates."""
         base, tune = self.baseline_perf_model(), self.tuned_perf_model()
         rep: dict = {
             "device_id": self.device_id,
@@ -376,6 +398,15 @@ class PUDSession:
             if rep["placement_model"] is not None:
                 rep["placed_tok_s"] = \
                     rep["placement_model"].tokens_per_second(flops)
+        if batch_size is not None:
+            rep["batch_size"] = int(batch_size)
+            rep["optimal_batch"] = self.optimal_batch_size()
+            pm = self.placement_perf_model() or self.tuned_perf_model()
+            if isinstance(pm, FleetPerfModel):
+                rep["batch_speedup"] = pm.batch_speedup(batch_size)
+                if flops is not None:
+                    rep["batched_tok_s"] = pm.batched_tokens_per_second(
+                        flops, batch_size)
         return rep
 
     def decode_extras(self) -> dict:

@@ -1,0 +1,125 @@
+"""Batch-tiled bit-plane GEMM kernel: bit-exactness vs the row-vmapped GeMV
+reference, ragged-batch padding, backend registry entries, and the
+rank-dispatching ``pud_gemv`` shim over ``pud_matmul``."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.backends import backend_names, get_backend
+from repro.kernels.bitplane_gemm import (B_BLOCK, bitplane_gemm,
+                                         bitplane_gemm_placed)
+from repro.kernels.bitplane_gemv import bitplane_gemv, bitplane_gemv_placed
+from repro.kernels.ops import pud_gemv, pud_matmul
+from repro.kernels.ref import pack_bitplanes
+
+K, N, P, WB = 64, 256, 320, 4
+
+
+def _planes(key=0):
+    w = jax.random.randint(jax.random.key(key), (K, N), -8, 8, jnp.int32)
+    return pack_bitplanes(w, WB)
+
+
+def _placed(key=0):
+    planes = _planes(key)
+    col_ids = jax.random.permutation(jax.random.key(key + 50), P)[:N]
+    window = jnp.zeros((WB, K, P), jnp.int8).at[:, :, col_ids].set(planes)
+    return window, col_ids.astype(jnp.int32)
+
+
+def _x(b, key=1):
+    return jax.random.randint(jax.random.key(key), (b, K), -127, 128,
+                              jnp.int32).astype(jnp.int8)
+
+
+@pytest.mark.parametrize("mode", ["planes", "folded"])
+@pytest.mark.parametrize("b", [1, 3, 8])
+def test_gemm_matches_vmapped_gemv(mode, b):
+    """The acceptance oracle: row r of the batched GEMM == the GeMV kernel
+    run on row r alone (vmap over singleton batches)."""
+    planes, x = _planes(), _x(b)
+    got = bitplane_gemm(x, planes, mode=mode)
+    want = jax.vmap(
+        lambda row: bitplane_gemv(row[None], planes, mode=mode)[0])(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.dtype == jnp.int32 and got.shape == (b, N)
+
+
+@pytest.mark.parametrize("mode", ["planes", "folded"])
+@pytest.mark.parametrize("b", [1, 5, 8])
+def test_gemm_placed_matches_vmapped_gemv_placed(mode, b):
+    window, col_ids = _placed()
+    x = _x(b)
+    got = bitplane_gemm_placed(x, window, col_ids, mode=mode)
+    want = jax.vmap(lambda row: bitplane_gemv_placed(
+        row[None], window, col_ids, mode=mode)[0])(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_gemm_ragged_batch_pads_transparently():
+    """B that is not a tile multiple pads with zero rows inside the kernel
+    wrapper; real rows are unaffected and the pad is sliced off."""
+    planes = _planes()
+    big = _x(B_BLOCK + 3, key=9)        # forces bb=B_BLOCK, pad 125 rows
+    got = bitplane_gemm(big, planes, mode="folded")
+    assert got.shape == (B_BLOCK + 3, N)
+    ref = get_backend("reference").gemm(big, planes)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("b", [1, 2, 6])
+def test_all_backends_gemm_parity(b):
+    planes, x = _planes(), _x(b)
+    window, col_ids = _placed()
+    ref_be = get_backend("reference")
+    want = np.asarray(ref_be.matmul(x, planes))
+    want_placed = np.asarray(ref_be.matmul_placed(x, window, col_ids))
+    for name in backend_names():
+        be = get_backend(name)
+        np.testing.assert_array_equal(
+            np.asarray(be.matmul(x, planes)), want,
+            err_msg=f"{name} gemm != reference")
+        np.testing.assert_array_equal(
+            np.asarray(be.matmul_placed(x, window, col_ids)), want_placed,
+            err_msg=f"{name} gemm_placed != reference")
+
+
+def test_backend_matmul_falls_back_to_gemv():
+    from repro.kernels.backends import Backend
+    be = get_backend("reference")
+    stripped = Backend(name="stripped", gemv=be.gemv,
+                       gemv_placed=be.gemv_placed)
+    planes, x = _planes(), _x(4)
+    np.testing.assert_array_equal(
+        np.asarray(stripped.matmul(x, planes)),
+        np.asarray(be.matmul(x, planes)))
+
+
+def test_pud_gemv_rank_dispatch():
+    """1-D x -> [N]; 2-D x -> [B, N]; numerics identical to pud_matmul."""
+    planes = _planes()
+    scale = jnp.float32(0.5)
+    x1 = jax.random.normal(jax.random.key(2), (K,), jnp.float32)
+    y1 = pud_gemv(x1, planes, scale)
+    y2 = pud_gemv(x1[None], planes, scale)
+    ym = pud_matmul(x1[None], planes, scale)
+    assert y1.shape == (N,) and y2.shape == (1, N)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2[0]))
+    np.testing.assert_array_equal(np.asarray(y2), np.asarray(ym))
+
+
+@pytest.mark.parametrize("backend", ["pallas", "interpret", "reference"])
+def test_pud_matmul_batched_equals_per_row(backend):
+    """The serving guarantee at the op level: each row of a batched
+    pud_matmul is bit-identical to running that row alone (B=1 takes the
+    GeMV kernel path, B>1 the GEMM path — the dispatch must not change
+    numerics)."""
+    planes = _planes()
+    w_scale = jnp.abs(jax.random.normal(jax.random.key(4), (N,))) + 0.1
+    x = jax.random.normal(jax.random.key(3), (5, K), jnp.float32)
+    batched = np.asarray(pud_matmul(x, planes, w_scale, backend=backend))
+    for r in range(x.shape[0]):
+        alone = np.asarray(pud_matmul(x[r:r + 1], planes, w_scale,
+                                      backend=backend))
+        np.testing.assert_array_equal(batched[r], alone[0])

@@ -1,0 +1,317 @@
+"""ServingEngine: continuous-batching scheduler invariants and the
+batched-vs-sequential bit-exactness guarantee, placed + logical layouts,
+across all execution backends.  Also covers the per-slot decode path in
+models/attention.py and the batch-aware FleetPerfModel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (CalibrationConfig, FleetConfig, FleetPerfModel,
+                       PUDGemvConfig, PUDSession, Request, ServingEngine,
+                       backend_names)
+from repro.configs import get
+from repro.launch.serve import greedy_generate
+from repro.models.params import init_params
+
+MAX_LEN = 16
+GEN = 4
+PROMPT = 8
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    spec = get("qwen3-1.7b")
+    model = spec.make_smoke()
+    params = init_params(model.param_defs(), jax.random.key(0))
+    return model, params
+
+
+def _prompts(model, n, lens=None, key=1):
+    lens = lens or [PROMPT] * n
+    k = jax.random.key(key)
+    return [jax.random.randint(jax.random.fold_in(k, i), (lens[i],), 0,
+                               model.cfg.vocab, jnp.int32)
+            for i in range(n)]
+
+
+def _requests(prompts, gen=GEN):
+    return [Request(request_id=i, tokens=p, max_new_tokens=gen)
+            for i, p in enumerate(prompts)]
+
+
+def _session(backend="pallas", calibrate=True):
+    s = PUDSession.open(
+        "qwen3-1.7b",
+        grid=FleetConfig(n_channels=1, n_banks=1, n_subarrays=8,
+                         n_cols=1024),
+        calib=CalibrationConfig(n_iterations=4, n_samples=64),
+        key=7, n_trials_ecr=128, backend=backend)
+    if calibrate:
+        s.calibrate()
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Per-slot decode path (models/attention.py vector cur_len)
+# ---------------------------------------------------------------------------
+
+def test_vector_cur_len_matches_scalar(smoke):
+    model, params = smoke
+    toks = jnp.stack(_prompts(model, 3))
+    logits, cache = model.prefill(params, toks, max_len=MAX_LEN)
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    l_s, c_s = model.decode_step(params, cache, nxt, jnp.int32(PROMPT))
+    l_v, c_v = model.decode_step(params, cache, nxt,
+                                 jnp.full((3,), PROMPT, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(l_s), np.asarray(l_v))
+    for a, b in zip(jax.tree.leaves(c_s), jax.tree.leaves(c_v)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_staggered_rows_independent(smoke):
+    """A row decoding at its own position gets exactly the result it would
+    get alone — the property continuous batching rests on."""
+    model, params = smoke
+    toks = jnp.stack(_prompts(model, 3))
+    logits, cache = model.prefill(params, toks, max_len=MAX_LEN)
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    lens = jnp.array([PROMPT, PROMPT + 1, PROMPT + 2], jnp.int32)
+    l_g, _ = model.decode_step(params, cache, nxt, lens)
+    l_1, _ = model.decode_step(
+        params, jax.tree.map(lambda c: c[:, :1], cache), nxt[:1],
+        jnp.int32(PROMPT))
+    np.testing.assert_array_equal(np.asarray(l_g[0]), np.asarray(l_1[0]))
+
+
+def test_mla_vector_cur_len(smoke):
+    """Per-slot lengths also hold for the MLA (latent-attention) decode."""
+    spec = get("deepseek-v2-lite-16b")
+    model = spec.make_smoke()
+    params = init_params(model.param_defs(), jax.random.key(0))
+    toks = jnp.stack(_prompts(model, 2))
+    logits, cache = model.prefill(params, toks, max_len=MAX_LEN)
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    l_s, _ = model.decode_step(params, cache, nxt, jnp.int32(PROMPT))
+    l_v, _ = model.decode_step(params, cache, nxt,
+                               jnp.full((2,), PROMPT, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(l_s), np.asarray(l_v))
+
+
+# ---------------------------------------------------------------------------
+# Batched-vs-sequential bit-exactness (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def _run_engine(model, params, prompts, session=None, batch_size=2,
+                collect_logits=False):
+    eng = ServingEngine(model, params, session=session, max_len=MAX_LEN,
+                        batch_size=batch_size, collect_logits=collect_logits)
+    return eng, eng.run(_requests(prompts))
+
+
+@pytest.mark.parametrize("backend", sorted(backend_names()))
+def test_batched_equals_sequential_placed(smoke, backend):
+    """Placed physical layout, every backend: tokens AND logits of the
+    batched engine are bit-identical to per-request sequential decode."""
+    model, params = smoke
+    session = _session(backend=backend)
+    packed = session.pack(params, PUDGemvConfig(weight_bits=4),
+                          name=f"eng-{backend}")
+    assert packed.placed
+    prompts = _prompts(model, 4)
+    eng, comps = _run_engine(model, packed.params, prompts, session=session,
+                             collect_logits=True)
+    assert len(comps) == 4
+    for c in comps:
+        toks, logits = greedy_generate(
+            model, packed.params, prompts[c.request_id][None], GEN, MAX_LEN)
+        assert c.tokens == list(np.asarray(toks)[0])
+        np.testing.assert_array_equal(
+            c.logits, np.asarray(logits)[0, :GEN],
+            err_msg=f"backend {backend}, request {c.request_id}")
+
+
+def test_batched_equals_sequential_logical(smoke):
+    """Logical (unplaced) layout: same guarantee without calibration."""
+    model, params = smoke
+    session = _session(calibrate=False)
+    packed = session.pack(params, PUDGemvConfig(weight_bits=4))
+    assert not packed.placed
+    prompts = _prompts(model, 3)
+    _, comps = _run_engine(model, packed.params, prompts, session=session)
+    for c in comps:
+        toks, _ = greedy_generate(
+            model, packed.params, prompts[c.request_id][None], GEN, MAX_LEN)
+        assert c.tokens == list(np.asarray(toks)[0])
+
+
+def test_batched_equals_sequential_ragged_prompts(smoke):
+    """Mixed prompt lengths force genuinely staggered slot positions."""
+    model, params = smoke
+    prompts = _prompts(model, 4, lens=[4, 8, 6, 10])
+    _, comps = _run_engine(model, params, prompts, batch_size=3)
+    for c in comps:
+        toks, _ = greedy_generate(
+            model, params, prompts[c.request_id][None], GEN, MAX_LEN)
+        assert c.tokens == list(np.asarray(toks)[0]), c.request_id
+
+
+# ---------------------------------------------------------------------------
+# Scheduler invariants
+# ---------------------------------------------------------------------------
+
+def test_scheduler_no_slot_leaks_and_fifo(smoke):
+    model, params = smoke
+    prompts = _prompts(model, 7)
+    eng = ServingEngine(model, params, max_len=MAX_LEN, batch_size=3)
+    eng.submit_all(_requests(prompts))
+    assert eng.n_pending == 7 and eng.n_active == 0
+    seen_active = []
+    while eng.n_pending or eng.n_active:
+        eng.step()
+        assert eng.n_active <= eng.batch_size
+        assert len(eng.free_slots) + eng.n_active == eng.batch_size
+        seen_active.append(eng.n_active)
+    comps = sorted(eng._completions, key=lambda c: c.request_id)
+    # every request completed exactly once, with its full budget
+    assert [c.request_id for c in comps] == list(range(7))
+    assert all(len(c.tokens) == GEN for c in comps)
+    # all slots free at drain; no request left behind
+    assert eng.n_active == 0 and eng.n_pending == 0
+    assert eng.free_slots == [0, 1, 2]
+    # FIFO admission: request k is never admitted before request k-1
+    admits = [c.admitted_step for c in comps]
+    assert admits == sorted(admits)
+    # the batch was actually used (more than one slot live at once)
+    assert max(seen_active) == 3
+    rep = eng.scheduler_report()
+    assert rep["completed"] == 7 and rep["generated_tokens"] == 7 * GEN
+    # every live slot-step decoded exactly one token — no lost work
+    # (the first token of each request comes from its prefill, not a step)
+    assert rep["slot_occupancy"] * rep["steps"] * 3 == 7 * (GEN - 1)
+    # 7 requests on 3 slots cannot tile evenly: the ragged tail ran
+    # under-occupied instead of being dropped
+    assert 0 < rep["slot_occupancy"] < 1
+
+
+def test_scheduler_eviction_order_and_reuse(smoke):
+    """Shorter budgets finish first; their slots are re-used immediately."""
+    model, params = smoke
+    prompts = _prompts(model, 4)
+    reqs = [Request(request_id=i, tokens=p, max_new_tokens=g)
+            for i, (p, g) in enumerate(zip(prompts, [6, 2, 2, 3]))]
+    eng = ServingEngine(model, params, max_len=MAX_LEN, batch_size=2)
+    eng.submit_all(reqs)
+    order = []
+    while eng.n_pending or eng.n_active:
+        order += [c.request_id for c in eng.step()]
+    # 1 (budget 2) evicts before 0 (budget 6); its slot admits 2, then 3
+    assert order.index(1) < order.index(0)
+    assert order.index(2) < order.index(0)
+    comps = {c.request_id: c for c in eng._completions}
+    assert comps[2].slot == comps[1].slot      # freed slot re-used
+    assert comps[1].finished_step <= comps[2].admitted_step
+    for i, g in enumerate([6, 2, 2, 3]):
+        assert len(comps[i].tokens) == g
+
+
+def test_engine_rejects_oversized_request(smoke):
+    model, params = smoke
+    eng = ServingEngine(model, params, max_len=MAX_LEN, batch_size=2)
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        eng.submit(Request(request_id=0,
+                           tokens=jnp.zeros((PROMPT,), jnp.int32),
+                           max_new_tokens=MAX_LEN))
+    with pytest.raises(ValueError, match="batch_size"):
+        ServingEngine(model, params, max_len=MAX_LEN, batch_size=0)
+
+
+def test_engine_default_batch_from_session_occupancy(smoke):
+    model, params = smoke
+    session = _session()
+    session.pack(params, PUDGemvConfig(weight_bits=4), name="defbatch")
+    eng = session.serving_engine(model, max_len=MAX_LEN)
+    assert eng.batch_size == session.optimal_batch_size(32)
+    assert eng.batch_size > 1
+    # no session -> small fixed default
+    assert ServingEngine(model, params, max_len=MAX_LEN).batch_size >= 1
+
+
+# ---------------------------------------------------------------------------
+# Batch-aware perf model + reporting
+# ---------------------------------------------------------------------------
+
+def test_fleet_perf_model_monotone_to_optimum():
+    m = FleetPerfModel(error_free_fracs=(0.9, 0.95),
+                       occupied_subarrays=2, total_subarrays=8)
+    opt = m.optimal_batch_size()
+    assert opt == m.n_replicas * m.operand_slots == 16
+    rates = [m.batched_tokens_per_second(2e9, b) for b in range(1, opt + 4)]
+    assert all(a < b for a, b in zip(rates[:opt - 1], rates[1:opt]))
+    assert rates[opt - 1] == pytest.approx(rates[-1])       # flat past opt
+    assert m.batched_tokens_per_second(2e9, 1) == pytest.approx(
+        m.tokens_per_second(2e9))
+    assert m.optimal_batch_size(max_batch=5) == 5
+
+
+def test_perf_report_batch_aware(smoke):
+    model, params = smoke
+    session = _session()
+    session.pack(params, PUDGemvConfig(weight_bits=4), name="rep")
+    rep = session.perf_report(2e9, batch_size=4)
+    assert rep["batch_size"] == 4
+    assert rep["optimal_batch"] >= 1
+    assert rep["batched_tok_s"] >= rep["placed_tok_s"]
+    assert rep["batch_speedup"] == pytest.approx(
+        rep["batched_tok_s"] / rep["placed_tok_s"])
+    # engine perf_report merges scheduler + session views
+    eng = session.serving_engine(model, max_len=MAX_LEN, batch_size=2)
+    eng.run(_requests(_prompts(model, 2)))
+    merged = eng.perf_report(2e9)
+    assert merged["completed"] == 2 and "batched_tok_s" in merged
+
+
+def test_greedy_generate_threads_key(smoke):
+    """Explicit seed satellite: same key -> same trace, and the default
+    stays the legacy key(0) behavior."""
+    model, params = smoke
+    toks = jnp.stack(_prompts(model, 2))
+    a = greedy_generate(model, params, toks, GEN, MAX_LEN)
+    b = greedy_generate(model, params, toks, GEN, MAX_LEN,
+                        key=jax.random.key(0))
+    c = greedy_generate(model, params, toks, GEN, MAX_LEN,
+                        key=jax.random.key(123))
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+    # greedy decode: key changes must not change tokens
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(c[0]))
+
+
+# ---------------------------------------------------------------------------
+# Benchmark harness exit-code satellite
+# ---------------------------------------------------------------------------
+
+def test_benchmarks_run_propagates_failures(capsys):
+    import benchmarks.run as run_mod
+    ok = {"called": False}
+
+    def _ok(scale):
+        ok["called"] = True
+
+    def _boom(scale):
+        raise RuntimeError("kaboom")
+
+    saved = dict(run_mod.BENCHES)
+    try:
+        run_mod.BENCHES.clear()
+        run_mod.BENCHES["boom"] = _boom
+        run_mod.BENCHES["fine"] = _ok
+        rc = run_mod.main([])
+        out = capsys.readouterr().out
+        assert rc == 1
+        assert ok["called"], "later benchmarks must still run"
+        assert "1 FAILED (boom)" in out
+        assert run_mod.main(["--only", "fine"]) == 0
+    finally:
+        run_mod.BENCHES.clear()
+        run_mod.BENCHES.update(saved)
