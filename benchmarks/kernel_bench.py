@@ -100,7 +100,8 @@ def main(scale=None) -> None:
     print("bitplane_gemv: folded mode does "
           f"{planes['mxu_flops'] / folded['mxu_flops']:.0f}x fewer MXU flops "
           "than the faithful per-plane schedule at identical numerics "
-          f"(tiles {K_BLOCK}x{N_BLOCK}, VMEM ~270KiB/block)")
+          f"(tiles {K_BLOCK}x{N_BLOCK}; VMEM budgets per format in "
+          "docs/kernels.md, traffic in benchmarks/kernel_microbench.py)")
 
 
 if __name__ == "__main__":

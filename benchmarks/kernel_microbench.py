@@ -1,0 +1,174 @@
+"""Per-kernel microbenchmark: weight traffic + tokens/s across the format
+matrix — the perf trajectory of the bit-packed refactor.
+
+Sweeps the four kernel entry points (GeMV / GEMM x logical / placed) over
+both storage formats (dense one-byte-per-bit vs bit-packed words) and both
+execution modes (``planes`` = faithful per-plane MXU schedule, ``folded`` =
+single fused pass), measuring:
+
+  * ``weight_bytes_per_token`` — *measured* from the actual weight operand
+    the kernel streams per token (``planes.nbytes`` (+ ``col_ids``) — a
+    decode token reads every weight byte once).  This is the number the
+    bit-packing refactor moves: the packed rows must come in >= 4x under
+    the dense rows (asserted below; ~8x in practice, the byte-pad and
+    col_ids overhead eat the rest).
+  * ``tokens_per_second`` — interpret-mode wall clock on this CPU-only
+    container; correctness-path times, NOT TPU performance (the modeled
+    traffic/flops columns are the TPU-relevant numbers).
+  * ``mxu_flops_per_token`` — modeled MXU work (``planes`` mode does WB
+    passes, ``folded`` one).
+
+Writes ``BENCH_kernels.json`` at the repo root (committed — the perf
+trajectory baseline) in addition to the artifacts/bench copy, and raises if
+the measured packed-vs-dense traffic reduction falls under 4x, so CI's
+``kernel-bench-smoke`` job catches a format regression.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.backends import get_backend
+from repro.pud.gemv import pack_linear
+from repro.pud.packed import to_dense
+from repro.pud.placement import PlacementRequest, plan_placement
+
+from .common import emit, parse_scale
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# Decode-shaped projection: one token's GeMV (B=1) and a continuous-batching
+# step (B=8) over a [K, N] 4-bit projection.
+K, N, WB = 2048, 2048, 4
+MIN_REDUCTION = 4.0
+
+
+def _time(fn, reps=3):
+    fn()  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.time() - t0) / reps
+
+
+def _weight_bytes(planes, col_ids=None) -> int:
+    """Measured weight traffic of one token: the kernel streams every byte
+    of the weight operand (plus the gather map when placed) exactly once."""
+    total = planes.size * planes.dtype.itemsize
+    if col_ids is not None:
+        total += col_ids.size * 4
+    return int(total)
+
+
+def _placed_fixture(pt):
+    """A placed pack of the same projection on a ~3%-faulty device."""
+    masks = np.random.default_rng(0).random((2, 4096)) < 0.03
+    plan = plan_placement(masks, [PlacementRequest("t", N, 0)])
+    tp = plan.entries["t"]
+    dense = to_dense(pt)
+    idx = jnp.asarray(np.asarray(tp.local_cols), jnp.int32)
+    window = jnp.zeros(dense.planes.shape[:2] + (tp.region_size,),
+                       jnp.int8).at[:, :, idx].set(dense.planes)
+    words = ref.pack_plane_words(window)
+    return window, words, idx, tp.window_block
+
+
+def run(scale) -> list[dict]:
+    kx, kw = jax.random.split(jax.random.key(0))
+    w = 0.05 * jax.random.normal(kw, (K, N), jnp.float32)
+    pt = pack_linear(w, WB)                    # bit-packed (default)
+    dense = to_dense(pt)                       # legacy layout, same bits
+    window_dense, window_words, col_ids, pwb = _placed_fixture(pt)
+
+    be = get_backend("pallas")
+    rows = []
+    want = {}
+    for b, entry in ((1, "gemv"), (8, "gemm")):
+        x = jax.random.normal(jax.random.fold_in(kx, b), (b, K), jnp.float32)
+        xq = jnp.clip(jnp.round(x * 8), -127, 127).astype(jnp.int8)
+        for layout_name, planes, cols, kwargs in (
+            ("logical", dense.planes, None, {}),
+            ("logical", pt.planes, None,
+             {"layout": "bitpack8", "logical_k": K}),
+            ("placed", window_dense, col_ids, {"window_block": pwb}),
+            ("placed", window_words, col_ids,
+             {"layout": "bitpack8", "logical_k": K, "window_block": pwb}),
+        ):
+            fmt = ("bitpacked" if kwargs.get("layout") == "bitpack8"
+                   else "dense")
+            for mode in ("planes", "folded"):
+                if cols is None:
+                    fn = (lambda p=planes, m=mode, kw2=kwargs, q=xq:
+                          (be.gemv if b == 1 else be.gemm)(q, p, m, **kw2))
+                else:
+                    fn = (lambda p=planes, m=mode, kw2=kwargs, q=xq, c=cols:
+                          (be.gemv_placed if b == 1 else be.gemm_placed)(
+                              q, p, c, m, **kw2))
+                out = np.asarray(fn())
+                key = (b, layout_name, mode)
+                if key in want:
+                    np.testing.assert_array_equal(out, want[key])
+                else:
+                    want[key] = out
+                secs = _time(fn)
+                passes = WB if mode == "planes" else 1
+                rows.append({
+                    "kernel": entry, "layout": layout_name, "format": fmt,
+                    "mode": mode, "batch": b,
+                    "shape": f"{b}x{K}x{N}@{WB}b",
+                    "weight_bytes_per_token": _weight_bytes(planes, cols),
+                    "mxu_flops_per_token": 2 * K * N * passes,
+                    "tokens_per_second": b / secs,
+                    "wall_ms": 1e3 * secs,
+                })
+    return rows
+
+
+def _check_reduction(rows: list[dict]) -> dict:
+    """Measured packed-vs-dense traffic reduction per (kernel, layout)."""
+    out = {}
+    for r in rows:
+        out.setdefault((r["kernel"], r["layout"], r["format"]),
+                       r["weight_bytes_per_token"])
+    summary = {}
+    for kernel, layout in {(k, lo) for k, lo, _ in out}:
+        dense = out[(kernel, layout, "dense")]
+        packed = out[(kernel, layout, "bitpacked")]
+        red = dense / packed
+        summary[f"{kernel}/{layout}"] = red
+        if red < MIN_REDUCTION:
+            raise AssertionError(
+                f"{kernel}/{layout}: measured weight-traffic reduction "
+                f"{red:.2f}x < {MIN_REDUCTION}x — the packed path is not "
+                f"actually bit-packed")
+    return summary
+
+
+def main(scale=None) -> None:
+    scale = scale or parse_scale(description=__doc__)
+    rows = run(scale)
+    reductions = _check_reduction(rows)
+    emit("kernel_microbench", rows,
+         header="measured weight bytes/token; wall times are interpret-mode "
+                "(CPU) correctness-path numbers")
+    payload = {
+        "shape": f"{K}x{N}@{WB}b",
+        "traffic_reduction": reductions,
+        "rows": rows,
+    }
+    (ROOT / "BENCH_kernels.json").write_text(
+        json.dumps(payload, indent=1, default=str))
+    for name, red in sorted(reductions.items()):
+        print(f"  {name}: bit-packed streams {red:.2f}x fewer weight "
+              f"bytes/token than dense (>= {MIN_REDUCTION}x required)")
+    print(f"  wrote {ROOT / 'BENCH_kernels.json'}")
+
+
+if __name__ == "__main__":
+    main()

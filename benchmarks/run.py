@@ -66,6 +66,13 @@ def _kernels(scale):
     kernel_bench.main(scale)
 
 
+def _kernel_microbench(scale):
+    """Weight bytes/token + tokens/s: dense vs bit-packed, logical vs
+    placed, planes vs folded (writes BENCH_kernels.json)."""
+    from . import kernel_microbench
+    kernel_microbench.main(scale)
+
+
 def _serving(scale):
     """MVDRAM serving table (Eq. 1 per arch)."""
     from . import mvdram_serving
@@ -113,6 +120,7 @@ BENCHES: dict[str, Callable[[BenchScale], None]] = {
     "convergence": _convergence,
     "fleet": _fleet,
     "kernels": _kernels,
+    "kernel_microbench": _kernel_microbench,
     "serving": _serving,
     "serving_engine": _serving_engine,
     "majx": _majx,

@@ -71,8 +71,9 @@ packed = session.pack(params, PUDGemvConfig(weight_bits=4,
 extras = session.decode_extras()
 print(f"[example] packed {extras['n_packed']} projections "
       f"({extras['layout']} columns, placement "
-      f"{session.placement_status}): {extras['pud_bytes'] / 1024:.1f} KiB "
-      f"of planes")
+      f"{session.placement_status}): {extras['stored_bytes'] / 1024:.1f} KiB "
+      f"of bit-packed words vs {extras['dense_equiv_bytes'] / 1024:.1f} KiB "
+      f"dense ({extras['traffic_reduction']:.1f}x less weight traffic)")
 
 # 3. Greedy decode through the placed bit-plane kernel vs the bf16 path.
 toks = jax.random.randint(jax.random.key(1), (2, 16), 0, lm_cfg.vocab,
@@ -86,7 +87,7 @@ print(f"[example] token agreement vs bf16: {100 * agree:.1f}%   "
 
 # 4. Direct projection access: one packed GeMV, any registered backend —
 #    all bit-exact against each other.
-d_model = packed.tensor("unembed/w").planes.shape[-2]
+d_model = packed.tensor("unembed/w").k
 x = jax.random.normal(jax.random.key(4), (2, d_model))
 y_pallas = session.linear(x, "unembed/w")
 y_ref = session.linear(x, "unembed/w", backend="reference")

@@ -25,9 +25,11 @@ from repro.kernels.backends import (Backend, backend_names, get_backend,
 from repro.pud.gemv import (ATTN_PACKABLE, ECR_BASELINE_B300,
                             ECR_PUDTUNE_T210, FFN_PACKABLE, FleetPerfModel,
                             PUDGemvConfig, PUDPerfModel, pack_linear,
-                            pud_linear)
-from repro.pud.packed import (PackedModel, PackedTensor, as_packed_tensor,
-                              packed_bytes)
+                            pud_linear, weight_traffic)
+from repro.pud.packed import (LAYOUT_BITPACK, LAYOUT_DENSE, PackedModel,
+                              PackedTensor, as_packed_tensor,
+                              load_packed_npz, packed_bytes, save_packed_npz,
+                              to_bitpacked, to_dense)
 from repro.pud.packer import pack_for_serving, pack_model, packing_requests
 from repro.pud.physics import PhysicsParams
 from repro.pud.placement import (Placement, PlacementError, PlacementRequest,
@@ -44,9 +46,11 @@ __all__ = [
     # configs
     "PUDGemvConfig", "FleetConfig", "CalibrationConfig", "PhysicsParams",
     "FFN_PACKABLE", "ATTN_PACKABLE",
-    # typed packs
+    # typed packs + storage layouts
     "PackedTensor", "PackedModel", "as_packed_tensor", "packed_bytes",
     "pack_model", "packing_requests",
+    "LAYOUT_BITPACK", "LAYOUT_DENSE", "to_bitpacked", "to_dense",
+    "save_packed_npz", "load_packed_npz", "weight_traffic",
     # backends
     "Backend", "register_backend", "get_backend", "backend_names",
     # placement

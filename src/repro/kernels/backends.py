@@ -13,10 +13,14 @@ Every backend implements the same entry points — ``gemv``/``gemv_placed``
 for the single-block GeMV and ``gemm``/``gemm_placed`` for the batch-tiled
 GEMM the serving engine feeds — and all are bit-exact against each other,
 enforced by tests/test_session.py and tests/test_bitplane_gemm.py across
-placed and unplaced packs.  ``PUDSession`` selects a backend per session and
-per call; register custom ones (e.g. a future GPU lowering) with
-``register_backend`` (backends without GEMM lowerings fall back to their
-GeMV entry, which already accepts a [B, K] operand block).
+placed and unplaced packs, dense and bit-packed plane layouts.  Layout
+metadata (``layout``/``logical_k``/``window_block`` — see
+repro/pud/packed.py) arrives as keyword arguments; the Pallas backends
+hand them to the kernel wrappers, the reference backend densifies the
+words first and runs the unchanged jnp oracle.  ``PUDSession`` selects a
+backend per session and per call; register custom ones (e.g. a future GPU
+lowering) with ``register_backend`` (backends without GEMM lowerings fall
+back to their GeMV entry, which already accepts a [B, K] operand block).
 """
 from __future__ import annotations
 
@@ -24,6 +28,7 @@ import dataclasses
 from typing import Callable
 
 import jax
+import jax.numpy as jnp
 
 from . import ref
 from .bitplane_gemm import bitplane_gemm, bitplane_gemm_placed
@@ -36,12 +41,15 @@ DEFAULT_BACKEND = "pallas"
 class Backend:
     """One named lowering of the bit-plane GeMV/GEMM.
 
-    ``gemv(x, planes, mode)``: [B, K] int8 x [WB, K, N] planes -> [B, N]
-    int32 with the whole B in one block (decode-shaped).  ``gemv_placed
-    (x, planes, col_ids, mode)``: same, with planes in the physical-window
-    layout and the logical->window gather map.  ``gemm``/``gemm_placed``:
-    identical signatures and numerics with the batch axis tiled into the
-    kernel grid (serving-engine-shaped); None falls back to the GeMV entry.
+    ``gemv(x, planes, mode, **layout_kw)``: [B, K] int8 x [WB, K(/8), N]
+    planes -> [B, N] int32 with the whole B in one block (decode-shaped).
+    ``gemv_placed(x, planes, col_ids, mode, **layout_kw)``: same, with
+    planes in the physical-window layout and the logical->window gather
+    map.  ``gemm``/``gemm_placed``: identical signatures and numerics with
+    the batch axis tiled into the kernel grid (serving-engine-shaped);
+    None falls back to the GeMV entry.  ``layout_kw`` is the pack-format
+    metadata: ``layout`` ("dense" | "bitpack8"), ``logical_k`` (un-padded
+    K of a bit-packed pack), ``window_block`` (placed entries only).
     """
 
     name: str
@@ -50,13 +58,13 @@ class Backend:
     gemm: Callable[..., jax.Array] | None = None
     gemm_placed: Callable[..., jax.Array] | None = None
 
-    def matmul(self, x, planes, mode="folded"):
+    def matmul(self, x, planes, mode="folded", **kw):
         """Batch-tiled entry, falling back to the one-block GeMV."""
-        return (self.gemm or self.gemv)(x, planes, mode)
+        return (self.gemm or self.gemv)(x, planes, mode, **kw)
 
-    def matmul_placed(self, x, planes, col_ids, mode="folded"):
+    def matmul_placed(self, x, planes, col_ids, mode="folded", **kw):
         return (self.gemm_placed or self.gemv_placed)(x, planes, col_ids,
-                                                      mode)
+                                                      mode, **kw)
 
 
 _REGISTRY: dict[str, Backend] = {}
@@ -86,39 +94,73 @@ def _pallas_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _pallas_entries(interpret):
+    """The four kernel entries at a fixed interpret policy (callable so the
+    ``pallas`` backend re-reads the platform on every call)."""
+
+    def gemv(x, planes, mode="folded", *, layout="dense", logical_k=None):
+        return bitplane_gemv(x, planes, mode=mode, interpret=interpret(),
+                             layout=layout, logical_k=logical_k)
+
+    def gemv_placed(x, planes, col_ids, mode="folded", *, layout="dense",
+                    logical_k=None, window_block=None):
+        return bitplane_gemv_placed(
+            x, planes, col_ids, mode=mode, interpret=interpret(),
+            layout=layout, logical_k=logical_k, window_block=window_block)
+
+    def gemm(x, planes, mode="folded", *, layout="dense", logical_k=None):
+        return bitplane_gemm(x, planes, mode=mode, interpret=interpret(),
+                             layout=layout, logical_k=logical_k)
+
+    def gemm_placed(x, planes, col_ids, mode="folded", *, layout="dense",
+                    logical_k=None, window_block=None):
+        return bitplane_gemm_placed(
+            x, planes, col_ids, mode=mode, interpret=interpret(),
+            layout=layout, logical_k=logical_k, window_block=window_block)
+
+    return gemv, gemv_placed, gemm, gemm_placed
+
+
+def _densify(planes, layout, logical_k):
+    """Reference-backend adapter: bit-words -> dense planes (jnp oracle
+    input); dense planes pass through untouched."""
+    if layout == "bitpack8":
+        return ref.unpack_plane_words(planes, logical_k)
+    return planes
+
+
+def _ref_gemv(x, planes, mode="folded", *, layout="dense", logical_k=None):
+    planes = _densify(planes, layout, logical_k)
+    if layout == "bitpack8" and planes.shape[1] != x.shape[1]:
+        x = jnp.pad(x, ((0, 0), (0, planes.shape[1] - x.shape[1])))
+    return ref.bitplane_gemv_ref(x, planes)
+
+
+def _ref_gemv_placed(x, planes, col_ids, mode="folded", *, layout="dense",
+                     logical_k=None, window_block=None):
+    planes = _densify(planes, layout, logical_k)
+    if layout == "bitpack8" and planes.shape[1] != x.shape[1]:
+        x = jnp.pad(x, ((0, 0), (0, planes.shape[1] - x.shape[1])))
+    return ref.bitplane_gemv_placed_ref(x, planes, col_ids)
+
+
+_pl = _pallas_entries(_pallas_interpret)
 register_backend(Backend(
     name="pallas",
-    gemv=lambda x, planes, mode="folded": bitplane_gemv(
-        x, planes, mode=mode, interpret=_pallas_interpret()),
-    gemv_placed=lambda x, planes, col_ids, mode="folded":
-        bitplane_gemv_placed(x, planes, col_ids, mode=mode,
-                             interpret=_pallas_interpret()),
-    gemm=lambda x, planes, mode="folded": bitplane_gemm(
-        x, planes, mode=mode, interpret=_pallas_interpret()),
-    gemm_placed=lambda x, planes, col_ids, mode="folded":
-        bitplane_gemm_placed(x, planes, col_ids, mode=mode,
-                             interpret=_pallas_interpret()),
+    gemv=_pl[0], gemv_placed=_pl[1], gemm=_pl[2], gemm_placed=_pl[3],
 ))
 
+_it = _pallas_entries(lambda: True)
 register_backend(Backend(
     name="interpret",
-    gemv=lambda x, planes, mode="folded": bitplane_gemv(
-        x, planes, mode=mode, interpret=True),
-    gemv_placed=lambda x, planes, col_ids, mode="folded":
-        bitplane_gemv_placed(x, planes, col_ids, mode=mode, interpret=True),
-    gemm=lambda x, planes, mode="folded": bitplane_gemm(
-        x, planes, mode=mode, interpret=True),
-    gemm_placed=lambda x, planes, col_ids, mode="folded":
-        bitplane_gemm_placed(x, planes, col_ids, mode=mode, interpret=True),
+    gemv=_it[0], gemv_placed=_it[1], gemm=_it[2], gemm_placed=_it[3],
 ))
 
 register_backend(Backend(
     name="reference",
     # The jnp oracle is already batch-shaped: the same entry serves both.
-    gemv=lambda x, planes, mode="folded": ref.bitplane_gemv_ref(x, planes),
-    gemv_placed=lambda x, planes, col_ids, mode="folded":
-        ref.bitplane_gemv_placed_ref(x, planes, col_ids),
-    gemm=lambda x, planes, mode="folded": ref.bitplane_gemv_ref(x, planes),
-    gemm_placed=lambda x, planes, col_ids, mode="folded":
-        ref.bitplane_gemv_placed_ref(x, planes, col_ids),
+    gemv=_ref_gemv,
+    gemv_placed=_ref_gemv_placed,
+    gemm=_ref_gemv,
+    gemm_placed=_ref_gemv_placed,
 ))

@@ -12,14 +12,17 @@ This kernel is the GEMM generalization: the same HBM bit-plane layout
 batch axis tiled into the grid:
 
     grid (B/Bb, N/Nb, K/Kb);  blocks x [Bb, Kb] int8,
-    planes [WB, Kb, Nb] int8, out [Bb, Nb] int32.
+    planes [WB, Kb, Nb] int8 (dense) or [WB, Kb/8, Nb] uint8 (bit-packed),
+    out [Bb, Nb] int32.
 
 K is the reduction axis (innermost, accumulated in the output block — the
 out block index depends only on (b, n)).  Both execution modes of the GeMV
 kernel carry over unchanged (``planes`` = one MXU pass per bit-plane,
-``folded`` = planes folded to int8 in VMEM, one pass per K-tile), and the
-placed variant fuses the logical->physical column gather exactly like
-``bitplane_gemv_placed``.
+``folded`` = planes folded to int8 in VMEM, one pass per K-tile), both
+storage layouts too (``bitpack8`` words unpack inside VMEM — see
+bitplane_gemv.py), and the placed variant fuses the logical->physical
+column gather exactly like ``bitplane_gemv_placed``, streaming one
+block-aligned window block per grid step.
 
 Ragged batches (a continuous-batching step whose live-slot count is not a
 tile multiple) are handled here: B pads up to the batch tile with zero rows,
@@ -38,7 +41,8 @@ from jax.experimental import pallas as pl
 # The kernel bodies are the GeMV ones with the K reduction axis moved to
 # grid position 2 (after the new batch axis); only the grid/BlockSpec
 # plumbing differs.
-from .bitplane_gemv import (_gemv_kernel, _gemv_placed_kernel, _sign_fix)
+from .bitplane_gemv import (_gemv_kernel, _gemv_placed_kernel, _k_tiling,
+                            _largest_divisor, _sign_fix)
 
 B_BLOCK = 128
 K_BLOCK = 256
@@ -52,30 +56,35 @@ def _pad_batch(x: jax.Array, bb: int) -> jax.Array:
     return jnp.pad(x, ((0, bb - b % bb), (0, 0)))
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("mode", "interpret", "layout", "logical_k"))
 def bitplane_gemm(
     x: jax.Array,        # [B, K] int8 activations (any B, padded here)
-    planes: jax.Array,   # [WB, K, N] int8 in {0,1} — offset-binary weight bits
+    planes: jax.Array,   # [WB, K, N] int8 bits | [WB, K/8, N] uint8 words
     mode: str = "planes",
     interpret: bool = True,
+    layout: str = "dense",
+    logical_k: int | None = None,
 ) -> jax.Array:
     """Batched offset-binary bit-plane GEMM; returns [B, N] int32 of
     x @ (W - 2^{WB-1}).  Bit-exact vs ``bitplane_gemv`` row by row."""
     b, k = x.shape
-    wb, k2, n = planes.shape
-    kb, nb = min(k, K_BLOCK), min(n, N_BLOCK)
+    wb, _, n = planes.shape
+    xp, pkb, xkb, k_steps = _k_tiling(x, planes, layout, logical_k)
+    nb = _largest_divisor(n, N_BLOCK)
     bb = min(b, B_BLOCK)
-    assert k == k2 and k % kb == 0 and n % nb == 0, (x.shape, planes.shape)
-    xp = _pad_batch(x, bb)
+    xp = _pad_batch(xp, bb)
     bp = xp.shape[0]
-    grid = (bp // bb, n // nb, k // kb)
-    kernel = functools.partial(_gemv_kernel, mode=mode, n_bits=wb, k_axis=2)
+    grid = (bp // bb, n // nb, k_steps)
+    kernel = functools.partial(_gemv_kernel, mode=mode, n_bits=wb, k_axis=2,
+                               packed=(layout == "bitpack8"))
     unsigned = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bb, kb), lambda jb, jn, jk: (jb, jk)),
-            pl.BlockSpec((wb, kb, nb), lambda jb, jn, jk: (0, jk, jn)),
+            pl.BlockSpec((bb, xkb), lambda jb, jn, jk: (jb, jk)),
+            pl.BlockSpec((wb, pkb, nb), lambda jb, jn, jk: (0, jk, jn)),
         ],
         out_specs=pl.BlockSpec((bb, nb), lambda jb, jn, jk: (jb, jn)),
         out_shape=jax.ShapeDtypeStruct((bp, n), jnp.int32),
@@ -84,41 +93,57 @@ def bitplane_gemm(
     return unsigned[:b] - _sign_fix(x, wb)
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("mode", "interpret", "layout", "logical_k",
+                     "window_block"))
 def bitplane_gemm_placed(
     x: jax.Array,         # [B, K] int8 activations
-    planes: jax.Array,    # [WB, K, P] int8 physical window (placed layout)
+    planes: jax.Array,    # [WB, K(/8), W] physical window (placed layout)
     col_ids: jax.Array,   # [N] int32 logical -> window column map
     mode: str = "planes",
     interpret: bool = True,
+    layout: str = "dense",
+    logical_k: int | None = None,
+    window_block: int | None = None,
 ) -> jax.Array:
     """Column-placed batched GEMM; returns [B, N] like ``bitplane_gemm``.
 
-    ``planes`` is the physically-permuted window layout a placement-aware
-    packer emits (repro/pud/placement.py); the gather is fused into the
-    kernel per N-block.  Bit-exact vs ``bitplane_gemv_placed`` row by row.
+    ``planes`` is the block-aligned physically-permuted window layout a
+    placement-aware packer emits (repro/pud/placement.py); the gather is
+    fused into the kernel per N-block, streaming ``window_block`` window
+    columns per grid step (None = whole window as one block, the degenerate
+    hand-built-pack case).  Bit-exact vs ``bitplane_gemv_placed`` row by
+    row.
     """
     b, k = x.shape
-    wb, k2, p = planes.shape
+    wb, _, w_len = planes.shape
     (n,) = col_ids.shape
-    kb, nb = min(k, K_BLOCK), min(n, N_BLOCK)
+    xp, pkb, xkb, k_steps = _k_tiling(x, planes, layout, logical_k)
+    pwb = window_block or w_len
+    if w_len % pwb or n % (w_len // pwb):
+        raise ValueError(
+            f"window length {w_len} / window_block {pwb} does not tile "
+            f"N={n}")
+    block_cols = n // (w_len // pwb)
+    nb = _largest_divisor(block_cols, N_BLOCK)
     bb = min(b, B_BLOCK)
-    assert k == k2 and k % kb == 0 and n % nb == 0, \
-        (x.shape, planes.shape, col_ids.shape)
-    xp = _pad_batch(x, bb)
+    xp = _pad_batch(xp, bb)
     bp = xp.shape[0]
-    grid = (bp // bb, n // nb, k // kb)
+    grid = (bp // bb, n // nb, k_steps)
     kernel = functools.partial(_gemv_placed_kernel, mode=mode, n_bits=wb,
-                               k_axis=2)
+                               k_axis=2, packed=(layout == "bitpack8"),
+                               window_block=pwb)
     unsigned = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bb, kb), lambda jb, jn, jk: (jb, jk)),
+            pl.BlockSpec((bb, xkb), lambda jb, jn, jk: (jb, jk)),
             pl.BlockSpec((1, nb), lambda jb, jn, jk: (0, jn)),
-            # whole physical window per K-tile: the gather needs arbitrary
-            # window columns, so the P axis stays unblocked
-            pl.BlockSpec((wb, kb, p), lambda jb, jn, jk: (0, jk, 0)),
+            # one window block per grid step (block-aligned placed layout)
+            pl.BlockSpec((wb, pkb, pwb),
+                         lambda jb, jn, jk, _nb=nb, _bc=block_cols:
+                         (0, jk, (jn * _nb) // _bc)),
         ],
         out_specs=pl.BlockSpec((bb, nb), lambda jb, jn, jk: (jb, jn)),
         out_shape=jax.ShapeDtypeStruct((bp, n), jnp.int32),

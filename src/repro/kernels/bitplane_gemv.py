@@ -21,10 +21,32 @@ Two execution modes, both lowered by this kernel and oracled by ref.py:
     VMEM (sum_b 2^b W_b) and a single MXU pass per K-tile does the work —
     WB x fewer MXU flops at identical numerics.
 
+Two storage layouts, selected by the static ``layout`` argument:
+
+  * ``"dense"``    — one int8 byte per weight bit, planes [WB, K, N].  The
+    legacy format; 8x more HBM bytes than the bits it encodes.
+  * ``"bitpack8"`` — eight K rows per uint8 word, planes [WB, ceil(K/8), N].
+    The word axis is K (the sublane axis): the unpack inside VMEM is a
+    broadcast-shift-mask plus a sublane reshape, while N — the 128-lane
+    axis and the placement/gather axis — stays element-addressable.  HBM ->
+    VMEM weight traffic and streamed plane residency drop 8x; the dense
+    tile exists only as a transient inside the compute stage.
+
 Tiling: grid (N/Nb, K/Kb); K is the reduction axis, accumulated in the output
-block across grid steps (out block depends only on the N index).  Blocks:
-x [B, Kb] int8, planes [WB, Kb, Nb] int8, out [B, Nb] int32.  With
-Kb=256, Nb=256, WB=4: (4*256*256 + 8*256 + 8*256*4) B ~ 270 KiB VMEM.
+block across grid steps (out block depends only on the N index).  Block sizes
+adapt to the operand: the preferred MXU-aligned tiles are Kb=256, Nb=256, and
+non-multiple shapes fall back to the largest divisor (mirroring the GEMM
+batch-pad path) instead of asserting.  VMEM per grid step at Kb=Nb=256, WB=4,
+B=8: dense streams 4*256*256 planes + 8*256 x + 8*256*4 out ~ 266 KiB;
+bit-packed streams 4*32*256 words instead of the planes ~ 42 KiB (see
+docs/kernels.md for the full budget math, including the placed window).
+
+The placed variant consumes the *block-aligned* physical window layout
+(repro/pud/placement.py): logical N-block j's columns all live inside window
+slice [j*window_block, (j+1)*window_block), so the window axis blocks like
+any other axis — ``window_block`` columns per grid step instead of the whole
+physical window P, and placed VMEM residency is set by the tile, not the
+fleet window size.
 """
 from __future__ import annotations
 
@@ -36,6 +58,30 @@ from jax.experimental import pallas as pl
 
 K_BLOCK = 256
 N_BLOCK = 256
+
+LAYOUTS = ("dense", "bitpack8")
+
+
+def _largest_divisor(dim: int, cap: int) -> int:
+    """Largest block size <= cap that divides dim (>= 1)."""
+    for d in range(min(dim, cap), 0, -1):
+        if dim % d == 0:
+            return d
+    return 1
+
+
+def _unpack_bits(words: jax.Array) -> jax.Array:
+    """In-VMEM unpack: [WB, Kw, Nb] uint8 words -> [WB, Kw*8, Nb] int8 bits.
+
+    Broadcast-shift-mask along the sublane (K) axis, LSB-first — the exact
+    inverse of ``ref.pack_plane_words``.  The dense tile is a compute-stage
+    transient; only the 8x smaller words stream HBM -> VMEM.
+    """
+    wb, kw, nb = words.shape
+    shifts = jnp.arange(8, dtype=jnp.int32)
+    bits = (words.astype(jnp.int32)[:, :, None, :]
+            >> shifts[None, None, :, None]) & 1
+    return bits.reshape(wb, kw * 8, nb).astype(jnp.int8)
 
 
 def _accumulate(x, planes, out_shape, mode: str, n_bits: int):
@@ -59,10 +105,11 @@ def _accumulate(x, planes, out_shape, mode: str, n_bits: int):
 
 
 def _gemv_kernel(x_ref, planes_ref, out_ref, *, mode: str, n_bits: int,
-                 k_axis: int = 1):
+                 k_axis: int = 1, packed: bool = False):
     """``k_axis`` names the grid position of the K reduction axis: 1 for
     the GeMV grid (N, K), 2 for the batch-tiled GEMM grid (B, N, K) —
-    bitplane_gemm.py reuses this body with k_axis=2."""
+    bitplane_gemm.py reuses this body with k_axis=2.  ``packed`` marks the
+    bit-word layout: the plane tile unpacks inside VMEM."""
     k_idx = pl.program_id(k_axis)
 
     @pl.when(k_idx == 0)
@@ -70,18 +117,24 @@ def _gemv_kernel(x_ref, planes_ref, out_ref, *, mode: str, n_bits: int,
         out_ref[...] = jnp.zeros_like(out_ref)
 
     x = x_ref[...].astype(jnp.int32)              # [B, Kb]
-    out_ref[...] += _accumulate(x, planes_ref[...], out_ref.shape,
-                                mode, n_bits)
+    planes = planes_ref[...]
+    if packed:
+        planes = _unpack_bits(planes)
+    out_ref[...] += _accumulate(x, planes, out_ref.shape, mode, n_bits)
 
 
 def _gemv_placed_kernel(x_ref, cols_ref, planes_ref, out_ref, *,
-                        mode: str, n_bits: int, k_axis: int = 1):
+                        mode: str, n_bits: int, k_axis: int = 1,
+                        packed: bool = False, window_block: int = 0):
     """Placed variant: gather physical columns inside the kernel.
 
-    ``planes_ref`` holds the PHYSICAL window [WB, Kb, P] of this tensor's
-    column region; ``cols_ref`` [1, Nb] maps this output block's logical
-    columns onto window positions.  The gather is fused with the matmul —
-    the permuted planes never round-trip through HBM.
+    ``planes_ref`` holds ONE window block [WB, Kb(/8), window_block] of this
+    tensor's physical region — the block-aligned placed layout guarantees
+    the output block's logical columns all live inside it.  ``cols_ref``
+    [1, Nb] carries absolute window positions; the in-block residue is a
+    modulo.  The gather is fused with the matmul — the permuted planes
+    never round-trip through HBM — and runs on the words *before* the
+    unpack in the bit-packed layout (8x cheaper gather).
     """
     k_idx = pl.program_id(k_axis)
 
@@ -90,8 +143,10 @@ def _gemv_placed_kernel(x_ref, cols_ref, planes_ref, out_ref, *,
         out_ref[...] = jnp.zeros_like(out_ref)
 
     x = x_ref[...].astype(jnp.int32)              # [B, Kb]
-    cols = cols_ref[0, :]                          # [Nb] window positions
-    planes = jnp.take(planes_ref[...], cols, axis=2)   # [WB, Kb, Nb]
+    cols = cols_ref[0, :] % window_block           # [Nb] in-block residues
+    planes = jnp.take(planes_ref[...], cols, axis=2)   # [WB, Kb(/8), Nb]
+    if packed:
+        planes = _unpack_bits(planes)
     out_ref[...] += _accumulate(x, planes, out_ref.shape, mode, n_bits)
 
 
@@ -102,79 +157,129 @@ def _sign_fix(x: jax.Array, wb: int) -> jax.Array:
     return (1 << (wb - 1)) * x.astype(jnp.int32).sum(axis=1, keepdims=True)
 
 
+def _k_tiling(x: jax.Array, planes: jax.Array, layout: str,
+              logical_k: int | None):
+    """Resolve the K-axis tiling for either storage layout.
+
+    Returns (x_padded, planes_k_block, x_k_block, k_steps): the activation
+    operand (byte-padded for bitpack8 so eight x rows match each word row),
+    the plane/word block height, the matching x block width, and the K grid
+    extent.  Padded x rows are zero, padded word bits are zero, and the
+    sign fix is computed from the un-padded x — so the pad contributes
+    exactly nothing on both sides.
+    """
+    k = x.shape[1]
+    if layout == "bitpack8":
+        kw = planes.shape[1]
+        if (logical_k or kw * 8) != k or k > kw * 8:
+            raise ValueError(
+                f"bitpack8 operand mismatch: x K={k}, words Kw={kw} "
+                f"(logical_k={logical_k})")
+        xp = jnp.pad(x, ((0, 0), (0, kw * 8 - k))) if kw * 8 != k else x
+        kwb = _largest_divisor(kw, K_BLOCK // 8)
+        return xp, kwb, kwb * 8, kw // kwb
+    if layout != "dense":
+        raise ValueError(f"unknown plane layout {layout!r}; one of {LAYOUTS}")
+    if planes.shape[1] != k:
+        raise ValueError(f"K mismatch: x {x.shape}, planes {planes.shape}")
+    kb = _largest_divisor(k, K_BLOCK)
+    return x, kb, kb, k // kb
+
+
 @functools.partial(
-    jax.jit, static_argnames=("mode", "interpret"))
+    jax.jit,
+    static_argnames=("mode", "interpret", "layout", "logical_k"))
 def bitplane_gemv(
     x: jax.Array,        # [B, K] int8 activations
-    planes: jax.Array,   # [WB, K, N] int8 in {0,1} — offset-binary weight bits
+    planes: jax.Array,   # [WB, K, N] int8 bits | [WB, K/8, N] uint8 words
     mode: str = "planes",
     interpret: bool = True,
+    layout: str = "dense",
+    logical_k: int | None = None,
 ) -> jax.Array:
     """Offset-binary bit-plane GeMV; returns [B, N] int32 of x @ (W - 2^{WB-1}).
 
     ``planes`` encode unsigned u = w + 2^{WB-1}; the signed correction
-    subtracts 2^{WB-1} * sum_k x_k per output.
+    subtracts 2^{WB-1} * sum_k x_k per output.  ``layout`` selects dense
+    int8 planes or K-axis bit-words (unpacked inside the kernel).
     """
     b, k = x.shape
-    wb, k2, n = planes.shape
-    # Blocks adapt down for sub-block (smoke-scale) dims; full-size archs
-    # hit the MXU-aligned 256x256 tiles.
-    kb, nb = min(k, K_BLOCK), min(n, N_BLOCK)
-    assert k == k2 and k % kb == 0 and n % nb == 0, (x.shape, planes.shape)
-    grid = (n // nb, k // kb)
-    kernel = functools.partial(_gemv_kernel, mode=mode, n_bits=wb)
+    wb, _, n = planes.shape
+    xp, pkb, xkb, k_steps = _k_tiling(x, planes, layout, logical_k)
+    nb = _largest_divisor(n, N_BLOCK)
+    grid = (n // nb, k_steps)
+    kernel = functools.partial(_gemv_kernel, mode=mode, n_bits=wb,
+                               packed=(layout == "bitpack8"))
     unsigned = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((b, kb), lambda jn, jk: (0, jk)),
-            pl.BlockSpec((wb, kb, nb), lambda jn, jk: (0, jk, jn)),
+            pl.BlockSpec((b, xkb), lambda jn, jk: (0, jk)),
+            pl.BlockSpec((wb, pkb, nb), lambda jn, jk: (0, jk, jn)),
         ],
         out_specs=pl.BlockSpec((b, nb), lambda jn, jk: (0, jn)),
         out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
         interpret=interpret,
-    )(x, planes)
+    )(xp, planes)
     return unsigned - _sign_fix(x, wb)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("mode", "interpret"))
+    jax.jit,
+    static_argnames=("mode", "interpret", "layout", "logical_k",
+                     "window_block"))
 def bitplane_gemv_placed(
     x: jax.Array,         # [B, K] int8 activations
-    planes: jax.Array,    # [WB, K, P] int8 physical window (placed layout)
+    planes: jax.Array,    # [WB, K(/8), W] physical window (placed layout)
     col_ids: jax.Array,   # [N] int32 logical -> window column map
     mode: str = "planes",
     interpret: bool = True,
+    layout: str = "dense",
+    logical_k: int | None = None,
+    window_block: int | None = None,
 ) -> jax.Array:
     """Column-placed bit-plane GeMV; returns [B, N] like ``bitplane_gemv``.
 
     ``planes`` is the physically-permuted layout a placement-aware packer
     emits (repro/pud/placement.py): logical column n of the projection lives
     at window position ``col_ids[n]``; the remaining window columns belong
-    to faulty/unused physical columns and are never read.  The gather is
-    fused into the kernel per N-block.  Bit-exact vs
+    to faulty/unused physical columns and are never read.  ``window_block``
+    is the block-aligned window stride — logical N-block j's columns sit
+    inside window slice [j*window_block, (j+1)*window_block), so the kernel
+    streams one window block per grid step (None treats the whole window as
+    a single block, the degenerate case for hand-built packs).  The gather
+    is fused into the kernel per N-block.  Bit-exact vs
     ``ref.bitplane_gemv_placed_ref``.
     """
     b, k = x.shape
-    wb, k2, p = planes.shape
+    wb, _, w_len = planes.shape
     (n,) = col_ids.shape
-    kb, nb = min(k, K_BLOCK), min(n, N_BLOCK)
-    assert k == k2 and k % kb == 0 and n % nb == 0, \
-        (x.shape, planes.shape, col_ids.shape)
-    grid = (n // nb, k // kb)
-    kernel = functools.partial(_gemv_placed_kernel, mode=mode, n_bits=wb)
+    xp, pkb, xkb, k_steps = _k_tiling(x, planes, layout, logical_k)
+    pwb = window_block or w_len
+    if w_len % pwb or n % (w_len // pwb):
+        raise ValueError(
+            f"window length {w_len} / window_block {pwb} does not tile "
+            f"N={n}")
+    block_cols = n // (w_len // pwb)
+    nb = _largest_divisor(block_cols, N_BLOCK)
+    grid = (n // nb, k_steps)
+    kernel = functools.partial(_gemv_placed_kernel, mode=mode, n_bits=wb,
+                               packed=(layout == "bitpack8"),
+                               window_block=pwb)
     unsigned = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((b, kb), lambda jn, jk: (0, jk)),
+            pl.BlockSpec((b, xkb), lambda jn, jk: (0, jk)),
             pl.BlockSpec((1, nb), lambda jn, jk: (0, jn)),
-            # whole physical window per K-tile: the gather needs arbitrary
-            # window columns, so the P axis stays unblocked
-            pl.BlockSpec((wb, kb, p), lambda jn, jk: (0, jk, 0)),
+            # one window block per grid step: the block-aligned layout
+            # bounds the gather to this output block's window slice
+            pl.BlockSpec((wb, pkb, pwb),
+                         lambda jn, jk, _nb=nb, _bc=block_cols:
+                         (0, jk, (jn * _nb) // _bc)),
         ],
         out_specs=pl.BlockSpec((b, nb), lambda jn, jk: (0, jn)),
         out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
         interpret=interpret,
-    )(x, col_ids.astype(jnp.int32)[None, :], planes)
+    )(xp, col_ids.astype(jnp.int32)[None, :], planes)
     return unsigned - _sign_fix(x, wb)

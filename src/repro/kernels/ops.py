@@ -36,12 +36,15 @@ def quantize_activations(x: jax.Array, clip: float = 4.0) -> tuple[jax.Array, ja
 
 def pud_matmul(
     x: jax.Array,          # [B, K] float activations
-    planes: jax.Array,     # [WB, K, N] int8 bit-planes (offset-binary)
+    planes: jax.Array,     # [WB, K(/8), N] bit-planes / bit-words
     w_scale: jax.Array,    # [N] or scalar dequant scale
     mode: str = "folded",
     interpret: bool = True,
     col_ids: jax.Array | None = None,   # [N] window map -> placed kernel
     backend: str | None = None,         # named backend (kernels/backends.py)
+    layout: str = "dense",              # plane storage (repro/pud/packed.py)
+    logical_k: int | None = None,       # un-padded K of a bit-packed pack
+    window_block: int | None = None,    # placed window stride (block-aligned)
 ) -> jax.Array:
     """Quantize -> bit-plane GEMM -> dequantize. Returns [B, N] float32.
 
@@ -52,19 +55,30 @@ def pud_matmul(
 
     With ``col_ids`` the planes are the physically-placed window layout
     (repro/pud/placement.py) and the column gather runs fused in the kernel.
-    ``backend`` names a registered lowering; without one the legacy
-    ``interpret`` flag picks between the interpreted and native Pallas
-    kernel.  All backends are bit-exact against each other.
+    ``layout``/``logical_k``/``window_block`` carry the pack-format
+    metadata of a ``PackedTensor`` (bit-packed words unpack inside the
+    kernel).  ``backend`` names a registered lowering; without one the
+    legacy ``interpret`` flag picks between the interpreted and native
+    Pallas kernel.  All backends are bit-exact against each other.
     """
     xq, x_scale = quantize_activations(x)
     be = get_backend(backend or ("interpret" if interpret else "pallas"))
     batched = xq.shape[0] > 1
+    # Layout kwargs only travel when they carry information: a legacy dense
+    # pack dispatches through the pre-refactor 3-arg entry signature, so
+    # custom backends registered against it keep working (bit-packed packs
+    # genuinely require the layout-aware signature).
+    kw = {}
+    if layout != "dense":
+        kw = {"layout": layout, "logical_k": logical_k}
     if col_ids is not None:
-        acc = (be.matmul_placed(xq, planes, col_ids, mode) if batched
-               else be.gemv_placed(xq, planes, col_ids, mode))
+        if window_block is not None:
+            kw["window_block"] = window_block
+        acc = (be.matmul_placed(xq, planes, col_ids, mode, **kw) if batched
+               else be.gemv_placed(xq, planes, col_ids, mode, **kw))
     else:
-        acc = (be.matmul(xq, planes, mode) if batched
-               else be.gemv(xq, planes, mode))
+        acc = (be.matmul(xq, planes, mode, **kw) if batched
+               else be.gemv(xq, planes, mode, **kw))
     return acc.astype(jnp.float32) * x_scale * w_scale
 
 
@@ -76,18 +90,21 @@ def pud_gemv(
     interpret: bool = True,
     col_ids: jax.Array | None = None,
     backend: str | None = None,
+    layout: str = "dense",
+    logical_k: int | None = None,
+    window_block: int | None = None,
 ) -> jax.Array:
     """Rank-dispatching shim over ``pud_matmul``.
 
     Kept as the legacy single-request entry: a 1-D ``x`` [K] returns [N],
     a 2-D ``x`` [B, K] behaves exactly like ``pud_matmul``.
     """
+    kw = dict(mode=mode, interpret=interpret, col_ids=col_ids,
+              backend=backend, layout=layout, logical_k=logical_k,
+              window_block=window_block)
     if x.ndim == 1:
-        return pud_matmul(x[None, :], planes, w_scale, mode=mode,
-                          interpret=interpret, col_ids=col_ids,
-                          backend=backend)[0]
-    return pud_matmul(x, planes, w_scale, mode=mode, interpret=interpret,
-                      col_ids=col_ids, backend=backend)
+        return pud_matmul(x[None, :], planes, w_scale, **kw)[0]
+    return pud_matmul(x, planes, w_scale, **kw)
 
 
 def pud_gemv_ref(x, planes, w_scale, col_ids=None):

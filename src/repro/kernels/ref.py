@@ -84,3 +84,70 @@ def pack_bitplanes(w: jax.Array, n_bits: int) -> jax.Array:
     shifts = jnp.arange(n_bits, dtype=jnp.int32)
     planes = (u[None] >> shifts[:, None, None]) & 1
     return planes.astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Bit-word packing: the HBM layout the bit-packed serving path streams.
+#
+# Two candidate word axes exist (docs/kernels.md weighs them); the shipped
+# format is the K axis: the N axis is the TPU lane axis AND the placement/
+# gather axis, so keeping it element-addressable means ``col_ids`` gathers,
+# block-aligned placed windows and per-channel scales all work on words
+# unchanged, and the in-kernel unpack is a sublane-axis shift-mask-reshape.
+# The N-axis uint32 variant is kept for the format comparison + property
+# tests only.
+# ---------------------------------------------------------------------------
+
+
+def pack_plane_words(planes: jax.Array) -> jax.Array:
+    """Dense bit-planes [WB, K, N] int8 in {0,1} -> [WB, ceil(K/8), N] uint8.
+
+    Eight consecutive K rows fold into one byte, LSB-first: bit j of word i
+    is the plane bit at k = i*8 + j.  K pads up to a byte multiple with zero
+    bits (harmless: the kernel zero-pads the matching activation rows).
+    """
+    wb, k, n = planes.shape
+    kw = -(-k // 8)
+    p = jnp.pad(planes, ((0, 0), (0, kw * 8 - k), (0, 0)))
+    p = p.reshape(wb, kw, 8, n).astype(jnp.uint32)
+    shifts = jnp.arange(8, dtype=jnp.uint32)
+    return (p << shifts[None, None, :, None]).sum(axis=2).astype(jnp.uint8)
+
+
+def unpack_plane_words(words: jax.Array, k: int | None = None) -> jax.Array:
+    """[WB, Kw, N] uint8 words -> dense [WB, k, N] int8 bit-planes.
+
+    Exact inverse of ``pack_plane_words``; ``k`` slices off the byte-pad
+    rows (default: all Kw*8 rows).
+    """
+    wb, kw, n = words.shape
+    shifts = jnp.arange(8, dtype=jnp.int32)
+    bits = (words.astype(jnp.int32)[:, :, None, :]
+            >> shifts[None, None, :, None]) & 1
+    planes = bits.reshape(wb, kw * 8, n).astype(jnp.int8)
+    return planes[:, : (kw * 8 if k is None else k), :]
+
+
+def pack_plane_words_n(planes: jax.Array) -> jax.Array:
+    """The rejected candidate axis: [WB, K, N] -> [WB, K, ceil(N/32)] uint32.
+
+    32 consecutive N columns fold into one word, LSB-first.  Kept for the
+    round-trip property tests that justify the K-axis choice — packing the
+    lane axis would force a lane-interleaving unpack in-kernel and break
+    column addressability (placement gathers, per-channel scales).
+    """
+    wb, k, n = planes.shape
+    nw = -(-n // 32)
+    p = jnp.pad(planes, ((0, 0), (0, 0), (0, nw * 32 - n)))
+    p = p.reshape(wb, k, nw, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return (p << shifts[None, None, None, :]).sum(axis=3).astype(jnp.uint32)
+
+
+def unpack_plane_words_n(words: jax.Array, n: int | None = None) -> jax.Array:
+    """Inverse of ``pack_plane_words_n``: [WB, K, Nw] uint32 -> [WB, K, n]."""
+    wb, k, nw = words.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[:, :, :, None] >> shifts[None, None, None, :]) & 1
+    planes = bits.reshape(wb, k, nw * 32).astype(jnp.int8)
+    return planes[:, :, : (nw * 32 if n is None else n)]

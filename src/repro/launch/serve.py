@@ -213,7 +213,10 @@ def main(argv=None) -> int:
         print(f"  pud-gemv path ({cfg.weight_bits}-bit planes, "
               f"{extras_rep['n_packed']} projections packed, "
               f"{extras_rep['layout']} columns, "
-              f"{extras_rep['pud_bytes'] / 2**20:.1f} MiB planes):")
+              f"{extras_rep['stored_bytes'] / 2**20:.1f} MiB bit-packed "
+              f"vs {extras_rep['dense_equiv_bytes'] / 2**20:.1f} MiB dense "
+              f"— {extras_rep['traffic_reduction']:.1f}x less weight "
+              f"traffic/token):")
         print(f"    token agreement vs bf16: {100 * agree:.1f}%   "
               f"max |logit delta|: {delta:.3f} "
               f"(quantization, not error — the kernel is exact int math)")

@@ -26,10 +26,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.ops import pud_gemv
-from repro.kernels.ref import pack_bitplanes
+from repro.kernels.ref import pack_bitplanes, pack_plane_words
 
 from .bitserial import add8_counts, mul8_counts
-from .packed import PackedTensor, as_packed_tensor
+from .packed import (LAYOUT_BITPACK, PackedTensor, as_packed_tensor,
+                     packed_bytes)
 from .timing import OpCounts, SystemConfig, wave_latency_ns
 
 # Default packable set: FFN projections (dominant decode GeMV flops).
@@ -58,20 +59,30 @@ class PUDGemvConfig:
 
 
 def pack_linear(w: jax.Array, n_bits: int = 4,
-                backend: str | None = None) -> PackedTensor:
+                backend: str | None = None,
+                bitpack: bool = True) -> PackedTensor:
     """[K, N] float weights -> per-output-channel-quantized bit-planes.
 
-    Returns a ``PackedTensor`` (planes [WB, K, N] int8 in {0,1}, scale [N]
-    float32) — the legacy ``pack["planes"]`` mapping access still works.
-    Symmetric per-channel: w ~ scale * q, q in [-2^{b-1}, 2^{b-1}).
-    ``backend`` stamps the pack with the execution backend model forwards
-    should dispatch it through.
+    Returns a ``PackedTensor`` — by default in the *bit-packed* storage
+    layout (planes [WB, ceil(K/8), N] uint8 words, eight K rows per byte;
+    ``layout="bitpack8"``), the format whose HBM footprint actually matches
+    the bits the PUD layout stores.  ``bitpack=False`` keeps the legacy
+    dense one-byte-per-bit planes [WB, K, N] int8 in {0,1}; both are
+    bit-exact through every kernel entry.  The legacy ``pack["planes"]``
+    mapping access still works.  Symmetric per-channel: w ~ scale * q,
+    q in [-2^{b-1}, 2^{b-1}).  ``backend`` stamps the pack with the
+    execution backend model forwards should dispatch it through.
     """
     qmax = (1 << (n_bits - 1)) - 1
     scale = jnp.maximum(jnp.abs(w).max(axis=0), 1e-8) / qmax       # [N]
     q = jnp.clip(jnp.round(w / scale[None, :]), -qmax - 1, qmax)
-    return PackedTensor(planes=pack_bitplanes(q.astype(jnp.int32), n_bits),
-                        scale=scale.astype(jnp.float32), backend=backend)
+    planes = pack_bitplanes(q.astype(jnp.int32), n_bits)
+    if not bitpack:
+        return PackedTensor(planes=planes, scale=scale.astype(jnp.float32),
+                            backend=backend)
+    return PackedTensor(planes=pack_plane_words(planes),
+                        scale=scale.astype(jnp.float32), backend=backend,
+                        layout=LAYOUT_BITPACK, logical_k=w.shape[0])
 
 
 def pud_linear(x: jax.Array, packed: "PackedTensor | dict",
@@ -80,10 +91,11 @@ def pud_linear(x: jax.Array, packed: "PackedTensor | dict",
     """x: [..., K] float -> [..., N] float32 through the bit-plane GeMV.
 
     ``packed`` is a ``PackedTensor`` (or a legacy pack dict, coerced).
-    Backend resolution: explicit ``backend`` arg > ``cfg.backend`` > the
-    backend stamped on the pack (how a session's choice reaches model
-    forwards, which call this with the default config) > the legacy
-    ``interpret`` flag.
+    The pack's layout metadata (dense vs bit-packed words, placed window
+    stride) rides into the kernel dispatch.  Backend resolution: explicit
+    ``backend`` arg > ``cfg.backend`` > the backend stamped on the pack
+    (how a session's choice reaches model forwards, which call this with
+    the default config) > the legacy ``interpret`` flag.
     """
     pt = as_packed_tensor(packed)
     lead = x.shape[:-1]
@@ -91,7 +103,9 @@ def pud_linear(x: jax.Array, packed: "PackedTensor | dict",
     y = pud_gemv(x2, pt.planes, pt.scale,
                  mode=cfg.mode, interpret=cfg.interpret,
                  col_ids=pt.col_ids,
-                 backend=backend or cfg.backend or pt.backend)
+                 backend=backend or cfg.backend or pt.backend,
+                 layout=pt.layout, logical_k=pt.logical_k,
+                 window_block=pt.window_block)
     return y.reshape(lead + (y.shape[-1],))
 
 
@@ -105,6 +119,37 @@ def pud_linear_ref(x: jax.Array, w: jax.Array, n_bits: int = 4) -> jax.Array:
     y = (xq.astype(jnp.float32) @ q.astype(jnp.float32))
     y = y * x_scale * scale[None, :]
     return y.reshape(x.shape[:-1] + (w.shape[-1],))
+
+
+# ---------------------------------------------------------------------------
+# Weight-byte traffic (the memory side of the serving hot path)
+# ---------------------------------------------------------------------------
+
+# Peak weight-staging bandwidth of the paper's 4-channel DDR4-2133 system:
+# 8 B/transfer x 2133 MT/s per channel.  Every decoded token streams each
+# packed projection once (GeMV is weight-bound), so bytes/token is simply
+# the pack's stored footprint — which the bit-packed layout cuts ~8x.
+WEIGHT_STAGING_BW_BYTES_S = 4 * 8 * 2133e6
+
+
+def weight_traffic(packed) -> dict:
+    """Per-token weight-traffic terms of a packed serving tree.
+
+    Accepts a ``PackedModel`` or raw serving params (either pack format).
+    ``stored_bytes_per_token`` is what the new bit-packed layout actually
+    streams; ``dense_equiv_bytes_per_token`` is what the same packs cost in
+    the legacy one-byte-per-bit layout; ``traffic_reduction`` is their
+    ratio (~8x for bit-packed packs, 1x for dense ones).
+    """
+    stats = packed_bytes(packed)
+    stored = stats["stored_bytes"]
+    dense = stats["dense_equiv_bytes"]
+    return {
+        "stored_bytes_per_token": stored,
+        "dense_equiv_bytes_per_token": dense,
+        "traffic_reduction": dense / max(1, stored),
+        "staging_bound_tok_s": WEIGHT_STAGING_BW_BYTES_S / max(1, stored),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -230,6 +275,23 @@ class FleetPerfModel:
 
     def speedup_vs(self, baseline: "PUDPerfModel | FleetPerfModel") -> float:
         return self.macs_per_second / baseline.macs_per_second
+
+    # -- weight-byte traffic ------------------------------------------------
+
+    def staging_bound_tokens_per_second(self, weight_bytes: float) -> float:
+        """Weight-staging bandwidth ceiling: each decoded token restages
+        every packed projection's stored bytes once, so the DDR4 channels
+        bound decode at BW / bytes-per-token.  With the bit-packed plane
+        layout ``weight_bytes`` is ~8x smaller than the legacy dense
+        layout's, which lifts this ceiling 8x (see ``weight_traffic``)."""
+        return WEIGHT_STAGING_BW_BYTES_S / max(1.0, float(weight_bytes))
+
+    def traffic_aware_tokens_per_second(self, flops_per_token: float,
+                                        weight_bytes: float) -> float:
+        """Sustained decode rate under both limits: the Eq.-1 compute rate
+        and the weight-staging bandwidth bound."""
+        return min(self.tokens_per_second(flops_per_token),
+                   self.staging_bound_tokens_per_second(weight_bytes))
 
     # -- batched serving ----------------------------------------------------
 

@@ -6,20 +6,41 @@ active) the ``col_ids`` gather map into the physical window.  ``PackedModel``
 is a whole serving tree (bf16 leaves + ``PackedTensor`` packs) plus the
 packing metadata that used to live in an ad-hoc report dict.
 
-Both are registered JAX pytrees, so they jit, ``lax.scan`` (stacked layers
-slice leaf-wise along the L axis), shard, and checkpoint like any other
-params.  ``PackedTensor`` also speaks the legacy mapping protocol
-(``pack["planes"]``, ``pack.get("col_ids")``, ``"col_ids" in pack``) so
-pre-session call sites and raw-dict packs keep working; ``as_packed_tensor``
-is the one coercion point between the two worlds.
+Since the bit-packing refactor the stored planes are *actually* bit-packed:
+the default ``layout`` is ``"bitpack8"`` — eight K rows per uint8 word,
+``[L?, WB, ceil(K/8), N]`` (see ``kernels.ref.pack_plane_words`` and
+docs/kernels.md for why the word axis is K, not N).  The pre-refactor dense
+``[L?, WB, K, N]`` int8-per-bit layout survives as ``layout="dense"`` —
+legacy dict packs coerce to it, and ``to_bitpacked``/``to_dense`` convert
+either way bit-exactly.
+
+Both classes are registered JAX pytrees, so they jit, ``lax.scan`` (stacked
+layers slice leaf-wise along the L axis), shard, and checkpoint like any
+other params; the layout metadata rides as pytree aux, so the kernel
+dispatch is trace-static.  ``PackedTensor`` also speaks the legacy mapping
+protocol (``pack["planes"]``, ``pack.get("col_ids")``, ``"col_ids" in
+pack``) so pre-session call sites and raw-dict packs keep working;
+``as_packed_tensor`` is the one coercion point between the two worlds.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import zipfile
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 _FIELDS = ("planes", "scale", "col_ids")
+
+LAYOUT_DENSE = "dense"        # [L?, WB, K, N/P] int8, one byte per bit
+LAYOUT_BITPACK = "bitpack8"   # [L?, WB, ceil(K/8), N/P] uint8, 8 bits/byte
+
+# .npz serialization tag.  The loader also accepts "pud-pack-v1": the
+# dense-layout archive convention without per-entry layout metadata (each
+# pack coerced by dtype), so dense-era archives deserialize under v2 code.
+PACK_FORMAT = "pud-pack-v2"
 
 
 @dataclasses.dataclass(eq=False)
@@ -27,26 +48,82 @@ class PackedTensor:
     """One projection in the PUD bit-plane layout.
 
     Shapes (optionally with a leading stacked-layer axis L):
-      planes   [L?, WB, K, N]  int8 in {0,1} — offset-binary weight bits;
-               with placement the trailing axis is the physical window P
-      scale    [L?, N]         float32 per-output-channel dequant scale
-      col_ids  [L?, N]         int32 logical -> window column map, or None
-                               for the logical (unplaced) layout
+      planes   [L?, WB, Kw, N]  ``layout="bitpack8"``: uint8 words, eight K
+               rows per byte (Kw = ceil(K/8), LSB-first);
+               ``layout="dense"``: [L?, WB, K, N] int8 in {0,1}.  With
+               placement the trailing axis is the physical window W.
+      scale    [L?, N]          float32 per-output-channel dequant scale
+      col_ids  [L?, N]          int32 logical -> window column map, or None
+                                for the logical (unplaced) layout
 
-    ``backend`` (pytree aux, not data) names the execution backend the pack
-    was built for: model forwards dispatch packed projections without access
-    to the session, so the backend choice rides on the pack itself
-    (``pud_linear`` resolution: explicit arg > config > pack > legacy flag).
+    Aux metadata (pytree aux, not data — trace-static):
+      backend       execution backend the pack was built for; model forwards
+                    dispatch packed projections without access to the
+                    session, so the choice rides on the pack itself
+                    (``pud_linear`` resolution: arg > config > pack > flag).
+      layout        plane storage format tag (see module constants).
+      logical_k     K before byte-padding (bitpack8 pads K to 8); None for
+                    dense packs, where K is the planes shape itself.
+      window_block  placed packs only: window columns per N-block — the
+                    block-aligned placed layout guarantees logical block j's
+                    columns live inside window slice [j*wb, (j+1)*wb), so
+                    the kernel blocks the window axis like any other.  None
+                    = single-block window (or unplaced).
     """
 
     planes: jax.Array
     scale: jax.Array
     col_ids: jax.Array | None = None
     backend: str | None = None
+    layout: str = LAYOUT_DENSE
+    logical_k: int | None = None
+    window_block: int | None = None
 
     @property
     def placed(self) -> bool:
         return self.col_ids is not None
+
+    @property
+    def bitpacked(self) -> bool:
+        return self.layout == LAYOUT_BITPACK
+
+    @property
+    def n_bits(self) -> int:
+        return self.planes.shape[-3]
+
+    @property
+    def k(self) -> int:
+        """Logical reduction length (un-padded K)."""
+        if self.layout == LAYOUT_BITPACK:
+            return self.logical_k or self.planes.shape[-2] * 8
+        return self.planes.shape[-2]
+
+    @property
+    def n(self) -> int:
+        """Logical output columns."""
+        return self.scale.shape[-1]
+
+    @property
+    def stored_bytes(self) -> int:
+        """Actual bytes of the stored arrays (what HBM really holds)."""
+        total = self.planes.size * self.planes.dtype.itemsize
+        total += self.scale.size * self.scale.dtype.itemsize
+        if self.col_ids is not None:
+            total += self.col_ids.size * self.col_ids.dtype.itemsize
+        return total
+
+    @property
+    def dense_equiv_bytes(self) -> int:
+        """Bytes the same pack occupies in the dense one-byte-per-bit
+        layout (the pre-bitpack format) — the 8x comparison baseline."""
+        shape = self.planes.shape
+        k_axis = self.k if self.layout == LAYOUT_BITPACK else shape[-2]
+        dense_planes = int(np.prod(shape[:-2], dtype=np.int64)) \
+            * k_axis * shape[-1]
+        total = dense_planes + self.scale.size * self.scale.dtype.itemsize
+        if self.col_ids is not None:
+            total += self.col_ids.size * self.col_ids.dtype.itemsize
+        return total
 
     def replace(self, **kw) -> "PackedTensor":
         return dataclasses.replace(self, **kw)
@@ -80,11 +157,49 @@ class PackedTensor:
 
 def as_packed_tensor(pack) -> PackedTensor:
     """Coerce a legacy {"planes", "scale", "col_ids"?} dict (or a
-    PackedTensor, passed through) to the typed form."""
+    PackedTensor, passed through) to the typed form.
+
+    Dict packs carry no layout tag, so the plane dtype decides: uint8 planes
+    are bit-packed words (logical K = Kw*8 — a dict cannot record byte
+    padding), anything else is the legacy dense one-byte-per-bit layout.
+    """
     if isinstance(pack, PackedTensor):
         return pack
-    return PackedTensor(planes=pack["planes"], scale=pack["scale"],
-                        col_ids=pack.get("col_ids"))
+    planes = pack["planes"]
+    layout = (LAYOUT_BITPACK if planes.dtype == jnp.uint8 else LAYOUT_DENSE)
+    return PackedTensor(planes=planes, scale=pack["scale"],
+                        col_ids=pack.get("col_ids"), layout=layout)
+
+
+def to_dense(pt: PackedTensor) -> PackedTensor:
+    """Bit-exact conversion to the dense one-byte-per-bit layout."""
+    pt = as_packed_tensor(pt)
+    if pt.layout == LAYOUT_DENSE:
+        return pt
+    from repro.kernels.ref import unpack_plane_words
+    unpack = unpack_plane_words
+    planes = pt.planes
+    if planes.ndim == 4:                       # stacked [L, WB, Kw, N]
+        unpack = jax.vmap(lambda w: unpack_plane_words(w, pt.k))
+        dense = unpack(planes)
+    else:
+        dense = unpack(planes, pt.k)
+    return pt.replace(planes=dense, layout=LAYOUT_DENSE, logical_k=None)
+
+
+def to_bitpacked(pt: PackedTensor) -> PackedTensor:
+    """Bit-exact conversion of a dense pack to bit-packed words."""
+    pt = as_packed_tensor(pt)
+    if pt.layout == LAYOUT_BITPACK:
+        return pt
+    from repro.kernels.ref import pack_plane_words
+    planes = pt.planes
+    k = planes.shape[-2]
+    if planes.ndim == 4:
+        words = jax.vmap(pack_plane_words)(planes)
+    else:
+        words = pack_plane_words(planes)
+    return pt.replace(planes=words, layout=LAYOUT_BITPACK, logical_k=k)
 
 
 def is_pack(value) -> bool:
@@ -96,8 +211,10 @@ def is_pack(value) -> bool:
 
 jax.tree_util.register_pytree_node(
     PackedTensor,
-    lambda pt: ((pt.planes, pt.scale, pt.col_ids), pt.backend),
-    lambda aux, ch: PackedTensor(*ch, backend=aux))
+    lambda pt: ((pt.planes, pt.scale, pt.col_ids),
+                (pt.backend, pt.layout, pt.logical_k, pt.window_block)),
+    lambda aux, ch: PackedTensor(*ch, backend=aux[0], layout=aux[1],
+                                 logical_k=aux[2], window_block=aux[3]))
 
 
 @dataclasses.dataclass(eq=False)
@@ -174,15 +291,19 @@ def packed_bytes(params) -> dict:
     """Storage accounting: bf16 bytes vs packed bit-plane bytes.
 
     Accepts a ``PackedModel`` or a raw serving tree in either pack format.
+    Reports both the bytes actually stored (``stored_bytes`` — with the
+    bit-packed layout this is the real array footprint, planes at one *bit*
+    per weight bit) and what the same packs would occupy in the dense
+    one-byte-per-bit layout (``dense_equiv_bytes``).  ``pud_bytes`` is kept
+    as a legacy alias of ``stored_bytes``.
     """
     if isinstance(params, PackedModel):
         params = params.params
-    stats = {"bf16_bytes": 0, "pud_bytes": 0}
+    stats = {"bf16_bytes": 0, "stored_bytes": 0, "dense_equiv_bytes": 0}
 
     def count(pack):
-        stats["pud_bytes"] += pack.planes.size // 8 + pack.scale.size * 4
-        if pack.col_ids is not None:
-            stats["pud_bytes"] += pack.col_ids.size * 4
+        stats["stored_bytes"] += pack.stored_bytes
+        stats["dense_equiv_bytes"] += pack.dense_equiv_bytes
 
     def walk(tree):
         for k, v in tree.items():
@@ -193,4 +314,74 @@ def packed_bytes(params) -> dict:
             elif isinstance(v, jax.Array):
                 stats["bf16_bytes"] += v.size * v.dtype.itemsize
     walk(params)
+    stats["pud_bytes"] = stats["stored_bytes"]
     return stats
+
+
+# ---------------------------------------------------------------------------
+# Serialization: one .npz per PackedModel (versioned, no pickle)
+# ---------------------------------------------------------------------------
+
+
+def save_packed_npz(path, pm: PackedModel) -> None:
+    """Write a ``PackedModel``'s packs to ``path`` as a single .npz.
+
+    Only the packed projections serialize (bf16 leaves belong to the
+    checkpointing layer); format ``pud-pack-v2`` records layout metadata
+    per tensor.
+    """
+    tensors = pm.tensors
+    meta = {
+        "format": PACK_FORMAT,
+        "names": list(tensors),
+        "weight_bits": pm.weight_bits,
+        "placed": pm.placed,
+        "entries": {
+            name: {"layout": pt.layout, "logical_k": pt.logical_k,
+                   "window_block": pt.window_block, "backend": pt.backend}
+            for name, pt in tensors.items()
+        },
+    }
+    arrays = {"meta": np.array(json.dumps(meta))}
+    for i, (name, pt) in enumerate(tensors.items()):
+        arrays[f"t{i}_planes"] = np.asarray(pt.planes)
+        arrays[f"t{i}_scale"] = np.asarray(pt.scale)
+        if pt.col_ids is not None:
+            arrays[f"t{i}_col_ids"] = np.asarray(pt.col_ids, np.int32)
+    with open(path, "wb") as f:
+        np.savez(f, **arrays)
+
+
+def load_packed_npz(path) -> dict[str, PackedTensor] | None:
+    """Read the packs back as {name: PackedTensor}; None on corruption.
+
+    Version fallback: a ``pud-pack-v1`` archive (the dense-layout
+    convention — plane arrays only, no per-entry layout metadata) still
+    loads, each pack coerced through ``as_packed_tensor``'s dtype
+    inference; unknown format tags read as misses.
+    """
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            meta = json.loads(str(z["meta"]))
+            if meta.get("format") not in (PACK_FORMAT, "pud-pack-v1"):
+                return None
+            entries = meta.get("entries", {})
+            out = {}
+            for i, name in enumerate(meta["names"]):
+                e = entries.get(name, {})
+                pack = {"planes": jnp.asarray(z[f"t{i}_planes"]),
+                        "scale": jnp.asarray(z[f"t{i}_scale"])}
+                if f"t{i}_col_ids" in z:
+                    pack["col_ids"] = jnp.asarray(z[f"t{i}_col_ids"])
+                pt = as_packed_tensor(pack)
+                if e:                       # v2: explicit layout metadata
+                    pt = pt.replace(
+                        layout=e.get("layout", pt.layout),
+                        logical_k=e.get("logical_k"),
+                        window_block=e.get("window_block"),
+                        backend=e.get("backend"))
+                out[name] = pt
+            return out
+    except (OSError, ValueError, KeyError, EOFError, json.JSONDecodeError,
+            zipfile.BadZipFile):
+        return None

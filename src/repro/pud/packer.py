@@ -17,14 +17,18 @@ head split is a view — the GeMV columns are the same either way).  MoE
 routed expert banks keep the bf16 path (the expert dim adds a leading axis
 the serving kernel does not tile yet).
 
-Stacked (scanned) layers pack per-slice: [L, K, N] -> [L, WB, K, N]; under
-the layer ``lax.scan`` each iteration sees one [WB, K, N] pack.
+Packs come out in the *bit-packed* storage layout by default (eight K rows
+per uint8 word — ``pud/packed.py`` ``LAYOUT_BITPACK``), so the HBM bytes a
+pack occupies finally match the bits the PUD format stores.  Stacked
+(scanned) layers pack per-slice: [L, K, N] -> [L, WB, ceil(K/8), N]; under
+the layer ``lax.scan`` each iteration sees one [WB, ceil(K/8), N] pack.
 
 With a ``Placement`` (repro/pud/placement.py) the packer emits
-*physically-permuted* planes: each slice's bit-planes are scattered into the
-physical column window its logical columns were placed on, plus the
-``col_ids`` gather map the placed kernel consumes.  Faulty physical columns
-inside the window hold zeros and are never addressed.
+*physically-permuted* planes in the block-aligned window layout: each
+slice's bit-planes are scattered into the per-N-block physical windows its
+logical columns were placed on, then bit-packed, plus the ``col_ids``
+gather map the placed kernel consumes.  Faulty physical columns inside a
+window hold zeros and are never addressed.
 """
 from __future__ import annotations
 
@@ -35,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .gemv import ATTN_PACKABLE, FFN_PACKABLE, PUDGemvConfig, pack_linear
-from .packed import PackedModel, PackedTensor
+from .packed import LAYOUT_BITPACK, PackedModel, PackedTensor
 from .packed import packed_bytes  # noqa: F401  (legacy import location)
 from .placement import Placement, PlacementRequest, TensorPlacement
 
@@ -89,34 +93,47 @@ def _pack_stacked(w: jax.Array, n_bits: int,
     packs = [pack_linear(w[i], n_bits) for i in range(w.shape[0])]
     return PackedTensor(planes=jnp.stack([p.planes for p in packs]),
                         scale=jnp.stack([p.scale for p in packs]),
-                        backend=backend)
+                        backend=backend, layout=packs[0].layout,
+                        logical_k=packs[0].logical_k)
 
 
 def _pack_placed(w: jax.Array, n_bits: int, tp: TensorPlacement,
                  backend: str | None) -> PackedTensor:
     """Physically-placed pack: planes scattered into the column window.
 
-    Returns a ``PackedTensor`` with planes [L?, WB, K, P], scale [L?, N]
-    and col_ids [L?, N], where P = tp.region_size.
+    The window is the *block-aligned* layout (repro/pud/placement.py):
+    logical N-block j's columns sit inside window slice
+    ``[j*tp.window_block, (j+1)*tp.window_block)``, so the placed kernels
+    block the window axis per N-tile.  The scatter happens on dense planes
+    (the window axis is the column axis, untouched by bit-packing), then
+    the whole window bit-packs along K.  Returns a ``PackedTensor`` with
+    planes [L?, WB, ceil(K/8), W] uint8 words, scale [L?, N], col_ids
+    [L?, N] (absolute window positions) and ``window_block`` aux, where
+    W = tp.region_size.
     """
+    from repro.kernels.ref import pack_plane_words
+
     local = np.asarray(tp.local_cols)
 
     def one(w2, loc):
-        pk = pack_linear(w2, n_bits)
+        pk = pack_linear(w2, n_bits, bitpack=False)
         planes = jnp.zeros(pk.planes.shape[:2] + (tp.region_size,),
                            jnp.int8)
         idx = jnp.asarray(loc, jnp.int32)
         planes = planes.at[:, :, idx].set(pk.planes)
-        return PackedTensor(planes=planes, scale=pk.scale, col_ids=idx)
+        return PackedTensor(planes=pack_plane_words(planes), scale=pk.scale,
+                            col_ids=idx)
 
+    kw = dict(backend=backend, layout=LAYOUT_BITPACK,
+              logical_k=w.shape[-2], window_block=tp.window_block)
     if w.ndim == 2:
-        return dataclasses.replace(one(w, local), backend=backend)
+        return dataclasses.replace(one(w, local), **kw)
     packs = [one(w[i], local[i]) for i in range(w.shape[0])]
     return PackedTensor(
         planes=jnp.stack([p.planes for p in packs]),
         scale=jnp.stack([p.scale for p in packs]),
         col_ids=jnp.stack([p.col_ids for p in packs]),
-        backend=backend)
+        **kw)
 
 
 def _pack_any(w, n_bits: int, name: str, placement: Placement | None,

@@ -16,6 +16,23 @@ n — its WB bit-planes live in that column's rows — so a tensor's demand is N
 columns per stacked slice.  Physical columns are numbered subarray-major:
 ``global_col = subarray_index * n_cols + col``.
 
+**Block-aligned windows** (the format the placed kernels block over): a
+tensor's N logical columns split into blocks of ``block_cols`` (the largest
+divisor of N <= ``PLACE_BLOCK``, mirroring the kernel's N-tile choice).
+Each block's columns are consecutive usable physical columns; the physical
+span they cover — including the faulty columns interleaved between them —
+becomes one *window block*, and every window block pads to the common
+per-tensor stride ``window_block`` (= the max span).  The materialized
+window is the concatenation of these blocks, so logical block j's columns
+all live inside window slice ``[j*window_block, (j+1)*window_block)`` and
+the placed kernel streams exactly one window block per N-tile instead of
+holding the whole physical region in VMEM.  ``local_cols`` are absolute
+window positions (block base + in-block offset), which is what the packer
+scatters to and what ``col_ids`` store; faulty columns inside a block's
+span are materialized (holding zero planes, marked in ``faulty``) and
+never addressed, while pad positions beyond a span back no physical column
+at all.
+
 Fault model (``inject_read_faults``): an error-prone column is one whose
 sense-amp threshold offset exceeds the SiMRA margin (pud/physics), so its
 reads saturate to a *stuck* value regardless of the stored charge —
@@ -35,7 +52,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-PLACEMENT_FORMAT = "pud-placement-v1"
+from repro.kernels.bitplane_gemv import N_BLOCK, _largest_divisor
+
+PLACEMENT_FORMAT = "pud-placement-v2"
+_PLACEMENT_FORMAT_V1 = "pud-placement-v1"
+
+# Logical columns per window block: the kernels' N tile, so one window
+# block feeds exactly one (full-size) output tile by construction.
+PLACE_BLOCK = N_BLOCK
 
 
 class PlacementError(RuntimeError):
@@ -63,30 +87,46 @@ def requests_fingerprint(requests: list[PlacementRequest]) -> str:
 
 @dataclasses.dataclass
 class TensorPlacement:
-    """Column index maps of one placed tensor.
+    """Column index maps of one placed tensor (block-aligned windows).
 
-    Shapes: unstacked tensors use ``[N]`` maps; stacked use ``[L, N]`` with a
-    per-slice region.  ``phys_cols`` are global physical column ids;
-    ``region_start``/``region_size`` define the physical window the packer
-    materializes per slice (all slices padded to one common ``region_size``
-    so stacked planes keep a uniform shape for ``lax.scan``);
-    ``faulty``/``stuck`` describe the error-prone columns inside each window
-    for the fault-injection model.
+    Shapes: unstacked tensors use ``[N]`` maps; stacked use ``[L, N]`` with
+    per-slice windows (all slices share ``block_cols``/``window_block`` so
+    stacked planes keep a uniform shape for ``lax.scan``).  ``phys_cols``
+    are global physical column ids; ``block_starts`` give the physical
+    column each window block originates at; ``faulty``/``stuck`` describe
+    the error-prone columns inside the materialized window (length
+    ``region_size = n_blocks * window_block``) for the fault-injection
+    model.
     """
 
     phys_cols: np.ndarray      # [L?, N] int32 global physical column ids
-    region_start: np.ndarray   # [L?] int32 window start per slice
-    region_size: int           # common padded window span P
-    faulty: np.ndarray         # [L?, P] bool — error-prone cols in window
-    stuck: np.ndarray          # [L?, P] int8 — read value of faulty cols
+    block_cols: int            # logical columns per block (B)
+    window_block: int          # window stride per block (P_blk >= max span)
+    block_starts: np.ndarray   # [L?, NB] int32 physical origin per block
+    faulty: np.ndarray         # [L?, W] bool — error-prone cols in window
+    stuck: np.ndarray          # [L?, W] int8 — read value of faulty cols
+
+    @property
+    def n_blocks(self) -> int:
+        return self.block_starts.shape[-1]
+
+    @property
+    def region_size(self) -> int:
+        """Materialized window length W = n_blocks * window_block."""
+        return self.n_blocks * self.window_block
 
     @property
     def local_cols(self) -> np.ndarray:
-        """[L?, N] column ids relative to the slice window (kernel gather)."""
+        """[L?, N] absolute window positions (what ``col_ids`` store):
+        block base + offset of the physical column inside its block span."""
+        n = self.phys_cols.shape[-1]
+        blk = np.arange(n) // self.block_cols                  # [N]
+        base = (blk * self.window_block).astype(np.int64)      # [N]
         if self.phys_cols.ndim == 1:
-            return (self.phys_cols - self.region_start).astype(np.int32)
-        return (self.phys_cols
-                - self.region_start[:, None]).astype(np.int32)
+            starts = self.block_starts[blk]
+        else:
+            starts = self.block_starts[:, blk]
+        return (base + self.phys_cols - starts).astype(np.int32)
 
 
 @dataclasses.dataclass
@@ -156,7 +196,8 @@ def _register(cls, array_fields, aux_fields):
 
 
 _register(TensorPlacement,
-          ("phys_cols", "region_start", "faulty", "stuck"), ("region_size",))
+          ("phys_cols", "block_starts", "faulty", "stuck"),
+          ("block_cols", "window_block"))
 _register(Placement,
           ("entries", "used_per_subarray", "usable_per_subarray"),
           ("grid_shape", "n_cols_per_subarray", "avoid_faulty"))
@@ -180,6 +221,38 @@ def _stuck_values(global_cols: np.ndarray,
         flat = np.asarray(sense_offsets).reshape(-1)
         return (flat[global_cols] < 0).astype(np.int8)
     return (global_cols % 2).astype(np.int8)
+
+
+def _slice_blocks(cols: np.ndarray, block_cols: int):
+    """Split one slice's columns into blocks; returns (starts, spans)."""
+    nb = cols.size // block_cols
+    chunks = cols.reshape(nb, block_cols)
+    starts = chunks[:, 0].astype(np.int64)
+    spans = (chunks[:, -1] - chunks[:, 0] + 1).astype(np.int64)
+    return starts, spans
+
+
+def _window_masks(starts: np.ndarray, spans: np.ndarray, window_block: int,
+                  flat_faulty: np.ndarray,
+                  sense_offsets) -> tuple[np.ndarray, np.ndarray]:
+    """Faulty/stuck masks of one slice's materialized window.
+
+    Window position j*window_block + t backs physical column
+    ``starts[j] + t`` when t < spans[j]; positions past a block's span are
+    pure padding (no physical column: never faulty, zero stuck value).
+    """
+    nb = starts.size
+    n_total = flat_faulty.size
+    faulty = np.zeros(nb * window_block, bool)
+    stuck = np.zeros(nb * window_block, np.int8)
+    for j in range(nb):
+        t = np.arange(min(int(spans[j]), window_block), dtype=np.int64)
+        phys = starts[j] + t
+        t = t[phys < n_total]
+        phys = phys[phys < n_total]
+        faulty[j * window_block + t] = flat_faulty[phys]
+        stuck[j * window_block + t] = _stuck_values(phys, sense_offsets)
+    return faulty, stuck
 
 
 def plan_placement(
@@ -218,37 +291,35 @@ def plan_placement(
     cursor = 0
     for req in requests:
         n_slices = max(1, req.n_slices)
-        slice_cols, starts, spans = [], [], []
+        block_cols = _largest_divisor(req.n_cols, PLACE_BLOCK)
+        slice_cols, slice_starts, slice_spans = [], [], []
         for _ in range(n_slices):
             cols = usable_ids[cursor:cursor + req.n_cols]
             cursor += req.n_cols
+            starts, spans = _slice_blocks(cols, block_cols)
             slice_cols.append(cols.astype(np.int32))
-            starts.append(int(cols[0]))
-            spans.append(int(cols[-1]) - int(cols[0]) + 1)
-        region = max(spans)
+            slice_starts.append(starts)
+            slice_spans.append(spans)
+        window_block = int(max(s.max() for s in slice_spans))
 
         faulty, stuck = [], []
-        for cols, start in zip(slice_cols, starts):
-            window = np.arange(start, start + region, dtype=np.int64)
-            in_dev = window < g * n_cols
-            f = np.zeros(region, bool)
-            f[in_dev] = flat_faulty[window[in_dev]]
-            s = np.zeros(region, np.int8)
-            s[in_dev] = _stuck_values(window[in_dev], sense_offsets)
+        for starts, spans in zip(slice_starts, slice_spans):
+            f, s = _window_masks(starts, spans, window_block, flat_faulty,
+                                 sense_offsets)
             faulty.append(f)
             stuck.append(s)
 
         if req.n_slices:
             tp = TensorPlacement(
                 phys_cols=np.stack(slice_cols),
-                region_start=np.asarray(starts, np.int32),
-                region_size=region,
+                block_cols=block_cols, window_block=window_block,
+                block_starts=np.stack(slice_starts).astype(np.int32),
                 faulty=np.stack(faulty), stuck=np.stack(stuck))
         else:
             tp = TensorPlacement(
                 phys_cols=slice_cols[0],
-                region_start=np.int32(starts[0]),
-                region_size=region,
+                block_cols=block_cols, window_block=window_block,
+                block_starts=slice_starts[0].astype(np.int32),
                 faulty=faulty[0], stuck=stuck[0])
         entries[req.name] = tp
 
@@ -281,12 +352,18 @@ def plan_for_grid(masks, requests, grid_shape, **kw) -> Placement:
 def corrupt_planes(planes: jax.Array, tp: TensorPlacement) -> jax.Array:
     """Replace every bit stored on an error-prone column with its stuck read.
 
-    planes: [WB, K, P] (or [L, WB, K, P]); the trailing axis is the physical
-    window of ``tp``.  Column-wide corruption — every bit-plane and row of a
-    faulty column reads the same stuck value.
+    planes: [WB, K(/8), W] (or [L, WB, K(/8), W]); the trailing axis is the
+    materialized window of ``tp``.  Column-wide corruption — every bit-plane
+    and row of a faulty column reads the same stuck value.  Works on both
+    plane layouts: in the bit-packed one a stuck-1 column reads 0xFF words
+    (all eight K rows of every plane bit saturate high), stuck-0 reads 0x00.
     """
     faulty = jnp.asarray(tp.faulty)[..., None, None, :]
-    stuck = jnp.asarray(tp.stuck)[..., None, None, :].astype(planes.dtype)
+    stuck = jnp.asarray(tp.stuck)[..., None, None, :]
+    if planes.dtype == jnp.uint8:      # bit-packed words: saturate the byte
+        stuck = stuck.astype(jnp.uint8) * jnp.uint8(0xFF)
+    else:
+        stuck = stuck.astype(planes.dtype)
     return jnp.where(faulty, stuck, planes)
 
 
@@ -335,8 +412,10 @@ def save_placement_npz(path, placement: Placement) -> None:
     meta = {
         "format": PLACEMENT_FORMAT,
         "names": list(placement.entries),
-        "region_sizes": [placement.entries[n].region_size
-                         for n in placement.entries],
+        "block_cols": [placement.entries[n].block_cols
+                       for n in placement.entries],
+        "window_blocks": [placement.entries[n].window_block
+                          for n in placement.entries],
         "grid_shape": list(placement.grid_shape),
         "n_cols_per_subarray": placement.n_cols_per_subarray,
         "avoid_faulty": placement.avoid_faulty,
@@ -349,28 +428,94 @@ def save_placement_npz(path, placement: Placement) -> None:
     for i, name in enumerate(placement.entries):
         tp = placement.entries[name]
         arrays[f"e{i}_phys"] = np.asarray(tp.phys_cols, np.int32)
-        arrays[f"e{i}_start"] = np.asarray(tp.region_start, np.int32)
+        arrays[f"e{i}_start"] = np.asarray(tp.block_starts, np.int32)
         arrays[f"e{i}_faulty"] = np.asarray(tp.faulty, bool)
         arrays[f"e{i}_stuck"] = np.asarray(tp.stuck, np.int8)
     with open(path, "wb") as f:
         np.savez(f, **arrays)
 
 
+def _upgrade_v1_entry(phys: np.ndarray, region_start: np.ndarray,
+                      region_size: int, faulty_v1: np.ndarray,
+                      stuck_v1: np.ndarray) -> TensorPlacement:
+    """Rebuild the block-aligned window from a PR-2/PR-3 era (v1) entry.
+
+    A v1 entry materialized one physical span per slice: window position p
+    backed physical column ``region_start + p``.  The block structure is
+    fully derivable — block origins come from ``phys_cols`` (the same
+    ``PLACE_BLOCK`` divisor rule the allocator uses), and each window
+    block's faulty/stuck values are re-read out of the v1 span at offset
+    ``block_start - region_start``.
+    """
+    n = phys.shape[-1]
+    block_cols = _largest_divisor(n, PLACE_BLOCK)
+    stacked = phys.ndim == 2
+    slices = phys if stacked else phys[None]
+    r_starts = (np.asarray(region_start).reshape(-1) if stacked
+                else np.asarray([region_start]))
+    f_v1 = faulty_v1 if stacked else faulty_v1[None]
+    s_v1 = stuck_v1 if stacked else stuck_v1[None]
+
+    all_starts, all_spans = [], []
+    for cols in slices:
+        starts, spans = _slice_blocks(cols.astype(np.int64), block_cols)
+        all_starts.append(starts)
+        all_spans.append(spans)
+    window_block = int(max(s.max() for s in all_spans))
+
+    faulty, stuck = [], []
+    for starts, spans, r0, f1, s1 in zip(all_starts, all_spans, r_starts,
+                                         f_v1, s_v1):
+        nb = starts.size
+        f = np.zeros(nb * window_block, bool)
+        s = np.zeros(nb * window_block, np.int8)
+        for j in range(nb):
+            t = np.arange(min(int(spans[j]), window_block), dtype=np.int64)
+            src = starts[j] - int(r0) + t
+            t = t[(src >= 0) & (src < region_size)]
+            src = src[(src >= 0) & (src < region_size)]
+            f[j * window_block + t] = f1[src]
+            s[j * window_block + t] = s1[src]
+        faulty.append(f)
+        stuck.append(s)
+
+    return TensorPlacement(
+        phys_cols=phys,
+        block_cols=block_cols, window_block=window_block,
+        block_starts=(np.stack(all_starts).astype(np.int32) if stacked
+                      else all_starts[0].astype(np.int32)),
+        faulty=(np.stack(faulty) if stacked else faulty[0]),
+        stuck=(np.stack(stuck) if stacked else stuck[0]))
+
+
 def load_placement_npz(path) -> Placement | None:
-    """Read a Placement back; None on any corruption or format mismatch."""
+    """Read a Placement back; None on any corruption or format mismatch.
+
+    v1 archives (PR-2/PR-3 artifacts: one physical span per slice, no block
+    structure) load through ``_upgrade_v1_entry`` — old caches keep their
+    placements instead of re-planning.
+    """
     try:
         with np.load(path, allow_pickle=False) as z:
             meta = json.loads(str(z["meta"]))
-            if meta.get("format") != PLACEMENT_FORMAT:
+            fmt = meta.get("format")
+            if fmt not in (PLACEMENT_FORMAT, _PLACEMENT_FORMAT_V1):
                 return None
             entries = {}
             for i, name in enumerate(meta["names"]):
-                entries[name] = TensorPlacement(
-                    phys_cols=z[f"e{i}_phys"],
-                    region_start=z[f"e{i}_start"],
-                    region_size=int(meta["region_sizes"][i]),
-                    faulty=z[f"e{i}_faulty"],
-                    stuck=z[f"e{i}_stuck"])
+                if fmt == _PLACEMENT_FORMAT_V1:
+                    entries[name] = _upgrade_v1_entry(
+                        z[f"e{i}_phys"], z[f"e{i}_start"],
+                        int(meta["region_sizes"][i]),
+                        z[f"e{i}_faulty"], z[f"e{i}_stuck"])
+                else:
+                    entries[name] = TensorPlacement(
+                        phys_cols=z[f"e{i}_phys"],
+                        block_cols=int(meta["block_cols"][i]),
+                        window_block=int(meta["window_blocks"][i]),
+                        block_starts=z[f"e{i}_start"],
+                        faulty=z[f"e{i}_faulty"],
+                        stuck=z[f"e{i}_stuck"])
             return Placement(
                 entries=entries,
                 grid_shape=tuple(meta["grid_shape"]),

@@ -398,6 +398,15 @@ class PUDSession:
             if rep["placement_model"] is not None:
                 rep["placed_tok_s"] = \
                     rep["placement_model"].tokens_per_second(flops)
+            # Weight-traffic terms of the last pack: the staging-bandwidth
+            # ceiling and the rate under both (compute + traffic) limits.
+            if self._packed is not None and isinstance(tune, FleetPerfModel):
+                stored = packed_bytes(self._packed)["stored_bytes"]
+                rep["weight_bytes_per_token"] = stored
+                rep["staging_bound_tok_s"] = \
+                    tune.staging_bound_tokens_per_second(stored)
+                rep["traffic_aware_tok_s"] = \
+                    tune.traffic_aware_tokens_per_second(flops, stored)
         if batch_size is not None:
             rep["batch_size"] = int(batch_size)
             rep["optimal_batch"] = self.optimal_batch_size()
@@ -411,9 +420,11 @@ class PUDSession:
 
     def decode_extras(self) -> dict:
         """Decode-path diagnostics of the last ``pack``: layout, byte
-        accounting, and the packing report."""
+        accounting (stored vs dense-equivalent — the bit-packing win), the
+        per-token weight-traffic terms, and the packing report."""
         if self._packed is None:
             raise RuntimeError("no packed model: call session.pack() first")
+        from repro.pud.gemv import weight_traffic
         return {
             "backend": self.backend,
             "layout": ("placed physical" if self._placed_layout
@@ -422,6 +433,7 @@ class PUDSession:
             "n_packed": len(self._packed.packed_names),
             "report": self._packed.report,
             **packed_bytes(self._packed),
+            **weight_traffic(self._packed),
         }
 
     @property

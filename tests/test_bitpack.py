@@ -1,0 +1,277 @@
+"""Bit-packed plane words: round-trip properties (both candidate word
+axes), legacy-pack coercion, layout conversions, kernel bit-exactness on
+odd (non-tile-multiple) projection shapes, and pack serialization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.backends import backend_names, get_backend
+from repro.kernels.bitplane_gemm import bitplane_gemm
+from repro.kernels.bitplane_gemv import _largest_divisor, bitplane_gemv
+from repro.pud.gemv import PUDGemvConfig, pack_linear, pud_linear
+from repro.pud.packed import (LAYOUT_BITPACK, LAYOUT_DENSE, PackedTensor,
+                              as_packed_tensor, load_packed_npz,
+                              packed_bytes, save_packed_npz, to_bitpacked,
+                              to_dense)
+from repro.pud.packer import pack_model
+
+
+def _planes(seed, wb, k, n):
+    w = jax.random.randint(jax.random.key(seed), (k, n),
+                           -(1 << (wb - 1)), 1 << (wb - 1), jnp.int32)
+    return w, ref.pack_bitplanes(w, wb)
+
+
+# ---------------------------------------------------------------------------
+# Word round-trip properties — both candidate axes
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), wb=st.integers(2, 8),
+       k=st.integers(1, 70), n=st.integers(1, 40))
+def test_k_axis_words_roundtrip(seed, wb, k, n):
+    """The shipped format: [WB, K, N] -> [WB, ceil(K/8), N] uint8 -> back,
+    for every K including non-byte-multiples (zero-bit padding)."""
+    _, planes = _planes(seed, wb, k, n)
+    words = ref.pack_plane_words(planes)
+    assert words.dtype == jnp.uint8
+    assert words.shape == (wb, -(-k // 8), n)
+    np.testing.assert_array_equal(
+        np.asarray(ref.unpack_plane_words(words, k)), np.asarray(planes))
+    # pad rows beyond K are zero bits
+    full = np.asarray(ref.unpack_plane_words(words))
+    assert not full[:, k:, :].any()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), wb=st.integers(2, 8),
+       k=st.integers(1, 20), n=st.integers(1, 70))
+def test_n_axis_words_roundtrip(seed, wb, k, n):
+    """The rejected candidate axis ([WB, K, ceil(N/32)] uint32) must also
+    round-trip exactly — the choice between the two is about TPU lane
+    layout and placement addressability, not information content."""
+    _, planes = _planes(seed, wb, k, n)
+    words = ref.pack_plane_words_n(planes)
+    assert words.dtype == jnp.uint32
+    assert words.shape == (wb, k, -(-n // 32))
+    np.testing.assert_array_equal(
+        np.asarray(ref.unpack_plane_words_n(words, n)), np.asarray(planes))
+
+
+def test_word_axes_store_identical_bit_counts():
+    _, planes = _planes(3, 4, 64, 64)
+    k_words = ref.pack_plane_words(planes)
+    n_words = ref.pack_plane_words_n(planes)
+    assert k_words.size * 1 == n_words.size * 4 == planes.size // 8 * 1
+
+
+# ---------------------------------------------------------------------------
+# Layout conversions + legacy coercion
+# ---------------------------------------------------------------------------
+
+def test_to_bitpacked_to_dense_roundtrip():
+    w = 0.05 * jax.random.normal(jax.random.key(0), (60, 48), jnp.float32)
+    pt = pack_linear(w, 4)
+    assert pt.bitpacked and pt.layout == LAYOUT_BITPACK
+    assert pt.k == 60 and pt.planes.shape == (4, 8, 48)
+    dense = to_dense(pt)
+    assert dense.layout == LAYOUT_DENSE
+    assert dense.planes.shape == (4, 60, 48)
+    back = to_bitpacked(dense)
+    np.testing.assert_array_equal(np.asarray(back.planes),
+                                  np.asarray(pt.planes))
+    # stacked conversion
+    ws = jnp.stack([w, 2 * w])
+    pm = pack_model({"m": {"wi": ws}}, PUDGemvConfig(packable=("wi",)),
+                    include_unembed=False)
+    st_pt = pm.tensor("m/wi")
+    assert st_pt.planes.shape == (2, 4, 8, 48)
+    st_dense = to_dense(st_pt)
+    assert st_dense.planes.shape == (2, 4, 60, 48)
+    np.testing.assert_array_equal(
+        np.asarray(to_bitpacked(st_dense).planes), np.asarray(st_pt.planes))
+
+
+def test_legacy_dict_coercion_infers_layout_from_dtype():
+    _, planes = _planes(1, 4, 64, 32)
+    words = ref.pack_plane_words(planes)
+    scale = jnp.ones((32,), jnp.float32)
+    dense_pt = as_packed_tensor({"planes": planes, "scale": scale})
+    assert dense_pt.layout == LAYOUT_DENSE and dense_pt.k == 64
+    word_pt = as_packed_tensor({"planes": words, "scale": scale})
+    assert word_pt.layout == LAYOUT_BITPACK and word_pt.k == 64
+    # both dispatch through pud_linear to identical results
+    x = jax.random.normal(jax.random.key(2), (3, 64), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(pud_linear(x, dense_pt)),
+                                  np.asarray(pud_linear(x, word_pt)))
+
+
+def test_legacy_three_arg_custom_backend_serves_dense_packs():
+    """The documented extension point: a custom backend registered with the
+    pre-bitpack 3-arg entry signature still serves legacy dense packs —
+    layout kwargs only travel when a pack actually carries layout info."""
+    import repro.kernels.backends as bk
+    be = bk.Backend(
+        name="legacy3arg",
+        gemv=lambda x, planes, mode="folded": ref.bitplane_gemv_ref(
+            x, planes),
+        gemv_placed=lambda x, planes, col_ids, mode="folded":
+            ref.bitplane_gemv_placed_ref(x, planes, col_ids))
+    bk.register_backend(be)
+    try:
+        w = 0.05 * jax.random.normal(jax.random.key(8), (64, 32), jnp.float32)
+        x = jax.random.normal(jax.random.key(9), (2, 64), jnp.float32)
+        dense = pack_linear(w, 4, bitpack=False)
+        np.testing.assert_array_equal(
+            np.asarray(pud_linear(x, dense, backend="legacy3arg")),
+            np.asarray(pud_linear(x, dense, backend="reference")))
+        # dense *placed* pack (no window_block) dispatches legacy too
+        idx = jax.random.permutation(jax.random.key(10), 40)[:32]
+        phys = jnp.zeros((4, 64, 40), jnp.int8).at[:, :, idx].set(
+            dense.planes)
+        placed = {"planes": phys, "scale": dense.scale,
+                  "col_ids": idx.astype(jnp.int32)}
+        np.testing.assert_array_equal(
+            np.asarray(pud_linear(x, placed, backend="legacy3arg")),
+            np.asarray(pud_linear(x, dense, backend="reference")))
+        # bit-packed packs genuinely need the layout-aware signature
+        with pytest.raises(TypeError):
+            pud_linear(x, pack_linear(w, 4), backend="legacy3arg")
+    finally:
+        bk._REGISTRY.pop("legacy3arg", None)
+
+
+def test_dense_and_bitpacked_packs_bit_identical_all_backends():
+    w = 0.05 * jax.random.normal(jax.random.key(5), (128, 96), jnp.float32)
+    x = jax.random.normal(jax.random.key(6), (4, 128), jnp.float32)
+    packed = pack_linear(w, 4)
+    dense = pack_linear(w, 4, bitpack=False)
+    for be in backend_names():
+        np.testing.assert_array_equal(
+            np.asarray(pud_linear(x, packed, backend=be)),
+            np.asarray(pud_linear(x, dense, backend=be)),
+            err_msg=f"backend {be}: bitpacked != dense")
+
+
+# ---------------------------------------------------------------------------
+# Odd (non-tile-multiple) projection shapes — the largest-divisor fallback
+# ---------------------------------------------------------------------------
+
+def test_largest_divisor_block_selection():
+    assert _largest_divisor(256, 256) == 256
+    assert _largest_divisor(300, 256) == 150
+    assert _largest_divisor(257, 256) == 1       # prime: degenerate but legal
+    assert _largest_divisor(64, 256) == 64
+
+
+@pytest.mark.parametrize("b,k,n,wb", [(2, 300, 172, 4), (1, 257, 96, 4),
+                                      (3, 100, 257, 3)])
+@pytest.mark.parametrize("mode", ["planes", "folded"])
+def test_odd_shapes_do_not_crash_kernel_wrappers(b, k, n, wb, mode):
+    """Non-multiple-of-256 projections pick the largest divisor block
+    (mirroring the GEMM batch-pad path) instead of tripping an assert."""
+    kx, kw = jax.random.split(jax.random.key(k + n))
+    x = jax.random.randint(kx, (b, k), -127, 128, jnp.int32).astype(jnp.int8)
+    w = jax.random.randint(kw, (k, n), -(1 << (wb - 1)), 1 << (wb - 1),
+                           jnp.int32)
+    planes = ref.pack_bitplanes(w, wb)
+    want = np.asarray(x.astype(jnp.int32) @ w)
+    np.testing.assert_array_equal(
+        np.asarray(bitplane_gemv(x, planes, mode=mode)), want)
+    np.testing.assert_array_equal(
+        np.asarray(bitplane_gemm(x, planes, mode=mode)), want)
+    words = ref.pack_plane_words(planes)
+    np.testing.assert_array_equal(
+        np.asarray(bitplane_gemv(x, words, mode=mode, layout="bitpack8",
+                                 logical_k=k)), want)
+    np.testing.assert_array_equal(
+        np.asarray(bitplane_gemm(x, words, mode=mode, layout="bitpack8",
+                                 logical_k=k)), want)
+
+
+def test_odd_shaped_projection_through_pack_linear():
+    """An odd [300, 172] projection packs (K byte-pads to 304) and serves
+    bit-identically to its dense-layout pack."""
+    w = 0.05 * jax.random.normal(jax.random.key(9), (300, 172), jnp.float32)
+    x = jax.random.normal(jax.random.key(10), (2, 300), jnp.float32)
+    pt = pack_linear(w, 4)
+    assert pt.planes.shape == (4, 38, 172) and pt.k == 300
+    np.testing.assert_array_equal(
+        np.asarray(pud_linear(x, pt)),
+        np.asarray(pud_linear(x, pack_linear(w, 4, bitpack=False))))
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting + serialization
+# ---------------------------------------------------------------------------
+
+def test_packed_bytes_reports_actual_and_dense_equiv():
+    w = 0.05 * jax.random.normal(jax.random.key(1), (64, 128), jnp.float32)
+    pm = pack_model({"m": {"wi": w}}, PUDGemvConfig(packable=("wi",)),
+                    include_unembed=False)
+    stats = packed_bytes(pm)
+    pt = pm.tensor("m/wi")
+    # stored_bytes is the true array footprint (words + fp32 scale)
+    assert stats["stored_bytes"] == pt.planes.nbytes + pt.scale.nbytes
+    assert stats["stored_bytes"] == 4 * 8 * 128 + 128 * 4
+    # dense equivalent restores one byte per bit
+    assert stats["dense_equiv_bytes"] == 4 * 64 * 128 + 128 * 4
+    assert stats["pud_bytes"] == stats["stored_bytes"]   # legacy alias
+    # scale bytes follow the actual dtype, not a hardcoded 4
+    half = pm.tensor("m/wi").replace(scale=pt.scale.astype(jnp.float16))
+    assert half.stored_bytes == pt.planes.nbytes + 128 * 2
+
+
+def test_pack_npz_roundtrip_and_version_fallback(tmp_path):
+    w = 0.05 * jax.random.normal(jax.random.key(4), (64, 96), jnp.float32)
+    pm = pack_model({"m": {"wi": w}}, PUDGemvConfig(packable=("wi",)),
+                    include_unembed=False)
+    path = tmp_path / "packs.npz"
+    save_packed_npz(path, pm)
+    loaded = load_packed_npz(path)
+    assert sorted(loaded) == ["m/wi"]
+    pt = loaded["m/wi"]
+    assert pt.layout == LAYOUT_BITPACK and pt.k == 64
+    np.testing.assert_array_equal(np.asarray(pt.planes),
+                                  np.asarray(pm.tensor("m/wi").planes))
+    # v1-style archive (dense arrays, no entries metadata) still loads
+    import json
+    dense = to_dense(pm.tensor("m/wi"))
+    v1 = tmp_path / "packs_v1.npz"
+    np.savez(v1, meta=np.array(json.dumps(
+        {"format": "pud-pack-v1", "names": ["m/wi"]})),
+        t0_planes=np.asarray(dense.planes), t0_scale=np.asarray(dense.scale))
+    old = load_packed_npz(v1)
+    assert old["m/wi"].layout == LAYOUT_DENSE
+    x = jax.random.normal(jax.random.key(7), (2, 64), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(pud_linear(x, old["m/wi"])),
+                                  np.asarray(pud_linear(x, pt)))
+    # unknown format and torn payload read as misses
+    bad = tmp_path / "bad.npz"
+    np.savez(bad, meta=np.array(json.dumps({"format": "pud-pack-v99",
+                                            "names": []})))
+    assert load_packed_npz(bad) is None
+    torn = tmp_path / "torn.npz"
+    torn.write_bytes(path.read_bytes()[:40])
+    assert load_packed_npz(torn) is None
+
+
+def test_window_block_survives_pytree_and_scan():
+    pt = PackedTensor(planes=jnp.zeros((2, 4, 8, 32), jnp.uint8),
+                      scale=jnp.ones((2, 32), jnp.float32),
+                      col_ids=jnp.tile(jnp.arange(32, dtype=jnp.int32),
+                                       (2, 1)),
+                      layout=LAYOUT_BITPACK, logical_k=64, window_block=40)
+    mapped = jax.tree_util.tree_map(lambda x: x, pt)
+    assert (mapped.layout, mapped.logical_k, mapped.window_block) == \
+        (LAYOUT_BITPACK, 64, 40)
+
+    def body(carry, p):
+        assert p.window_block == 40 and p.layout == LAYOUT_BITPACK
+        return carry, p.planes.astype(jnp.int32).sum()
+
+    _, ys = jax.lax.scan(body, 0, pt)
+    assert ys.shape == (2,)

@@ -164,3 +164,120 @@ def test_cli_requires_exactly_one_action(tmp_path):
         cli(["--root", str(tmp_path)])
     with pytest.raises(SystemExit):
         cli(["--root", str(tmp_path), "--list", "--stats"])
+
+
+# ---------------------------------------------------------------------------
+# Placement serialization versions (the bit-packed refactor bumped the
+# placement format to v2 — block-aligned windows; PR-2/PR-3-era v1 archives
+# must keep loading through the upgrade path, unknown versions miss)
+# ---------------------------------------------------------------------------
+
+def _v1_placement_npz(path, plan, masks):
+    """Re-serialize a Placement in the PR-2 (pud-placement-v1) archive
+    layout: one physical span per slice, ``region_start``/``region_size``
+    instead of block structure."""
+    flat = np.asarray(masks, bool).reshape(-1)
+    arrays = {"used": np.asarray(plan.used_per_subarray, np.int32),
+              "usable": np.asarray(plan.usable_per_subarray, np.int32)}
+    region_sizes = []
+    for i, name in enumerate(plan.entries):
+        tp = plan.entries[name]
+        phys = np.atleast_2d(np.asarray(tp.phys_cols, np.int64))
+        starts = phys[:, 0]
+        region = int((phys[:, -1] - phys[:, 0] + 1).max())
+        region_sizes.append(region)
+        faulty = np.zeros((phys.shape[0], region), bool)
+        stuck = np.zeros((phys.shape[0], region), np.int8)
+        for s, r0 in enumerate(starts):
+            window = np.arange(r0, r0 + region)
+            in_dev = window < flat.size
+            faulty[s, in_dev] = flat[window[in_dev]]
+            stuck[s, in_dev] = (window[in_dev] % 2).astype(np.int8)
+        if np.asarray(tp.phys_cols).ndim == 1:
+            arrays[f"e{i}_phys"] = np.asarray(tp.phys_cols, np.int32)
+            arrays[f"e{i}_start"] = np.int32(starts[0])
+            arrays[f"e{i}_faulty"] = faulty[0]
+            arrays[f"e{i}_stuck"] = stuck[0]
+        else:
+            arrays[f"e{i}_phys"] = np.asarray(tp.phys_cols, np.int32)
+            arrays[f"e{i}_start"] = starts.astype(np.int32)
+            arrays[f"e{i}_faulty"] = faulty
+            arrays[f"e{i}_stuck"] = stuck
+    meta = {"format": "pud-placement-v1",
+            "names": list(plan.entries),
+            "region_sizes": region_sizes,
+            "grid_shape": list(plan.grid_shape),
+            "n_cols_per_subarray": plan.n_cols_per_subarray,
+            "avoid_faulty": plan.avoid_faulty}
+    arrays["meta"] = np.array(json.dumps(meta))
+    with open(path, "wb") as f:
+        np.savez(f, **arrays)
+
+
+def test_v1_placement_archive_upgrades_on_load(tmp_path):
+    """A PR-2/PR-3 placement .npz loads into the block-aligned v2 layout
+    and serves bit-identically to a freshly planned placement."""
+    import jax.numpy as jnp
+    from repro.pud.gemv import PUDGemvConfig, pud_linear
+    from repro.pud.packer import pack_model, packing_requests
+    from repro.pud.placement import (PlacementRequest, load_placement_npz,
+                                     plan_placement, save_placement_npz)
+    rng = np.random.default_rng(3)
+    masks = rng.random((4, 512)) < 0.25
+    params = {"m": {"wi": 0.05 * np.asarray(
+        rng.standard_normal((64, 96)), np.float32)},
+        "s": {"wi": 0.05 * np.asarray(
+            rng.standard_normal((2, 64, 96)), np.float32)}}
+    params = jax.tree_util.tree_map(jnp.asarray, params)
+    cfg = PUDGemvConfig(packable=("wi",))
+    reqs = packing_requests(params, cfg, include_unembed=False)
+    plan = plan_placement(masks, reqs)
+
+    v1 = tmp_path / "m0_v1.npz"
+    _v1_placement_npz(v1, plan, masks)
+    up = load_placement_npz(v1)
+    assert up is not None
+    for name in plan.entries:
+        tp, utp = plan.entries[name], up.entries[name]
+        np.testing.assert_array_equal(np.asarray(utp.phys_cols),
+                                      np.asarray(tp.phys_cols))
+        assert utp.block_cols == tp.block_cols
+        assert utp.window_block == tp.window_block
+        np.testing.assert_array_equal(utp.block_starts, tp.block_starts)
+        np.testing.assert_array_equal(utp.faulty, tp.faulty)
+    assert up.capacity_report() == plan.capacity_report()
+
+    # packs built from the upgraded placement serve bit-identically
+    placed = pack_model(params, cfg, include_unembed=False, placement=up)
+    logical = pack_model(params, cfg, include_unembed=False)
+    x = jnp.asarray(rng.standard_normal((3, 64)), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(pud_linear(x, placed.tensor("m/wi"))),
+        np.asarray(pud_linear(x, logical.tensor("m/wi"))))
+
+    # v2 round-trip and unknown-version miss
+    v2 = tmp_path / "m0_v2.npz"
+    save_placement_npz(v2, plan)
+    got = load_placement_npz(v2)
+    assert got is not None
+    assert got.entries["m/wi"].window_block == plan.entries["m/wi"].window_block
+    bad = tmp_path / "bad.npz"
+    meta = {"format": "pud-placement-v99", "names": []}
+    np.savez(bad, meta=np.array(json.dumps(meta)))
+    assert load_placement_npz(bad) is None
+
+
+def test_v1_placement_in_cache_reads_as_hit(warm, tmp_path):
+    """The cache's load_placement path accepts a v1 archive sitting in a
+    warm table's placements/ dir (old caches keep their plans)."""
+    from repro.pud.placement import PlacementRequest, plan_placement
+    cache, entry, (_, _, masks) = warm
+    plan = plan_placement(masks, [PlacementRequest("unembed/w", 48, 0)])
+    d = entry / "placements"
+    d.mkdir(exist_ok=True)
+    _v1_placement_npz(d / "legacy.npz", plan, masks)
+    got = cache.load_placement("dev", CFG, P, "legacy")
+    assert got is not None
+    np.testing.assert_array_equal(
+        np.asarray(got.entries["unembed/w"].phys_cols),
+        np.asarray(plan.entries["unembed/w"].phys_cols))

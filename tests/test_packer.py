@@ -88,10 +88,12 @@ def test_attention_heads_flatten_to_gemv_columns():
     assert reqs["layers_1/attn/wq"].n_cols == h * dh
     assert reqs["layers_1/attn/wq"].n_slices == n_layers
     packed, report = pack_for_serving(params, cfg, include_unembed=False)
+    # bit-packed words: the K (=D) axis folds 8 rows per byte
     assert packed["layers_0"]["attn"]["wq_pud"].planes.shape == \
-        (4, d, h * dh)
+        (4, d // 8, h * dh)
+    assert packed["layers_0"]["attn"]["wq_pud"].k == d
     assert packed["layers_1"]["attn"]["wq_pud"].planes.shape == \
-        (n_layers, 4, d, h * dh)
+        (n_layers, 4, d // 8, h * dh)
 
 
 def test_ffn_and_attention_packing_overlap_via_bare_key():
@@ -106,8 +108,9 @@ def test_ffn_and_attention_packing_overlap_via_bare_key():
     packed, report = pack_for_serving(params, cfg, include_unembed=False)
     assert sorted(report["packed"]) == ["layers_0/attn/wo",
                                        "layers_0/mixer/wo"]
-    assert packed["layers_0"]["attn"]["wo_pud"].planes.shape == (4, 32, 16)
-    assert packed["layers_0"]["mixer"]["wo_pud"].planes.shape == (4, 32, 16)
+    assert packed["layers_0"]["attn"]["wo_pud"].planes.shape == (4, 4, 16)
+    assert packed["layers_0"]["mixer"]["wo_pud"].planes.shape == (4, 4, 16)
+    assert packed["layers_0"]["attn"]["wo_pud"].k == 32
 
 
 def test_requests_match_report_names():

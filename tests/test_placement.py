@@ -105,19 +105,64 @@ def test_placed_kernel_bit_exact(b, k, n, wb, p, mode):
 
 
 def test_pud_linear_placed_matches_unplaced():
+    """Scattering *bit-words* along the window axis == packing the scattered
+    dense window: the column axis is untouched by K-axis bit-packing, so a
+    hand-built placed pack can be assembled directly from word packs."""
     masks = _masks(g=2, c=256, p=0.2, seed=7)
     kx, kw = jax.random.split(jax.random.key(5))
     x = jax.random.normal(kx, (3, 64), jnp.float32)
     w = 0.05 * jax.random.normal(kw, (64, 128), jnp.float32)
     p = plan_placement(masks, [PlacementRequest("t", 128, 0)])
     tp = p.entries["t"]
-    pk = pack_linear(w, 4)
+    pk = pack_linear(w, 4)                      # bit-packed words by default
     idx = jnp.asarray(np.asarray(tp.local_cols), jnp.int32)
     phys = jnp.zeros(pk["planes"].shape[:2] + (tp.region_size,),
-                     jnp.int8).at[:, :, idx].set(pk["planes"])
+                     jnp.uint8).at[:, :, idx].set(pk["planes"])
     placed_pack = {"planes": phys, "scale": pk["scale"], "col_ids": idx}
     np.testing.assert_array_equal(np.asarray(pud_linear(x, placed_pack)),
                                   np.asarray(pud_linear(x, pk)))
+    # and the dense (legacy-layout) hand-built pack agrees bit-for-bit
+    dk = pack_linear(w, 4, bitpack=False)
+    dense = jnp.zeros(dk["planes"].shape[:2] + (tp.region_size,),
+                      jnp.int8).at[:, :, idx].set(dk["planes"])
+    np.testing.assert_array_equal(
+        np.asarray(pud_linear(x, {"planes": dense, "scale": dk["scale"],
+                                  "col_ids": idx})),
+        np.asarray(pud_linear(x, pk)))
+
+
+def test_block_aligned_window_blocks_over_p():
+    """The tentpole layout guarantee: a placed tensor with N > PLACE_BLOCK
+    gets a multi-block window — every logical block's columns sit inside
+    its own window slice (the kernel streams one slice per N-tile instead
+    of the whole physical region), and the placed pack is bit-exact."""
+    from repro.pud.gemv import pack_linear, pud_linear
+    from repro.pud.packer import pack_model
+    from repro.pud.placement import PLACE_BLOCK
+    n, k = 2 * PLACE_BLOCK, 64
+    masks = _masks(g=4, c=512, p=0.15, seed=11)
+    plan = plan_placement(masks, [PlacementRequest("m/wi", n, 0)])
+    tp = plan.entries["m/wi"]
+    assert tp.block_cols == PLACE_BLOCK and tp.n_blocks == 2
+    # window stride is bounded by the faulty interleave, not the region span
+    assert tp.window_block < tp.phys_cols.max() - tp.phys_cols.min() + 1
+    local = np.asarray(tp.local_cols)
+    blk = np.arange(n) // tp.block_cols
+    assert (local // tp.window_block == blk).all(), \
+        "logical block j's columns must live inside window block j"
+
+    w = 0.05 * np.random.default_rng(1).standard_normal((k, n))
+    params = {"m": {"wi": jnp.asarray(w, jnp.float32)}}
+    pm = pack_model(params, PUDGemvConfig(packable=("wi",)),
+                    include_unembed=False, placement=plan)
+    pt = pm.tensor("m/wi")
+    assert pt.window_block == tp.window_block
+    assert pt.planes.shape[-1] == tp.region_size       # blocked window axis
+    x = jax.random.normal(jax.random.key(3), (3, k), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(pud_linear(x, pt)),
+        np.asarray(pud_linear(x, pack_linear(jnp.asarray(w, jnp.float32),
+                                             4))))
 
 
 # ---------------------------------------------------------------------------

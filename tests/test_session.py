@@ -93,7 +93,11 @@ def test_pack_model_typed_and_legacy_views():
     # flat tensor view + suffix lookup
     assert set(pm.tensors) == set(pm.packed_names)
     assert pm.tensor("unembed/w") is not None
-    assert pm.tensor("mixer/wi").planes.shape == (4, 64, 128)
+    # default pack output is bit-packed: 8 K rows per uint8 word
+    wi = pm.tensor("mixer/wi")
+    assert wi.planes.shape == (4, 8, 128) and wi.planes.dtype == jnp.uint8
+    assert wi.bitpacked and wi.k == 64 and wi.n == 128
+    assert wi.stored_bytes < wi.dense_equiv_bytes / 4
     with pytest.raises(KeyError, match="not found"):
         pm.tensor("nope/w")
     # embed untouched, fp weight dropped from packed projections
@@ -193,7 +197,7 @@ def test_session_linear_requires_pack():
 
 def _assert_parity(session):
     for name in session.packed.packed_names:
-        k = session.packed.tensor(name).planes.shape[-2]
+        k = session.packed.tensor(name).k
         x = jax.random.normal(jax.random.key(3), (5, k), jnp.float32)
         outs = {be: np.asarray(session.linear(x, name, backend=be))
                 for be in backend_names()}
@@ -247,7 +251,7 @@ def test_placed_linear_matches_logical_linear(tmp_path):
     logical = _session()
     logical.pack(_params(), CFG)
     for name in placed.packed.packed_names:
-        k = placed.packed.tensor(name).planes.shape[-2]
+        k = placed.packed.tensor(name).k
         x = jax.random.normal(jax.random.key(5), (3, k), jnp.float32)
         np.testing.assert_array_equal(
             np.asarray(placed.linear(x, name)),
@@ -270,6 +274,13 @@ def test_perf_report_and_decode_extras(tmp_path):
         rep["tuned_tok_s"] / rep["baseline_tok_s"])
     assert rep["placement"]["occupancy"] > 0
     assert rep["placed_tok_s"] > 0
+    # traffic terms: staging ceiling from the actual stored (bit-packed)
+    # bytes, and the combined-limit rate never exceeds either bound
+    assert rep["weight_bytes_per_token"] == packed_bytes(s.packed)[
+        "stored_bytes"]
+    assert rep["staging_bound_tok_s"] > 0
+    assert rep["traffic_aware_tok_s"] == pytest.approx(
+        min(rep["tuned_tok_s"], rep["staging_bound_tok_s"]))
     extras = s.decode_extras()
     assert extras["layout"] == "placed physical"
     assert extras["n_packed"] == 3
