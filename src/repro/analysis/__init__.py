@@ -1,0 +1,30 @@
+"""Static analysis for the PUD serving stack: kernel contracts + repo lint.
+
+Two passes, both runnable via ``python -m repro.analysis`` (the CI gate):
+
+  * ``contracts``  — recomputes, *without executing a kernel*, the block
+    selection, placed-window structure, and per-grid-step VMEM footprint of
+    every bit-plane entry point for a given (shape, layout, backend) and
+    verifies the invariants the kernels assume.  Violations raise
+    :class:`ContractViolation` naming the kernel, tile, and invariant.
+  * ``lint``       — AST rules enforcing the architecture the PR sequence
+    established (kernel code stays in ``kernels/``, call sites go through
+    the registry, packs are typed, no trace-invisible ``assert``s, ...).
+
+This ``__init__`` stays import-light (lazy submodule access) because the
+kernel modules import :mod:`repro.analysis.errors` at import time while
+:mod:`repro.analysis.contracts` imports the kernel package right back.
+"""
+from __future__ import annotations
+
+from .errors import ContractViolation  # noqa: F401
+
+__all__ = ["ContractViolation", "contracts", "lint"]
+
+
+def __getattr__(name: str):
+    if name in ("contracts", "lint"):
+        import importlib
+
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,82 @@
+"""CI gate: ``python -m repro.analysis``.
+
+Default run (no flags) executes all three passes and exits nonzero on any
+finding:
+
+  1. **contracts** — sweep the tier-1 kernel-config matrix (must all hold)
+     and the adversarial fixtures (must all trip their expected invariant);
+  2. **lint** — the AST rules over ``src/`` (see analysis/lint.py);
+  3. **doc sync** — the generated VMEM-budget table in docs/kernels.md must
+     match what contracts.py renders today.
+
+Flags: ``--contracts-only`` / ``--lint-only`` restrict to one pass;
+``--doc-table`` prints the generated markdown block; ``--write-docs``
+splices it into docs/kernels.md; positional paths override the lint
+target.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from . import contracts, lint
+
+REPO_ROOT = Path(__file__).resolve().parents[3]
+LINT_DEFAULT = REPO_ROOT / "src"
+KERNELS_DOC = REPO_ROOT / "docs" / "kernels.md"
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="kernel contract checker + repo lint (the CI gate)")
+    parser.add_argument("paths", nargs="*", type=Path,
+                        help=f"lint targets (default: {LINT_DEFAULT})")
+    group = parser.add_mutually_exclusive_group()
+    group.add_argument("--contracts-only", action="store_true",
+                       help="run only the kernel contract sweep")
+    group.add_argument("--lint-only", action="store_true",
+                       help="run only the AST lint")
+    group.add_argument("--doc-table", action="store_true",
+                       help="print the generated VMEM-budget table")
+    group.add_argument("--write-docs", action="store_true",
+                       help="regenerate the VMEM-budget table in "
+                            "docs/kernels.md")
+    args = parser.parse_args(argv)
+
+    if args.doc_table:
+        print(contracts.doc_table_block())
+        return 0
+    if args.write_docs:
+        contracts.write_doc_table(KERNELS_DOC)
+        print(f"wrote VMEM budget table -> {KERNELS_DOC}")
+        return 0
+
+    findings: list[str] = []
+    if not args.lint_only:
+        contract_findings = contracts.run_contracts()
+        findings += [f"contracts: {f}" for f in contract_findings]
+        n = len(contracts.default_matrix())
+        a = len(contracts.adversarial_fixtures())
+        print(f"contracts: {n} valid configs, {a} adversarial fixtures, "
+              f"{len(contract_findings)} findings")
+    if not args.contracts_only:
+        targets = args.paths or [LINT_DEFAULT]
+        lint_findings = lint.lint_paths(targets)
+        findings += [f"lint: {f}" for f in lint_findings]
+        print(f"lint: {len(lint.RULES)} rules over "
+              f"{', '.join(str(t) for t in targets)}, "
+              f"{len(lint_findings)} findings")
+    if not (args.lint_only or args.contracts_only):
+        doc_findings = contracts.check_doc_table(KERNELS_DOC)
+        findings += [f"docs: {f}" for f in doc_findings]
+        print(f"docs: VMEM table {'stale' if doc_findings else 'in sync'}")
+
+    for f in findings:
+        print(f, file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

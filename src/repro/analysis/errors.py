@@ -1,0 +1,28 @@
+"""Structured contract errors shared by the checker and the kernels.
+
+This module is an import leaf (stdlib only) on purpose: the kernel wrappers
+raise ``ContractViolation`` at trace time, and ``analysis/contracts.py``
+imports the kernel package to recompute its tiling — putting the exception
+anywhere heavier would close that loop into an import cycle.
+"""
+from __future__ import annotations
+
+
+class ContractViolation(ValueError):
+    """A kernel-contract invariant does not hold for a (shape, layout) combo.
+
+    Subclasses ``ValueError`` so pre-existing call sites catching the old
+    bare errors keep working; the structured fields name what failed:
+
+      kernel     entry point ("bitplane_gemv", "bitplane_gemm_placed", ...)
+      invariant  stable id of the failed check (see docs/analysis.md)
+      tile       grid/tile coordinate the violation localizes to, or None
+    """
+
+    def __init__(self, kernel: str, invariant: str, message: str,
+                 *, tile=None):
+        self.kernel = kernel
+        self.invariant = invariant
+        self.tile = tile
+        where = f" (tile {tile})" if tile is not None else ""
+        super().__init__(f"[{kernel}] {invariant}: {message}{where}")

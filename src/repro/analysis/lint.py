@@ -1,0 +1,251 @@
+"""AST repo lint: the architecture rules PRs 3-5 established, enforced.
+
+Each rule is a small AST visitor registered in :data:`RULES`; the CLI
+(``python -m repro.analysis``) runs them over ``src/`` and exits nonzero on
+any finding.  Rules are path-scoped with repo-relative posix paths, so test
+fixtures can exercise them with virtual paths (``lint_source(snippet,
+"src/repro/models/fake.py")``).
+
+Rule catalog (docs/analysis.md mirrors this):
+
+  no-pallas-outside-kernels   ``pl.pallas_call`` belongs in ``kernels/``;
+                              everything else goes through ``kernels.ops``
+                              or the backend registry.
+  no-direct-kernel-imports    the kernel implementation modules
+                              (``bitplane_gemv``/``bitplane_gemm``/``majx``)
+                              are private to the ``kernels`` package — call
+                              sites import ``kernels.ops`` / ``backends``.
+  no-raw-pack-dicts           packs are ``PackedTensor`` pytrees; raw
+                              ``{"planes": ..., "scale": ...}`` dicts may
+                              only be built inside ``pud/packed.py`` (the
+                              one legacy-coercion point).
+  no-assert-in-kernels        ``assert`` inside kernel code is stripped
+                              under ``python -O`` and invisible in a traced
+                              kernel body — raise ``ContractViolation``.
+  no-constant-prng-key        ``jax.random.key(0)``-style literal seeds in
+                              library code produce hidden cross-call
+                              correlation; thread keys (or derive them from
+                              config seeds) instead.
+  no-removed-jax-api          APIs removed from the pinned jax
+                              (``jax.set_mesh``) — use the portable
+                              ``launch/mesh.use_mesh`` shim.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+
+#: Kernel implementation modules private to the kernels package.
+KERNEL_MODULES = frozenset({"bitplane_gemv", "bitplane_gemm", "majx"})
+
+#: jax attributes removed on the pinned jaxlib (rule: no-removed-jax-api).
+REMOVED_JAX_APIS = frozenset({"set_mesh"})
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+RULES: dict[str, "LintRule"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class LintRule:
+    id: str
+    description: str
+    check: object  # callable(tree, path) -> iterable[Finding]
+
+
+def rule(rule_id: str, description: str):
+    def register(fn):
+        RULES[rule_id] = LintRule(rule_id, description, fn)
+        return fn
+
+    return register
+
+
+def _norm(path) -> str:
+    return str(path).replace(os.sep, "/")
+
+
+def _in_kernels(path: str) -> bool:
+    return "repro/kernels/" in _norm(path)
+
+
+def _attr_chain(node: ast.AST) -> str:
+    """Dotted name of an attribute/name chain ('jax.random.key'), '' if the
+    chain bottoms out in something dynamic."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+@rule("no-pallas-outside-kernels",
+      "pl.pallas_call is only lowered inside src/repro/kernels/")
+def _check_pallas(tree: ast.AST, path: str):
+    if _in_kernels(path):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        if chain.split(".")[-1] == "pallas_call":
+            yield Finding(
+                "no-pallas-outside-kernels", path, node.lineno,
+                "pallas_call outside kernels/ — add a kernel module and "
+                "expose it through kernels.ops / the backend registry")
+
+
+def _imported_kernel_module(node: ast.AST) -> str | None:
+    """The private kernel module an import statement reaches into, if any."""
+    if isinstance(node, ast.Import):
+        for alias in node.names:
+            parts = alias.name.split(".")
+            if "kernels" in parts and parts[-1] in KERNEL_MODULES:
+                return alias.name
+    if isinstance(node, ast.ImportFrom):
+        mod = node.module or ""
+        parts = mod.split(".") if mod else []
+        if parts and parts[-1] in KERNEL_MODULES and (
+                "kernels" in parts or node.level > 0):
+            return mod
+        if parts and parts[-1] == "kernels":
+            for alias in node.names:
+                if alias.name in KERNEL_MODULES:
+                    return f"{mod}.{alias.name}"
+    return None
+
+
+@rule("no-direct-kernel-imports",
+      "kernel implementation modules are private to the kernels package")
+def _check_kernel_imports(tree: ast.AST, path: str):
+    if _in_kernels(path):
+        return
+    for node in ast.walk(tree):
+        mod = _imported_kernel_module(node)
+        if mod is not None:
+            yield Finding(
+                "no-direct-kernel-imports", path, node.lineno,
+                f"import of private kernel module {mod!r} — go through "
+                "kernels.ops or kernels.backends")
+
+
+def _is_raw_pack_dict(node: ast.AST) -> bool:
+    if isinstance(node, ast.Dict):
+        keys = {k.value for k in node.keys
+                if isinstance(k, ast.Constant) and isinstance(k.value, str)}
+        return {"planes", "scale"} <= keys
+    if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id == "dict"):
+        kws = {kw.arg for kw in node.keywords}
+        return {"planes", "scale"} <= kws
+    return False
+
+
+@rule("no-raw-pack-dicts",
+      "packs are typed PackedTensor pytrees; raw dicts only in pud/packed.py")
+def _check_raw_packs(tree: ast.AST, path: str):
+    if _norm(path).endswith("repro/pud/packed.py"):
+        return
+    for node in ast.walk(tree):
+        if _is_raw_pack_dict(node):
+            yield Finding(
+                "no-raw-pack-dicts", path, node.lineno,
+                "raw {'planes', 'scale'} pack construction — build a "
+                "PackedTensor (pud/packed.py) instead")
+
+
+@rule("no-assert-in-kernels",
+      "assert in kernel code is stripped under -O and invisible in a trace")
+def _check_kernel_asserts(tree: ast.AST, path: str):
+    if not _in_kernels(path):
+        return
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assert):
+            yield Finding(
+                "no-assert-in-kernels", path, node.lineno,
+                "bare assert in kernel code — raise ContractViolation "
+                "(repro.analysis.errors) so the failure names the kernel "
+                "and invariant")
+
+
+@rule("no-constant-prng-key",
+      "literal PRNG seeds in library code hide cross-call correlation")
+def _check_prng(tree: ast.AST, path: str):
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and node.args):
+            continue
+        chain = _attr_chain(node.func)
+        parts = chain.split(".")
+        if parts[-1] not in ("PRNGKey", "key") or "random" not in parts:
+            continue
+        arg = node.args[0]
+        if isinstance(arg, ast.Constant) and isinstance(arg.value, int):
+            yield Finding(
+                "no-constant-prng-key", path, node.lineno,
+                f"{chain}({arg.value}) with a literal seed — thread an "
+                "explicit key (fold_in per call site) or derive the seed "
+                "from config")
+
+
+@rule("no-removed-jax-api",
+      "references to APIs removed on the pinned jax (use launch/mesh shims)")
+def _check_removed_apis(tree: ast.AST, path: str):
+    if _norm(path).endswith("repro/launch/mesh.py"):
+        return  # the one portability shim allowed to probe the old API
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Attribute)
+                and node.attr in REMOVED_JAX_APIS
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "jax"):
+            yield Finding(
+                "no-removed-jax-api", path, node.lineno,
+                f"jax.{node.attr} was removed on the pinned jax — use "
+                "repro.launch.mesh.use_mesh")
+
+
+def lint_source(source: str, path: str) -> list[Finding]:
+    """Lint one file's source text under a (possibly virtual) path."""
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as e:
+        return [Finding("syntax-error", _norm(path), e.lineno or 0, str(e))]
+    findings: list[Finding] = []
+    for r in RULES.values():
+        findings.extend(r.check(tree, _norm(path)))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+def lint_file(path) -> list[Finding]:
+    with open(path, encoding="utf-8") as f:
+        return lint_source(f.read(), path)
+
+
+def lint_paths(paths) -> list[Finding]:
+    """Lint every ``.py`` file under the given files/directories."""
+    findings: list[Finding] = []
+    for root in paths:
+        root = str(root)
+        if os.path.isfile(root):
+            findings.extend(lint_file(root))
+            continue
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = [d for d in dirnames
+                           if not d.startswith(".") and d != "__pycache__"]
+            for name in sorted(filenames):
+                if name.endswith(".py"):
+                    findings.extend(lint_file(os.path.join(dirpath, name)))
+    return findings

@@ -56,7 +56,8 @@ class ArchSpec:
         cell = SHAPES[shape_name]
         b, s = cell.global_batch, cell.seq_len
         i32 = jnp.int32
-        tok = lambda bb, ss: jax.ShapeDtypeStruct((bb, ss), i32)
+        def tok(bb, ss):
+            return jax.ShapeDtypeStruct((bb, ss), i32)
 
         extras = {}
         text_len = s

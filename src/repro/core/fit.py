@@ -27,7 +27,6 @@ Run:  PYTHONPATH=src python -m repro.core.fit
 from __future__ import annotations
 
 import dataclasses
-import itertools
 
 import numpy as np
 

@@ -37,7 +37,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
-from repro.kernels.majx import calib_iter_fused
+from repro.kernels.ops import calib_iter_fused
 from repro.kernels.ref import calib_iter_ref
 from repro.pud.physics import NEUTRAL, PhysicsParams
 from .calibrate import CalibrationConfig, identify_calibration_fn

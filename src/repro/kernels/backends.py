@@ -94,26 +94,47 @@ def _pallas_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _pallas_entries(interpret):
+def _pallas_entries(interpret, check=False):
     """The four kernel entries at a fixed interpret policy (callable so the
-    ``pallas`` backend re-reads the platform on every call)."""
+    ``pallas`` backend re-reads the platform on every call).
+
+    ``check=True`` runs the static contract checker
+    (repro.analysis.contracts) before every launch; the ``interpret``
+    backend enables it unconditionally, so the debugging backend also
+    validates tiling/layout/VMEM invariants the hardware path assumes.
+    """
+
+    def preflight(entry, x, planes, **kw):
+        if check:
+            # Deferred: analysis.contracts imports kernels.ops, which
+            # imports this module at its own top level.
+            from repro.analysis.contracts import check_kernel_args
+            check_kernel_args(entry, x.shape, planes.shape, **kw)
 
     def gemv(x, planes, mode="folded", *, layout="dense", logical_k=None):
+        preflight("gemv", x, planes, layout=layout, logical_k=logical_k,
+                  mode=mode)
         return bitplane_gemv(x, planes, mode=mode, interpret=interpret(),
                              layout=layout, logical_k=logical_k)
 
     def gemv_placed(x, planes, col_ids, mode="folded", *, layout="dense",
                     logical_k=None, window_block=None):
+        preflight("gemv", x, planes, layout=layout, logical_k=logical_k,
+                  col_ids=col_ids, window_block=window_block, mode=mode)
         return bitplane_gemv_placed(
             x, planes, col_ids, mode=mode, interpret=interpret(),
             layout=layout, logical_k=logical_k, window_block=window_block)
 
     def gemm(x, planes, mode="folded", *, layout="dense", logical_k=None):
+        preflight("gemm", x, planes, layout=layout, logical_k=logical_k,
+                  mode=mode)
         return bitplane_gemm(x, planes, mode=mode, interpret=interpret(),
                              layout=layout, logical_k=logical_k)
 
     def gemm_placed(x, planes, col_ids, mode="folded", *, layout="dense",
                     logical_k=None, window_block=None):
+        preflight("gemm", x, planes, layout=layout, logical_k=logical_k,
+                  col_ids=col_ids, window_block=window_block, mode=mode)
         return bitplane_gemm_placed(
             x, planes, col_ids, mode=mode, interpret=interpret(),
             layout=layout, logical_k=logical_k, window_block=window_block)
@@ -150,7 +171,7 @@ register_backend(Backend(
     gemv=_pl[0], gemv_placed=_pl[1], gemm=_pl[2], gemm_placed=_pl[3],
 ))
 
-_it = _pallas_entries(lambda: True)
+_it = _pallas_entries(lambda: True, check=True)
 register_backend(Backend(
     name="interpret",
     gemv=_it[0], gemv_placed=_it[1], gemm=_it[2], gemm_placed=_it[3],

@@ -38,6 +38,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.analysis.errors import ContractViolation
+
 # The kernel bodies are the GeMV ones with the K reduction axis moved to
 # grid position 2 (after the new batch axis); only the grid/BlockSpec
 # plumbing differs.
@@ -71,7 +73,8 @@ def bitplane_gemm(
     x @ (W - 2^{WB-1}).  Bit-exact vs ``bitplane_gemv`` row by row."""
     b, k = x.shape
     wb, _, n = planes.shape
-    xp, pkb, xkb, k_steps = _k_tiling(x, planes, layout, logical_k)
+    xp, pkb, xkb, k_steps = _k_tiling(x, planes, layout, logical_k,
+                                      kernel="bitplane_gemm")
     nb = _largest_divisor(n, N_BLOCK)
     bb = min(b, B_BLOCK)
     xp = _pad_batch(xp, bb)
@@ -119,10 +122,12 @@ def bitplane_gemm_placed(
     b, k = x.shape
     wb, _, w_len = planes.shape
     (n,) = col_ids.shape
-    xp, pkb, xkb, k_steps = _k_tiling(x, planes, layout, logical_k)
+    xp, pkb, xkb, k_steps = _k_tiling(x, planes, layout, logical_k,
+                                      kernel="bitplane_gemm_placed")
     pwb = window_block or w_len
     if w_len % pwb or n % (w_len // pwb):
-        raise ValueError(
+        raise ContractViolation(
+            "bitplane_gemm_placed", "window-tiling",
             f"window length {w_len} / window_block {pwb} does not tile "
             f"N={n}")
     block_cols = n // (w_len // pwb)

@@ -56,6 +56,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.analysis.errors import ContractViolation
+
 K_BLOCK = 256
 N_BLOCK = 256
 
@@ -158,7 +160,7 @@ def _sign_fix(x: jax.Array, wb: int) -> jax.Array:
 
 
 def _k_tiling(x: jax.Array, planes: jax.Array, layout: str,
-              logical_k: int | None):
+              logical_k: int | None, kernel: str = "bitplane_gemv"):
     """Resolve the K-axis tiling for either storage layout.
 
     Returns (x_padded, planes_k_block, x_k_block, k_steps): the activation
@@ -166,22 +168,29 @@ def _k_tiling(x: jax.Array, planes: jax.Array, layout: str,
     the plane/word block height, the matching x block width, and the K grid
     extent.  Padded x rows are zero, padded word bits are zero, and the
     sign fix is computed from the un-padded x — so the pad contributes
-    exactly nothing on both sides.
+    exactly nothing on both sides.  ``kernel`` names the entry point in
+    ``ContractViolation`` errors (the same invariants the static checker in
+    repro/analysis/contracts.py verifies without executing anything).
     """
     k = x.shape[1]
     if layout == "bitpack8":
         kw = planes.shape[1]
         if (logical_k or kw * 8) != k or k > kw * 8:
-            raise ValueError(
-                f"bitpack8 operand mismatch: x K={k}, words Kw={kw} "
+            raise ContractViolation(
+                kernel, "bitpack8-logical-k",
+                f"x K={k} inconsistent with word planes Kw={kw} "
                 f"(logical_k={logical_k})")
         xp = jnp.pad(x, ((0, 0), (0, kw * 8 - k))) if kw * 8 != k else x
         kwb = _largest_divisor(kw, K_BLOCK // 8)
         return xp, kwb, kwb * 8, kw // kwb
     if layout != "dense":
-        raise ValueError(f"unknown plane layout {layout!r}; one of {LAYOUTS}")
+        raise ContractViolation(
+            kernel, "layout",
+            f"unknown plane layout {layout!r}; one of {LAYOUTS}")
     if planes.shape[1] != k:
-        raise ValueError(f"K mismatch: x {x.shape}, planes {planes.shape}")
+        raise ContractViolation(
+            kernel, "k-mismatch",
+            f"x {tuple(x.shape)} vs planes {tuple(planes.shape)}")
     kb = _largest_divisor(k, K_BLOCK)
     return x, kb, kb, k // kb
 
@@ -254,10 +263,12 @@ def bitplane_gemv_placed(
     b, k = x.shape
     wb, _, w_len = planes.shape
     (n,) = col_ids.shape
-    xp, pkb, xkb, k_steps = _k_tiling(x, planes, layout, logical_k)
+    xp, pkb, xkb, k_steps = _k_tiling(x, planes, layout, logical_k,
+                                      kernel="bitplane_gemv_placed")
     pwb = window_block or w_len
     if w_len % pwb or n % (w_len // pwb):
-        raise ValueError(
+        raise ContractViolation(
+            "bitplane_gemv_placed", "window-tiling",
             f"window length {w_len} / window_block {pwb} does not tile "
             f"N={n}")
     block_cols = n // (w_len // pwb)

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.analysis.errors import ContractViolation
 from repro.pud.physics import NEUTRAL, PhysicsParams
 
 TRIAL_BLOCK = 8
@@ -66,11 +67,14 @@ CAL_SAMPLE_BLOCKS = (64, 32, 16, 8, 4, 2, 1)
 CAL_COL_BLOCKS = (1024, 512, 256, 128)
 
 
-def _pick_block(n: int, candidates: tuple[int, ...]) -> int:
+def _pick_block(n: int, candidates: tuple[int, ...],
+                kernel: str = "calib_iter_fused") -> int:
     for c in candidates:
         if n % c == 0:
             return c
-    raise ValueError(f"no block size in {candidates} divides {n}")
+    raise ContractViolation(
+        kernel, "block-selection",
+        f"no block size in {candidates} divides {n}")
 
 
 def _calib_iter_kernel(inputs_ref, noise_ref, levels_ref, offset_ref,
@@ -182,7 +186,12 @@ def majx_sense(
 ) -> jax.Array:
     """Sensed bits [T, C] for T SiMRA events over C columns."""
     t, r, c = charge.shape
-    assert t % TRIAL_BLOCK == 0 and c % COL_BLOCK == 0, (t, c)
+    if t % TRIAL_BLOCK or c % COL_BLOCK:
+        # Not a bare assert: stripped under -O and invisible in a trace.
+        raise ContractViolation(
+            "majx_sense", "block-alignment",
+            f"trials {t} / columns {c} must tile "
+            f"({TRIAL_BLOCK}, {COL_BLOCK}) blocks")
     grid = (t // TRIAL_BLOCK, c // COL_BLOCK)
     kernel = functools.partial(_majx_kernel, params=params, n_fracs=n_fracs)
     return pl.pallas_call(

@@ -11,14 +11,21 @@ import jax.numpy as jnp
 
 from . import ref
 from .backends import get_backend
-from .bitplane_gemm import bitplane_gemm, bitplane_gemm_placed
-from .bitplane_gemv import bitplane_gemv, bitplane_gemv_placed
-from .majx import majx_sense
+from .bitplane_gemm import B_BLOCK, bitplane_gemm, bitplane_gemm_placed
+from .bitplane_gemv import (K_BLOCK, N_BLOCK, bitplane_gemv,
+                            bitplane_gemv_placed)
+from .bitplane_gemv import _largest_divisor as largest_divisor
+from .majx import calib_iter_fused, majx_sense
 
 __all__ = [
-    "majx_sense", "bitplane_gemv", "bitplane_gemv_placed", "bitplane_gemm",
-    "bitplane_gemm_placed", "pud_matmul", "pud_gemv",
-    "quantize_activations",
+    "majx_sense", "calib_iter_fused", "bitplane_gemv",
+    "bitplane_gemv_placed", "bitplane_gemm", "bitplane_gemm_placed",
+    "pud_matmul", "pud_gemv", "quantize_activations",
+    # Tiling facts re-exported for non-kernel consumers (pud/placement.py,
+    # analysis/contracts.py): the kernel implementation modules are private
+    # to this package — the repo lint enforces that — so the block
+    # constants and the divisor rule travel through this public surface.
+    "B_BLOCK", "K_BLOCK", "N_BLOCK", "largest_divisor",
 ]
 
 
@@ -45,6 +52,7 @@ def pud_matmul(
     layout: str = "dense",              # plane storage (repro/pud/packed.py)
     logical_k: int | None = None,       # un-padded K of a bit-packed pack
     window_block: int | None = None,    # placed window stride (block-aligned)
+    check_contracts: bool = False,      # pre-flight analysis/contracts.py
 ) -> jax.Array:
     """Quantize -> bit-plane GEMM -> dequantize. Returns [B, N] float32.
 
@@ -60,10 +68,24 @@ def pud_matmul(
     kernel).  ``backend`` names a registered lowering; without one the
     legacy ``interpret`` flag picks between the interpreted and native
     Pallas kernel.  All backends are bit-exact against each other.
+
+    ``check_contracts=True`` runs the static kernel-contract checker
+    (repro/analysis/contracts.py) over the resolved entry point before
+    dispatch — tile selection, layout metadata consistency, placed-window
+    bounds, VMEM budget — raising ``ContractViolation`` instead of letting
+    a mis-built pack fail deep inside the kernel (the ``interpret``
+    backend runs the same check unconditionally).
     """
     xq, x_scale = quantize_activations(x)
     be = get_backend(backend or ("interpret" if interpret else "pallas"))
     batched = xq.shape[0] > 1
+    if check_contracts:
+        from repro.analysis.contracts import check_kernel_args
+
+        check_kernel_args(
+            "gemm" if batched else "gemv", xq.shape, planes.shape,
+            layout=layout, logical_k=logical_k, col_ids=col_ids,
+            window_block=window_block, mode=mode)
     # Layout kwargs only travel when they carry information: a legacy dense
     # pack dispatches through the pre-refactor 3-arg entry signature, so
     # custom backends registered against it keep working (bit-packed packs
@@ -93,6 +115,7 @@ def pud_gemv(
     layout: str = "dense",
     logical_k: int | None = None,
     window_block: int | None = None,
+    check_contracts: bool = False,
 ) -> jax.Array:
     """Rank-dispatching shim over ``pud_matmul``.
 
@@ -101,7 +124,7 @@ def pud_gemv(
     """
     kw = dict(mode=mode, interpret=interpret, col_ids=col_ids,
               backend=backend, layout=layout, logical_k=logical_k,
-              window_block=window_block)
+              window_block=window_block, check_contracts=check_contracts)
     if x.ndim == 1:
         return pud_matmul(x[None, :], planes, w_scale, **kw)[0]
     return pud_matmul(x, planes, w_scale, **kw)

@@ -18,7 +18,6 @@ Per cell this script records to artifacts/dryrun/<mesh>/<arch>__<shape>.json:
 Restartable: existing cell files are skipped unless --force.
 """
 import argparse
-import dataclasses
 import json
 import pathlib
 import re
@@ -26,7 +25,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, all_archs, get

@@ -23,7 +23,6 @@ Known approximations (documented in EXPERIMENTS.md §Roofline):
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 
 DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,

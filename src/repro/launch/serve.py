@@ -44,6 +44,10 @@ from repro.models.params import init_params, param_count
 from repro.pud.gemv import ATTN_PACKABLE, FFN_PACKABLE, PUDGemvConfig
 from repro.runtime.steps import make_serve_step
 
+#: Seed of the default serve-step key when the caller does not thread one
+#: (greedy decode never consumes it; sampling steps derive from here).
+DEFAULT_SEED = 0
+
 
 @functools.lru_cache(maxsize=8)
 def _jitted(model):
@@ -80,7 +84,7 @@ def greedy_generate(model, params, tokens, gen: int, max_len: int,
     out = []
     nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
     if key is None:
-        key = jax.random.key(0)
+        key = jax.random.key(DEFAULT_SEED)
     all_logits = [logits]
     for i in range(gen):
         out.append(nxt)
@@ -155,7 +159,7 @@ def main(argv=None) -> int:
         model, params, tokens, args.gen, max_len, extras, prefix_len)
     dt = time.time() - t0
     print(f"  bf16 path: {args.batch * args.gen} tokens in {dt:.2f}s "
-          f"(CPU wall; TPU perf comes from the dry-run roofline)")
+          "(CPU wall; TPU perf comes from the dry-run roofline)")
 
     if args.pud_gemv:
         packable = FFN_PACKABLE + (ATTN_PACKABLE if args.pud_attention
@@ -191,14 +195,14 @@ def main(argv=None) -> int:
                               name=f"{args.arch}-{args.preset}")
         if session.placement_status == "skipped":
             print(f"  placement: SKIPPED ({session.placement_error}); "
-                  f"serving on logical columns")
+                  "serving on logical columns")
         elif session.placement is not None:
             rep = session.perf_report()["placement"]
             pstatus = ("HIT" if session.placement_status == "hit"
                        else "planned + persisted")
             print(f"  placement [{session.placement_name}] {pstatus}: "
                   f"{rep['used_cols']:,}/{rep['usable_cols']:,} "
-                  f"error-free columns used "
+                  "error-free columns used "
                   f"(occupancy {rep['occupancy']:.1%}, "
                   f"{rep['occupied_subarrays']}"
                   f"/{rep['n_subarrays']} subarrays, "
@@ -216,10 +220,10 @@ def main(argv=None) -> int:
               f"{extras_rep['stored_bytes'] / 2**20:.1f} MiB bit-packed "
               f"vs {extras_rep['dense_equiv_bytes'] / 2**20:.1f} MiB dense "
               f"— {extras_rep['traffic_reduction']:.1f}x less weight "
-              f"traffic/token):")
+              "traffic/token):")
         print(f"    token agreement vs bf16: {100 * agree:.1f}%   "
               f"max |logit delta|: {delta:.3f} "
-              f"(quantization, not error — the kernel is exact int math)")
+              "(quantization, not error — the kernel is exact int math)")
 
         # DRAM-side throughput model: what the paper's system sustains.
         perf = session.perf_report(2 * spec.n_active_params)
@@ -229,7 +233,7 @@ def main(argv=None) -> int:
               f" -> PUDTune {perf['tuned_tok_s']:.2f}"
               f" tok/s ({perf['gain']:.2f}x, Eq. 1)")
         if session.placement is not None:
-            print(f"    placement-derived rate (occupied-subarray waves): "
+            print("    placement-derived rate (occupied-subarray waves): "
                   f"{perf['placed_tok_s']:.2f} "
                   f"tok/s at {session.placement.occupancy:.1%} occupancy")
 
@@ -258,13 +262,13 @@ def main(argv=None) -> int:
         seq = ref_toks if not args.pud_gemv else toks
         agree = float(np.mean([c.tokens == list(np.asarray(seq[i]))
                                for i, c in enumerate(completions)]))
-        print(f"    batched vs lockstep decode: "
+        print("    batched vs lockstep decode: "
               f"{100 * agree:.1f}% of requests bit-identical")
         if args.pud_gemv:
             perf = session.perf_report(2 * spec.n_active_params,
                                        batch_size=engine.batch_size)
             if "batched_tok_s" in perf:
-                print(f"    DDR4-PUD batched rate: "
+                print("    DDR4-PUD batched rate: "
                       f"{perf['batched_tok_s']:.2f} aggregate tok/s at "
                       f"batch {perf['batch_size']} "
                       f"({perf['batch_speedup']:.2f}x over batch-1; "

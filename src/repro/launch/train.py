@@ -22,12 +22,10 @@ scales qwen3-family to ~100M params for the end-to-end loss-drop run;
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get
@@ -56,10 +54,13 @@ def build_model(arch: str, preset: str):
     raise ValueError(preset)
 
 
-def family_extras(spec, model, batch_shape, step: int) -> dict:
+def family_extras(spec, model, batch_shape, step: int, seed: int = 0) -> dict:
     """Stub-frontend inputs (brief: precomputed patch/frame embeddings)."""
     b = batch_shape[0]
-    key = jax.random.fold_in(jax.random.key(0xF00D), step)
+    # Domain-tag the run seed so the stub-frontend stream never collides
+    # with the init/data streams derived from the same --seed.
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.key(seed), 0xF00D), step)
     c = model.cfg
     if spec.family == "vlm" and hasattr(c, "n_patches"):
         return {"patches": 0.1 * jax.random.normal(
@@ -120,7 +121,7 @@ def _run(args, model, mesh, vocab, seq, gbs) -> int:
     opt_ps = opt_state_pspecs(pspecs, opt_cfg)
     spec = get(args.arch)
     batch_ps = {"tokens": P("data"), "labels": P("data"), "mask": P("data")}
-    for name in family_extras(spec, model, (1,), 0):
+    for name in family_extras(spec, model, (1,), 0, seed=args.seed):
         batch_ps[name] = P("data")
 
     data_cfg = DataConfig(vocab=vocab, seq_len=seq, global_batch=gbs,
@@ -131,10 +132,11 @@ def _run(args, model, mesh, vocab, seq, gbs) -> int:
     start_step = 0
     params = opt_state = None
     if ckpt and args.resume and ckpt.latest_step() is not None:
+        tmpl_params = init_params(model.param_defs(),
+                                  jax.random.key(args.seed))
         tmpl = {
-            "params": init_params(model.param_defs(), jax.random.key(0)),
-            "opt": init_opt_state(
-                init_params(model.param_defs(), jax.random.key(0)), opt_cfg),
+            "params": tmpl_params,
+            "opt": init_opt_state(tmpl_params, opt_cfg),
         }
         tree, step, meta = ckpt.restore(
             tmpl, shardings={
@@ -174,7 +176,8 @@ def _run(args, model, mesh, vocab, seq, gbs) -> int:
 
     for step in range(start_step, args.steps):
         batch = next(pipe)
-        batch.update(family_extras(spec, model, batch["tokens"].shape, step))
+        batch.update(family_extras(spec, model, batch["tokens"].shape, step,
+                                   seed=args.seed))
         dog.start_step(step)
         params, opt_state, metrics = step_fn(
             params, opt_state, batch, jnp.uint32(step))

@@ -11,8 +11,6 @@ Sharding: heads ("heads"/"kv_heads" -> model axis), batch -> data axis.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

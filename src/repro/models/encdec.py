@@ -165,7 +165,6 @@ class EncDecLM:
         return loss, {"xent": loss}
 
     def prefill(self, params, tokens, frames, max_len: int | None = None):
-        c = self.cfg
         b, s = tokens.shape
         max_len = max_len or s
         memory = self.encode(params, frames)

@@ -6,9 +6,7 @@ place (see params.py).
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ seq_len).  Loss is computed on text positions only.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -72,7 +71,6 @@ class VLM:
 
     def prefill(self, params, tokens, patches, max_len: int | None = None):
         """Returns (last logits, cache). Cache spans patches + text."""
-        c = self.cfg
         h = self._embed_all(params, patches, tokens)
         b, s, _ = h.shape
         max_len = max_len or s

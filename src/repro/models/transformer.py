@@ -16,7 +16,6 @@ plus param_defs() / cache_defs() metadata for init, sharding and the dry-run.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax

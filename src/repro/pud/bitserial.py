@@ -31,7 +31,6 @@ every Table-I absolute number (see EXPERIMENTS.md).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -168,7 +167,8 @@ def mul8_truncated(ctx: MajContext, a_bits, ab_bits, b_bits, bb_bits, key):
             s, sb, c2, cb2 = full_adder(ctx, ar, abr, pi, pbi, c, cb, k2,
                                         want_sum_bar=True)
             valid = (i < 8 - j)
-            keep = lambda new, old: jnp.where(valid, new, old)
+            def keep(new, old):
+                return jnp.where(valid, new, old)
             return ((keep(c2, c), keep(cb2, cb)),
                     (keep(s, ar), keep(sb, abr)))
 

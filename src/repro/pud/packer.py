@@ -144,7 +144,7 @@ def _pack_any(w, n_bits: int, name: str, placement: Placement | None,
     if tp is None:
         raise KeyError(
             f"placement has no entry for packed tensor {name!r}; plan it "
-            f"from packing_requests() of the same params/config "
+            "from packing_requests() of the same params/config "
             f"(have: {sorted(placement.entries)})")
     return _pack_placed(w, n_bits, tp, backend)
 

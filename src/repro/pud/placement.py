@@ -52,7 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.bitplane_gemv import N_BLOCK, _largest_divisor
+from repro.kernels.ops import N_BLOCK, largest_divisor
 
 PLACEMENT_FORMAT = "pud-placement-v2"
 _PLACEMENT_FORMAT_V1 = "pud-placement-v1"
@@ -291,7 +291,7 @@ def plan_placement(
     cursor = 0
     for req in requests:
         n_slices = max(1, req.n_slices)
-        block_cols = _largest_divisor(req.n_cols, PLACE_BLOCK)
+        block_cols = largest_divisor(req.n_cols, PLACE_BLOCK)
         slice_cols, slice_starts, slice_spans = [], [], []
         for _ in range(n_slices):
             cols = usable_ids[cursor:cursor + req.n_cols]
@@ -448,7 +448,7 @@ def _upgrade_v1_entry(phys: np.ndarray, region_start: np.ndarray,
     ``block_start - region_start``.
     """
     n = phys.shape[-1]
-    block_cols = _largest_divisor(n, PLACE_BLOCK)
+    block_cols = largest_divisor(n, PLACE_BLOCK)
     stacked = phys.ndim == 2
     slices = phys if stacked else phys[None]
     r_starts = (np.asarray(region_start).reshape(-1) if stacked

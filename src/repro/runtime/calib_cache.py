@@ -312,7 +312,7 @@ def main(argv=None) -> int:
     print(f"devices          {len(devices)}")
     print(f"table entries    {len(rows)}")
     print(f"placements       {sum(r['n_placements'] for r in rows)}")
-    print(f"on-disk size     "
+    print("on-disk size     "
           f"{(_dir_bytes(root) if root.exists() else 0) / 1024:.1f} KiB")
     return 0
 

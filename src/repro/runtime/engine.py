@@ -37,7 +37,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ ZeRO-1/3 semantics for free under pjit.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +40,8 @@ def lr_schedule(cfg: OptConfig, step):
 
 
 def init_opt_state(params, cfg: OptConfig):
-    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def f32(p):
+        return jnp.zeros(p.shape, jnp.float32)
     state = {
         "mu": jax.tree.map(f32, params),
         "nu": jax.tree.map(f32, params),

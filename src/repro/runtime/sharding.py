@@ -13,7 +13,6 @@ Mesh axes (launch/mesh.py): ("data", "model") single-pod, ("pod", "data",
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 

@@ -7,8 +7,7 @@ are donated by the launcher.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,278 @@
+"""Static-analysis gate: lint rules fire on fixtures and stay clean on the
+real tree; the contract checker accepts every tier-1 config, rejects every
+seeded violation, and pre-flights real kernel calls; the CLI exits 0 on the
+repo as committed (what CI runs)."""
+import pathlib
+import shutil
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import ContractViolation, contracts, lint
+from repro.kernels.backends import get_backend
+from repro.kernels.ops import pud_matmul
+from repro.kernels.ref import pack_plane_words
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+SRC = REPO_ROOT / "src"
+
+
+# ---------------------------------------------------------------------------
+# Lint rules: each fires on an inline fixture...
+# ---------------------------------------------------------------------------
+
+LIB = "src/repro/models/somewhere.py"      # virtual non-kernel library path
+KERNEL = "src/repro/kernels/somewhere.py"  # virtual kernel path
+
+FIXTURES = [
+    ("no-pallas-outside-kernels", LIB, """
+        import jax.experimental.pallas as pl
+        out = pl.pallas_call(kernel, out_shape=shape)(x)
+        """),
+    ("no-direct-kernel-imports", LIB, """
+        from repro.kernels.bitplane_gemv import bitplane_gemv
+        """),
+    ("no-direct-kernel-imports", LIB, """
+        from repro.kernels import majx
+        """),
+    ("no-direct-kernel-imports", LIB, """
+        import repro.kernels.bitplane_gemm
+        """),
+    ("no-raw-pack-dicts", LIB, """
+        pack = {"planes": planes, "scale": scale, "col_ids": None}
+        """),
+    ("no-raw-pack-dicts", LIB, """
+        pack = dict(planes=planes, scale=scale)
+        """),
+    ("no-assert-in-kernels", KERNEL, """
+        def kernel_wrapper(x):
+            assert x.shape[0] % 8 == 0
+        """),
+    ("no-constant-prng-key", LIB, """
+        import jax
+        key = jax.random.PRNGKey(0)
+        """),
+    ("no-constant-prng-key", LIB, """
+        import jax
+        key = jax.random.key(42)
+        """),
+    ("no-removed-jax-api", LIB, """
+        import jax
+        jax.set_mesh(mesh)
+        """),
+]
+
+
+@pytest.mark.parametrize("rule,path,snippet",
+                         FIXTURES, ids=[f"{r}-{i}" for i, (r, _, _)
+                                        in enumerate(FIXTURES)])
+def test_rule_fires_on_fixture(rule, path, snippet):
+    findings = lint.lint_source(textwrap.dedent(snippet), path)
+    assert [f.rule for f in findings] == [rule], findings
+
+
+def test_every_rule_has_a_fixture():
+    assert {r for r, _, _ in FIXTURES} == set(lint.RULES)
+    assert len(lint.RULES) >= 6
+
+
+def test_rules_are_path_scoped():
+    # The same constructs are legal in their home locations.
+    ok = [
+        ("src/repro/kernels/new_kernel.py",
+         "out = pl.pallas_call(kernel, out_shape=shape)(x)"),
+        ("src/repro/kernels/backends.py",
+         "from repro.kernels.bitplane_gemv import bitplane_gemv"),
+        ("src/repro/pud/packed.py",
+         'pack = {"planes": planes, "scale": scale}'),
+        ("src/repro/launch/mesh.py", "import jax\njax.set_mesh(mesh)"),
+        # threaded keys and non-literal seeds are fine anywhere
+        (LIB, "import jax\nkey = jax.random.key(seed)"),
+        (LIB, "import jax\nkey = jax.random.fold_in(key, 3)"),
+        # assert outside kernel code is pytest's job, not the lint's
+        ("tests/test_x.py", "assert x == 1"),
+    ]
+    for path, snippet in ok:
+        assert lint.lint_source(snippet, path) == [], (path, snippet)
+
+
+def test_real_tree_is_clean():
+    findings = lint.lint_paths([SRC])
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_syntax_error_is_reported_not_raised():
+    findings = lint.lint_source("def broken(:\n", LIB)
+    assert [f.rule for f in findings] == ["syntax-error"]
+
+
+# ---------------------------------------------------------------------------
+# Contract checker: valid matrix accepted, seeded violations rejected.
+# ---------------------------------------------------------------------------
+
+
+def test_default_matrix_all_valid():
+    for call, ids in contracts.default_matrix():
+        plan = contracts.plan_kernel(call)       # must not raise
+        assert plan.grid[-2] * plan.nb == call.n
+        if ids is not None:
+            contracts.check_col_ids(ids, call.n, call.window,
+                                    call.window_block, plan.block_cols,
+                                    call.kernel)
+
+
+def test_adversarial_fixtures_each_trip_expected_invariant():
+    fixtures = contracts.adversarial_fixtures()
+    assert len(fixtures) >= 3
+    for name, invariant, call, ids in fixtures:
+        with pytest.raises(ContractViolation) as exc:
+            plan = contracts.plan_kernel(call)
+            if ids is not None:
+                contracts.check_col_ids(ids, call.n, call.window,
+                                        call.window_block, plan.block_cols,
+                                        call.kernel)
+        assert exc.value.invariant == invariant, name
+        assert exc.value.kernel == call.kernel, name
+
+
+def test_run_contracts_green_on_shipped_matrix():
+    assert contracts.run_contracts() == []
+
+
+def test_plan_matches_kernel_tiling_rules():
+    # dense odd shape: the checker must pick the same divisor tiles the
+    # wrapper picks (K=300 -> Kb=150, N=172 -> Nb=172).
+    plan = contracts.plan_kernel(contracts.KernelCall(
+        entry="gemv", b=4, k=300, n=172))
+    assert plan.x_kb == 150 and plan.grid == (1, 2)
+    # bitpack8: divisor chosen on the word axis (K=300 -> Kw=38 -> 19 words).
+    plan = contracts.plan_kernel(contracts.KernelCall(
+        entry="gemv", b=4, k=300, n=172, layout="bitpack8", logical_k=300))
+    assert plan.plane_kb == 19 and plan.x_kb == 152
+    # gemm pads the batch to a B_BLOCK multiple before gridding.
+    plan = contracts.plan_kernel(contracts.KernelCall(
+        entry="gemm", b=300, k=256, n=256))
+    assert plan.bb == 128 and plan.grid[0] == 3
+
+
+def test_contract_violation_names_kernel_and_invariant():
+    err = ContractViolation("bitplane_gemv", "vmem-budget", "too big",
+                            tile=3)
+    assert err.kernel == "bitplane_gemv"
+    assert err.invariant == "vmem-budget"
+    assert err.tile == 3
+    assert isinstance(err, ValueError)         # legacy call sites catch this
+    assert "vmem-budget" in str(err) and "tile 3" in str(err)
+
+
+# ---------------------------------------------------------------------------
+# Integration: kernels raise ContractViolation; the interpret backend and
+# pud_matmul(check_contracts=True) pre-flight through the checker.
+# ---------------------------------------------------------------------------
+
+
+def _pack(k=64, n=64, wb=4):
+    planes = np.ones((wb, k, n), np.int8)
+    return jnp.asarray(pack_plane_words(planes))
+
+
+def test_kernel_wrappers_raise_contract_violation():
+    be = get_backend("pallas")
+    x = jnp.ones((2, 60), jnp.int8)
+    planes = jnp.ones((4, 64, 64), jnp.int8)
+    with pytest.raises(ContractViolation) as exc:
+        be.gemv(x, planes, "folded")
+    assert exc.value.invariant == "k-mismatch"
+
+
+def test_interpret_backend_checks_unconditionally():
+    be = get_backend("interpret")
+    x = jnp.ones((1, 64), jnp.int8)
+    planes = jnp.ones((4, 64, 64), jnp.int8)
+    ids = jnp.arange(64, dtype=jnp.int32)
+    # window_block=63 does not tile the 64-wide window: the *checker* (not
+    # the kernel wrapper's own runtime check) sees it first.
+    with pytest.raises(ContractViolation) as exc:
+        be.gemv_placed(x, planes, ids, "folded", window_block=63)
+    assert exc.value.invariant == "window-tiling"
+    # an oversized whole-window placed layout trips the VMEM budget, which
+    # only exists in the checker
+    big = jnp.zeros((4, 2048, 1 << 15), jnp.int8)
+    big_ids = jnp.arange(256, dtype=jnp.int32)
+    with pytest.raises(ContractViolation) as exc:
+        be.gemv_placed(jnp.ones((8, 2048), jnp.int8), big, big_ids, "folded")
+    assert exc.value.invariant == "vmem-budget"
+
+
+def test_pud_matmul_preflight_opt_in():
+    words = _pack()
+    scale = jnp.ones((64,), jnp.float32)
+    bad_x = jnp.ones((2, 60), jnp.int8)
+    # without the flag the reference backend just densifies and pads
+    pud_matmul(bad_x, words, scale, mode="folded", layout="bitpack8",
+               logical_k=64, backend="reference")
+    with pytest.raises(ContractViolation) as exc:
+        pud_matmul(bad_x, words, scale, mode="folded", layout="bitpack8",
+                   logical_k=64, backend="reference", check_contracts=True)
+    assert exc.value.invariant == "bitpack8-logical-k"
+    out = pud_matmul(jnp.ones((2, 64), jnp.int8), words, scale,
+                     mode="folded", layout="bitpack8", logical_k=64,
+                     backend="reference", check_contracts=True)
+    assert out.shape == (2, 64)
+
+
+def test_check_pack_accepts_session_built_pack():
+    from repro.pud.gemv import pack_linear
+    pt = pack_linear(np.random.default_rng(0).normal(size=(48, 32)))
+    plans = contracts.check_pack(pt, batch=4)
+    assert len(plans) == 2                     # gemv + gemm
+
+
+# ---------------------------------------------------------------------------
+# CLI + generated docs: what the CI job runs must pass on the repo as
+# committed.
+# ---------------------------------------------------------------------------
+
+
+def test_cli_exits_zero_on_repo():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis"],
+        cwd=REPO_ROOT, capture_output=True, text=True,
+        env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin:/usr/local/bin"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_flags_and_exit_codes(tmp_path):
+    from repro.analysis.__main__ import main
+    assert main(["--contracts-only"]) == 0
+    assert main(["--lint-only"]) == 0
+    # a file violating a rule drives the exit code nonzero
+    bad = tmp_path / "src" / "repro" / "models" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import jax\nkey = jax.random.key(7)\n")
+    assert main(["--lint-only", str(bad)]) == 1
+
+
+def test_doc_table_in_sync():
+    assert contracts.check_doc_table(REPO_ROOT / "docs" / "kernels.md") == []
+
+
+def test_doc_drift_detected(tmp_path):
+    doc = tmp_path / "kernels.md"
+    doc.write_text("# x\n" + contracts.doc_table_block().replace(
+        "2.0 KiB", "3.0 KiB") + "\n")
+    assert contracts.check_doc_table(doc) != []
+    contracts.write_doc_table(doc)             # --write-docs repairs it
+    assert contracts.check_doc_table(doc) == []
+
+
+@pytest.mark.skipif(shutil.which("ruff") is None,
+                    reason="ruff not installed in this environment")
+def test_ruff_clean():
+    proc = subprocess.run(["ruff", "check", "src", "tests"],
+                          cwd=REPO_ROOT, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr

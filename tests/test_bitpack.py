@@ -8,7 +8,7 @@ import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels import ref
-from repro.kernels.backends import backend_names, get_backend
+from repro.kernels.backends import backend_names
 from repro.kernels.bitplane_gemm import bitplane_gemm
 from repro.kernels.bitplane_gemv import _largest_divisor, bitplane_gemv
 from repro.pud.gemv import PUDGemvConfig, pack_linear, pud_linear

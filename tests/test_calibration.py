@@ -3,10 +3,8 @@ throughput model (Table I structure), reliability (Fig. 6 structure)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
-from repro.core import offsets as offs_mod
 from repro.core.calibrate import CalibrationConfig, identify_calibration
 from repro.core.ecr import measure_ecr_maj5
 from repro.core.offsets import baseline_charges, levels_to_charges, make_ladder

@@ -6,8 +6,6 @@ import subprocess
 import sys
 import textwrap
 
-REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -24,6 +22,8 @@ from repro.kernels.ref import calib_iter_ref
 from repro.pud.gemv import FleetPerfModel, PUDPerfModel
 from repro.pud.physics import PhysicsParams
 from repro.runtime.calib_cache import CalibrationTableCache
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 P = PhysicsParams()
 CFG = FleetConfig(n_channels=1, n_banks=2, n_subarrays=2, n_cols=256)

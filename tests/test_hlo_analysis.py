@@ -1,8 +1,6 @@
 """Validate the trip-count-aware HLO analyzer against known-flop graphs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.launch.hlo_analysis import analyze, parse_computations
 

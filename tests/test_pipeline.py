@@ -6,11 +6,11 @@ import subprocess
 import sys
 import textwrap
 
-REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
-
 import pytest
 
 from repro.runtime.pipeline import bubble_fraction, stage_split
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
 def test_bubble_fraction():

@@ -4,7 +4,6 @@ commands behave per Sec. II-B, bit-serial arithmetic is exact on an ideal
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.pud import bitserial, device, timing

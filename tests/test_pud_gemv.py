@@ -7,7 +7,7 @@ import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels import ref
-from repro.kernels.ops import bitplane_gemv, pud_gemv, quantize_activations
+from repro.kernels.ops import bitplane_gemv, quantize_activations
 from repro.pud.gemv import (PUDGemvConfig, PUDPerfModel, pack_linear,
                             pud_linear, pud_linear_ref)
 from repro.pud.packer import pack_for_serving, packed_bytes

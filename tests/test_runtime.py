@@ -1,8 +1,6 @@
 """Runtime substrate tests: checkpointing (atomic/async/resume/elastic),
 data pipeline determinism, optimizer, gradient compression, watchdog."""
 import dataclasses
-import json
-import os
 import threading
 import time
 

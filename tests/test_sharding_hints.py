@@ -6,13 +6,11 @@ import subprocess
 import sys
 import textwrap
 
-REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
-
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import sharding_ctx
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
 def test_hint_noop_without_rules():

@@ -3,7 +3,6 @@ smoke configs — train (with checkpoint/resume continuity), serve (bf16 and
 PUD bit-plane paths), and the device-plane quickstart pipeline."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import serve as serve_mod
@@ -77,8 +76,9 @@ def test_quickstart_pipeline_device_plane():
     ecr_t, _ = measure_ecr_maj5(
         k_t, sense, levels_to_charges(lad, lv, params), params,
         lad.n_fracs, n_trials=2048)
-    tp = lambda e: throughput_ops(
-        maj5_standalone_counts(3), (1 - e) * system.n_cols_per_subarray,
-        system)
+    def tp(e):
+        return throughput_ops(
+            maj5_standalone_counts(3), (1 - e) * system.n_cols_per_subarray,
+            system)
     assert ecr_t < ecr_b / 4
     assert 1.4 < tp(ecr_t) / tp(ecr_b) < 2.4   # paper: 1.81x
