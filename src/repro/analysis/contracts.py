@@ -40,7 +40,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.kernels.ops import B_BLOCK, K_BLOCK, N_BLOCK, largest_divisor
+from repro.kernels.ops import (B_BLOCK, K_BLOCK, N_BLOCK, heuristic_block,
+                               largest_divisor)
 
 from .errors import ContractViolation
 
@@ -86,6 +87,11 @@ class KernelCall:
     window: int | None = None      # physical window length W (placed)
     window_block: int | None = None
     mode: str = "folded"
+    # Tuned tile overrides (kernels/autotune.py); None = the divisor
+    # heuristic the wrappers default to.
+    b_block: int | None = None
+    n_block: int | None = None
+    k_block: int | None = None
 
     @property
     def placed(self) -> bool:
@@ -134,7 +140,12 @@ class TilePlan:
 
 
 def _k_plan(call: KernelCall) -> tuple[int, int, int]:
-    """Replicates ``bitplane_gemv._k_tiling``: (plane_kb, x_kb, k_steps)."""
+    """Replicates ``bitplane_gemv._k_tiling``: (plane_kb, x_kb, k_steps).
+
+    ``k_steps`` counts padded grid steps — an explicit ``k_block`` (or the
+    degenerate-tile pow2 fallback) pads the reduction axis with zeros, which
+    contribute nothing to the integer dot products.
+    """
     kernel = call.kernel
     if call.layout == "bitpack8":
         kw = call.resolved_plane_k()
@@ -149,8 +160,16 @@ def _k_plan(call: KernelCall) -> tuple[int, int, int]:
                 f"stored word count Kw={kw} != ceil(K/8)="
                 f"{-(-call.k // 8)} for K={call.k} — the pack was not "
                 "built by pack_plane_words")
-        kwb = largest_divisor(kw, K_BLOCK // 8)
-        return kwb, kwb * 8, kw // kwb
+        if call.k_block is not None:
+            if call.k_block <= 0 or call.k_block % 8:
+                raise ContractViolation(
+                    kernel, "tile-plan",
+                    f"bitpack8 k_block {call.k_block} must be a positive "
+                    "multiple of 8 (whole word rows)")
+            kwb = call.k_block // 8
+        else:
+            kwb = heuristic_block(kw, K_BLOCK // 8)
+        return kwb, kwb * 8, -(-kw // kwb)
     if call.layout != "dense":
         raise ContractViolation(
             kernel, "layout",
@@ -159,15 +178,31 @@ def _k_plan(call: KernelCall) -> tuple[int, int, int]:
         raise ContractViolation(
             kernel, "k-mismatch",
             f"x K={call.k} vs planes K={call.resolved_plane_k()}")
-    kb = largest_divisor(call.k, K_BLOCK)
-    return kb, kb, call.k // kb
+    if call.k_block is not None:
+        if call.k_block <= 0:
+            raise ContractViolation(
+                kernel, "tile-plan",
+                f"k_block {call.k_block} must be positive")
+        kb = call.k_block
+    else:
+        kb = heuristic_block(call.k, K_BLOCK)
+    return kb, kb, -(-call.k // kb)
 
 
-def _n_plan(call: KernelCall) -> tuple[int, int, int | None]:
-    """Replicates the wrappers' N/window tiling: (nb, block_cols, pwb)."""
+def _n_plan(call: KernelCall) -> tuple[int, int, int | None, int]:
+    """Replicates the wrappers' N/window tiling:
+    (nb, block_cols, pwb, n_pad)."""
     kernel = call.kernel
     if not call.placed:
-        return largest_divisor(call.n, N_BLOCK), call.n, None
+        if call.n_block is not None:
+            if call.n_block <= 0:
+                raise ContractViolation(
+                    kernel, "tile-plan",
+                    f"n_block {call.n_block} must be positive")
+            nb = call.n_block
+        else:
+            nb = heuristic_block(call.n, N_BLOCK)
+        return nb, call.n, None, -(-call.n // nb) * nb
     w_len = call.window
     pwb = call.window_block or w_len
     if pwb <= 0 or w_len % pwb or call.n % (w_len // pwb):
@@ -182,7 +217,16 @@ def _n_plan(call: KernelCall) -> tuple[int, int, int | None]:
             kernel, "window-capacity",
             f"window_block {pwb} cannot hold {block_cols} logical columns "
             f"per block ({n_blocks} blocks for N={call.n})")
-    return largest_divisor(block_cols, N_BLOCK), block_cols, pwb
+    if call.n_block is not None:
+        if call.n_block <= 0 or block_cols % call.n_block:
+            raise ContractViolation(
+                kernel, "tile-plan",
+                f"placed n_block {call.n_block} must divide the "
+                f"{block_cols} logical columns per window block")
+        nb = call.n_block
+    else:
+        nb = largest_divisor(block_cols, N_BLOCK)
+    return nb, block_cols, pwb, call.n
 
 
 def plan_kernel(call: KernelCall) -> TilePlan:
@@ -201,21 +245,31 @@ def plan_kernel(call: KernelCall) -> TilePlan:
             f"non-positive dimension in B={call.b} K={call.k} N={call.n} "
             f"WB={call.wb}")
     plane_kb, x_kb, k_steps = _k_plan(call)
-    nb, block_cols, pwb = _n_plan(call)
+    nb, block_cols, pwb, n_pad = _n_plan(call)
 
     if call.entry == "gemm":
-        bb = min(call.b, B_BLOCK)
+        if call.b_block is not None and call.b_block <= 0:
+            raise ContractViolation(
+                call.kernel, "tile-plan",
+                f"b_block {call.b_block} must be positive")
+        bb = (min(call.b_block, call.b) if call.b_block is not None
+              else min(call.b, B_BLOCK))
         bp = -(-call.b // bb) * bb                    # zero-row batch pad
-        grid: tuple[int, ...] = (bp // bb, call.n // nb, k_steps)
+        grid: tuple[int, ...] = (bp // bb, n_pad // nb, k_steps)
     else:
+        if call.b_block is not None:
+            raise ContractViolation(
+                call.kernel, "tile-plan",
+                "b_block override is meaningless for the gemv entry — it "
+                "keeps the whole batch in one block")
         bb = call.b                                   # whole batch, one block
-        grid = (call.n // nb, k_steps)
+        grid = (n_pad // nb, k_steps)
 
     # Internal consistency of the recomputation itself: the grid must tile
-    # the (padded) operands exactly — divisor selection guarantees it, so a
+    # the (padded) operands exactly — block selection guarantees it, so a
     # failure here means the checker no longer matches the kernels.
     padded_k = plane_kb * k_steps * (8 if call.layout == "bitpack8" else 1)
-    if x_kb * k_steps != padded_k or grid[-2] * nb != call.n:
+    if x_kb * k_steps != padded_k or grid[-2] * nb != n_pad:
         raise ContractViolation(
             call.kernel, "tile-selection",
             f"recomputed tiling does not cover the operand: grid {grid}, "
@@ -300,13 +354,18 @@ def _concrete(a):
 def check_kernel_args(entry: str, x_shape, planes_shape, *,
                       layout: str = "dense", logical_k: int | None = None,
                       col_ids=None, window_block: int | None = None,
-                      mode: str = "folded", wb: int | None = None) -> TilePlan:
+                      mode: str = "folded", wb: int | None = None,
+                      b_block: int | None = None,
+                      n_block: int | None = None,
+                      k_block: int | None = None) -> TilePlan:
     """Pre-flight an actual kernel call from its argument shapes.
 
     This is what ``pud_matmul(check_contracts=True)`` and the ``interpret``
     backend run: shapes in, :class:`TilePlan` out, :class:`ContractViolation`
     on any violated invariant.  ``col_ids`` may be an array (value-checked
     when concrete) or an int column count (shape checks only).
+    ``b_block``/``n_block``/``k_block`` are tuned tile overrides, verified
+    against the same invariants as the derived tiles.
     """
     b, k = int(x_shape[-2]), int(x_shape[-1])
     wb_ = int(wb if wb is not None else planes_shape[-3])
@@ -314,18 +373,77 @@ def check_kernel_args(entry: str, x_shape, planes_shape, *,
     if col_ids is None:
         call = KernelCall(entry=entry, b=b, k=k, n=last, wb=wb_,
                           layout=layout, plane_k=plane_k,
-                          logical_k=logical_k, mode=mode)
+                          logical_k=logical_k, mode=mode, b_block=b_block,
+                          n_block=n_block, k_block=k_block)
         return plan_kernel(call)
     n = col_ids if isinstance(col_ids, int) else int(np.shape(col_ids)[-1])
     call = KernelCall(entry=entry, b=b, k=k, n=n, wb=wb_, layout=layout,
                       plane_k=plane_k, logical_k=logical_k, window=last,
-                      window_block=window_block, mode=mode)
+                      window_block=window_block, mode=mode, b_block=b_block,
+                      n_block=n_block, k_block=k_block)
     plan = plan_kernel(call)
     ids = None if isinstance(col_ids, int) else _concrete(col_ids)
     if ids is not None:
         check_col_ids(ids, n, last, window_block, plan.block_cols,
                       call.kernel)
     return plan
+
+
+def _plan_field(plan, field):
+    if isinstance(plan, dict):
+        return plan.get(field)
+    return getattr(plan, field, None)
+
+
+def check_tile_plan(plan, entry: str, x_shape, planes_shape, *,
+                    layout: str = "dense", logical_k: int | None = None,
+                    col_ids=None, window_block: int | None = None,
+                    mode: str = "folded", wb: int | None = None) -> TilePlan:
+    """Pre-flight an externally-supplied tuned tile plan.
+
+    ``plan`` carries ``b_block``/``n_block``/``k_block``/``window_block``/
+    ``mode`` fields (a ``kernels.autotune.TunedTile`` or a plain dict — a
+    tuning-cache entry deserializes to either); the remaining arguments
+    describe the call exactly like :func:`check_kernel_args`, with
+    ``window_block`` naming the *pack's* block-aligned stride.
+
+    A tuned ``window_block`` must be a whole multiple of the pack stride
+    whose multiplier divides the block count — grouping c adjacent window
+    blocks keeps every column's in-block residue arithmetic exact (column t
+    of logical block r inside a group starts at residue ``r*pwb + t``).
+    Anything else would silently gather the wrong physical columns, so it
+    raises ``ContractViolation('window-stride')`` here, before any kernel
+    runs.  All other overrides flow through the same invariants as derived
+    tiles (:func:`check_kernel_args`), including the VMEM budget gate.
+    """
+    tuned_wb = _plan_field(plan, "window_block")
+    eff_window_block = window_block
+    if tuned_wb is not None:
+        if col_ids is None:
+            raise ContractViolation(
+                _KERNEL_NAMES[(entry, False)], "tile-plan",
+                f"window_block override {tuned_wb} on a logical "
+                "(non-placed) call")
+        kernel = _KERNEL_NAMES[(entry, True)]
+        w_len = int(planes_shape[-1])
+        pack_wb = window_block or w_len
+        n_blocks = w_len // pack_wb if pack_wb and w_len % pack_wb == 0 else 0
+        if (tuned_wb <= 0 or tuned_wb % pack_wb
+                or n_blocks % (tuned_wb // pack_wb)):
+            raise ContractViolation(
+                kernel, "window-stride",
+                f"tuned window_block {tuned_wb} must be a multiple of the "
+                f"pack stride {pack_wb} whose multiplier divides the "
+                f"{n_blocks} window blocks — the placed layout is fixed "
+                "at pack time")
+        eff_window_block = tuned_wb
+    return check_kernel_args(
+        entry, x_shape, planes_shape, layout=layout, logical_k=logical_k,
+        col_ids=col_ids, window_block=eff_window_block,
+        mode=_plan_field(plan, "mode") or mode, wb=wb,
+        b_block=_plan_field(plan, "b_block"),
+        n_block=_plan_field(plan, "n_block"),
+        k_block=_plan_field(plan, "k_block"))
 
 
 def check_pack(pt, batch: int = 1, entry: str | None = None,
@@ -427,6 +545,13 @@ def adversarial_fixtures() -> list[tuple[str, str, KernelCall,
          KernelCall(entry="gemv", b=8, k=2048, n=256, window=1 << 16,
                     window_block=None),
          np.arange(256, dtype=np.int32) * 17),
+        # A tuned tile is not exempt from the budget: the autotuner's
+        # candidate filter must reject this, exactly as plan_kernel does.
+        ("over-budget-tuned-tile", "vmem-budget",
+         KernelCall(entry="gemm", b=128, k=4096, n=4096, b_block=128,
+                    n_block=4096, k_block=4096), None),
+        ("degenerate-negative-tile", "tile-plan",
+         KernelCall(entry="gemv", b=1, k=256, n=512, n_block=-64), None),
         ("unknown-layout", "layout",
          KernelCall(entry="gemv", b=1, k=64, n=64, layout="bitpack4"),
          None),

@@ -1,0 +1,322 @@
+"""Kernel autotuner: search the tile/strategy space, keep only what wins.
+
+The four bit-plane entry points pick block sizes with a *correctness*
+heuristic (`largest_divisor`, degenerate-safe since the pow2 fallback) and
+take the unpack strategy (``planes`` vs ``folded``) as a caller choice.
+BENCH_kernels.json shows the winners flip between logical and placed
+layouts, so a static choice leaves measured tokens/s on the table — the
+same observation Proteus makes for PUD execution configs (PAPERS.md): adapt
+the configuration to the workload instead of fixing it per tensor.
+
+This module is the search half of that loop:
+
+  * :class:`TunedTile` — a frozen, hashable tile plan (``b_block`` /
+    ``n_block`` / ``k_block`` / ``window_block`` / ``mode``; None fields
+    defer to the kernel's own heuristic), serializable for the persistent
+    :class:`repro.runtime.tune.TuningCache`.
+  * :func:`candidate_plans` — the search space: divisor and padded
+    power-of-two blocks around the MXU-aligned caps, window-block grouping
+    multiples for placed packs, both unpack modes.  Every candidate is
+    pre-validated through ``analysis.contracts.check_tile_plan`` so no
+    candidate can violate the 4 MiB VMEM gate (or any other kernel
+    invariant) — invalid geometry is pruned, not timed.
+  * :func:`tune_kernel` — warmup + ``block_until_ready`` median timing of
+    each surviving candidate on a real operand set, cross-checking every
+    candidate's output bit-exact against the heuristic plan (all tiles and
+    modes compute the identical integer result; a mismatch is a kernel bug
+    and raises).  The heuristic plan itself is always candidate #0, so the
+    tuned winner is never slower than the fallback by construction.
+
+The persistence half (cache files, fingerprints, CLI) lives in
+``repro/runtime/tune.py``; the consumption half is ``ops.pud_matmul(...,
+tile_plan=)`` / ``PUDSession.tune()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.errors import ContractViolation
+
+from .backends import get_backend
+from .bitplane_gemm import B_BLOCK
+from .bitplane_gemv import K_BLOCK, N_BLOCK, _largest_divisor, _pow2_block
+
+MODES = ("planes", "folded")
+
+#: Search-space fields of one plan, in serialization order.
+PLAN_FIELDS = ("b_block", "n_block", "k_block", "window_block", "mode")
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedTile:
+    """One execution plan for a bit-plane kernel call.
+
+    Every field is optional: None defers to the kernel wrapper's built-in
+    heuristic, so ``TunedTile()`` *is* the heuristic plan (the cold-start
+    fallback).  Frozen and hashable — packs carry plans inside their jit
+    static aux data.  ``k_block`` is in logical-K units (a multiple of 8
+    for bit-packed packs, naming whole word rows); ``window_block`` must be
+    a multiple of the pack's placed stride (``contracts.check_tile_plan``
+    enforces it).
+    """
+
+    b_block: int | None = None
+    n_block: int | None = None
+    k_block: int | None = None
+    window_block: int | None = None
+    mode: str | None = None
+
+    def is_default(self) -> bool:
+        return all(getattr(self, f) is None for f in PLAN_FIELDS)
+
+    def to_dict(self) -> dict:
+        return {f: getattr(self, f) for f in PLAN_FIELDS
+                if getattr(self, f) is not None}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TunedTile":
+        unknown = set(d) - set(PLAN_FIELDS)
+        if unknown:
+            raise ValueError(f"unknown TunedTile fields {sorted(unknown)}")
+        return cls(**d)
+
+
+def plan_for_entry(tile_plan, entry: str) -> TunedTile | None:
+    """Resolve a pack-level ``tile_plan`` stamp for one entry point.
+
+    Packs carry either a single :class:`TunedTile` (both entries share it)
+    or a tuple of ``(entry, TunedTile)`` pairs keyed ``"gemv"``/``"gemm"``
+    (hashable, so it can ride in jit-static aux data).  Returns None when
+    no plan applies — the caller falls back to the heuristic.
+    """
+    if tile_plan is None:
+        return None
+    if isinstance(tile_plan, TunedTile):
+        return tile_plan
+    for key, plan in tile_plan:
+        if key == entry:
+            return plan
+    return None
+
+
+def tuning_key(entry: str, b: int, k: int, n: int, wb: int,
+               layout: str, placed: bool) -> str:
+    """Cache key of one tuning problem: the full (kernel, layout, format,
+    shape) coordinate.  ``mode`` is searched, not keyed — every mode is
+    bit-exact, so the winner subsumes the choice."""
+    kind = "placed" if placed else "logical"
+    return f"{entry}__{kind}__{layout}__{b}x{k}x{n}@{wb}b"
+
+
+def median_time(fn, *, warmup: int = 1, reps: int = 3):
+    """(median seconds, last output) of ``fn()`` with compile warmup and
+    ``block_until_ready`` around every timed call."""
+    out = None
+    for _ in range(max(warmup, 1)):
+        out = jax.block_until_ready(fn())
+    times = []
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2], out
+
+
+def _block_choices(dim: int, cap: int, *, step: int = 1) -> list[int]:
+    """Candidate block sizes for one axis: divisors at a few caps plus the
+    padded power-of-two, all multiples of ``step`` (8 for the bitpack8
+    K axis), deduplicated and sorted."""
+    caps = sorted({cap, cap // 2, cap // 4})
+    out = set()
+    for c in caps:
+        if c >= step:
+            d = _largest_divisor(dim, c)
+            if d % step == 0:
+                out.add(d)
+    p = _pow2_block(dim, cap)
+    if p % step == 0:
+        out.add(p)
+    if dim <= cap and dim % step == 0:
+        out.add(dim)
+    return sorted(b for b in out if b > 0)
+
+
+def candidate_plans(entry: str, b: int, k: int, n: int, *,
+                    layout: str = "dense", placed_window: int | None = None,
+                    pack_window_block: int | None = None,
+                    mode: str = "folded") -> list[TunedTile]:
+    """The search space for one tuning key, heuristic plan first.
+
+    Geometry candidates come from divisors at halved caps and the padded
+    power-of-two block per axis; placed packs additionally try grouping
+    2 or 4 adjacent window blocks per grid step (the only strides the
+    block-aligned layout admits without repacking).  Both unpack modes are
+    crossed with the geometry.  The list is an upper bound — the caller
+    prunes through ``contracts.check_tile_plan`` before timing.
+    """
+    k_step = 8 if layout == "bitpack8" else 1
+    nbs: list[int | None] = [None]
+    kbs: list[int | None] = [None]
+    if placed_window and pack_window_block:
+        # Placed N-tiles must divide the per-window logical column count.
+        block_cols = n // (placed_window // pack_window_block)
+        nbs += [v for v in _block_choices(block_cols, N_BLOCK)
+                if block_cols % v == 0]
+    else:
+        nbs += _block_choices(n, N_BLOCK)
+    kbs += _block_choices(k, K_BLOCK, step=k_step)
+    wbs: list[int | None] = [None]
+    if placed_window and pack_window_block:
+        n_blocks = placed_window // pack_window_block
+        wbs += [c * pack_window_block for c in (2, 4)
+                if n_blocks % c == 0 and c < n_blocks]
+    bbs: list[int | None] = [None]
+    if entry == "gemm":
+        bbs += [v for v in _block_choices(b, B_BLOCK) if v != b]
+
+    plans: list[TunedTile] = []
+    seen = set()
+    for m in (None, *(mm for mm in MODES if mm != mode)):
+        for bb in bbs:
+            for nb in nbs:
+                for kb in kbs:
+                    for wblk in wbs:
+                        plan = TunedTile(b_block=bb, n_block=nb, k_block=kb,
+                                         window_block=wblk, mode=m)
+                        if plan not in seen:
+                            seen.add(plan)
+                            plans.append(plan)
+    return plans
+
+
+def valid_candidates(plans, entry: str, x_shape, planes_shape, *,
+                     layout: str = "dense", logical_k: int | None = None,
+                     col_ids=None, window_block: int | None = None,
+                     mode: str = "folded") -> list[TunedTile]:
+    """Filter candidates through the static contract checker: every plan
+    the tuner will time has already passed the same tile/layout/VMEM
+    invariants a derived plan must satisfy."""
+    # Deferred: analysis.contracts imports kernels.ops, which imports this
+    # module at its own top level.
+    from repro.analysis.contracts import check_tile_plan
+
+    out = []
+    for plan in plans:
+        try:
+            check_tile_plan(plan, entry, x_shape, planes_shape,
+                            layout=layout, logical_k=logical_k,
+                            col_ids=col_ids, window_block=window_block,
+                            mode=mode)
+        except ContractViolation:
+            continue
+        out.append(plan)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    """Outcome of one tuning run: the winning plan plus the evidence."""
+
+    key: str
+    plan: TunedTile
+    tuned_s: float
+    heuristic_s: float
+    n_candidates: int
+
+    @property
+    def speedup(self) -> float:
+        return self.heuristic_s / self.tuned_s if self.tuned_s > 0 else 1.0
+
+    def to_stats(self) -> dict:
+        return {"tuned_s": self.tuned_s, "heuristic_s": self.heuristic_s,
+                "speedup": self.speedup, "n_candidates": self.n_candidates}
+
+
+def _call_kwargs(plan: TunedTile, entry: str) -> dict:
+    kw = {}
+    if plan.n_block is not None:
+        kw["n_block"] = plan.n_block
+    if plan.k_block is not None:
+        kw["k_block"] = plan.k_block
+    if entry == "gemm" and plan.b_block is not None:
+        kw["b_block"] = plan.b_block
+    return kw
+
+
+def tune_kernel(entry: str, x, planes, *, col_ids=None,
+                window_block: int | None = None, layout: str = "dense",
+                logical_k: int | None = None, mode: str = "folded",
+                backend: str = "pallas", warmup: int = 1, reps: int = 3,
+                max_candidates: int = 16) -> TuneResult:
+    """Time every valid candidate on real operands; return the winner.
+
+    The heuristic plan (``TunedTile()``) is always timed first, so the
+    result's ``plan`` is never slower than the fallback *as measured here*.
+    Every candidate's output is cross-checked bit-exact against the
+    heuristic's — tiles and modes are execution choices, never numeric
+    ones — and a mismatch raises ``ContractViolation`` naming the plan.
+    """
+    if entry not in ("gemv", "gemm"):
+        raise ContractViolation("autotune", "entry",
+                                f"unknown entry {entry!r}")
+    b, k = int(x.shape[0]), int(x.shape[1])
+    wb, n = int(planes.shape[0]), int(planes.shape[-1])
+    placed = col_ids is not None
+    if placed:
+        n = int(col_ids.shape[-1])
+    key = tuning_key(entry, b, k, n, wb, layout, placed)
+    plans = candidate_plans(
+        entry, b, k, n, layout=layout,
+        placed_window=int(planes.shape[-1]) if placed else None,
+        pack_window_block=(window_block or int(planes.shape[-1]))
+        if placed else None, mode=mode)
+    plans = valid_candidates(
+        plans, entry, x.shape, planes.shape, layout=layout,
+        logical_k=logical_k, col_ids=col_ids, window_block=window_block,
+        mode=mode)[:max_candidates]
+    if not plans or not plans[0].is_default():
+        raise ContractViolation(
+            "autotune", "tile-plan",
+            f"heuristic plan invalid for {key} — the fallback itself "
+            "violates a kernel contract")
+
+    be = get_backend(backend)
+    layout_kw = {}
+    if layout != "dense":
+        layout_kw = {"layout": layout, "logical_k": logical_k}
+
+    def run(plan: TunedTile):
+        m = plan.mode or mode
+        kw = dict(layout_kw, **_call_kwargs(plan, entry))
+        if placed:
+            pwb = plan.window_block or window_block
+            if pwb is not None:
+                kw["window_block"] = pwb
+            fn = be.matmul_placed if entry == "gemm" else be.gemv_placed
+            return fn(x, planes, col_ids, m, **kw)
+        fn = be.matmul if entry == "gemm" else be.gemv
+        return fn(x, planes, m, **kw)
+
+    best = None
+    oracle = None
+    heuristic_s = None
+    for plan in plans:
+        t, out = median_time(lambda p=plan: run(p), warmup=warmup,
+                             reps=reps)
+        if oracle is None:
+            oracle = out
+            heuristic_s = t
+        elif not bool(jnp.array_equal(out, oracle)):
+            raise ContractViolation(
+                "autotune", "bit-exactness",
+                f"candidate {plan.to_dict()} for {key} diverges from the "
+                "heuristic plan's output")
+        if best is None or t < best[0]:
+            best = (t, plan)
+    return TuneResult(key=key, plan=best[1], tuned_s=best[0],
+                      heuristic_s=heuristic_s, n_candidates=len(plans))

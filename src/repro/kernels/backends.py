@@ -111,33 +111,45 @@ def _pallas_entries(interpret, check=False):
             from repro.analysis.contracts import check_kernel_args
             check_kernel_args(entry, x.shape, planes.shape, **kw)
 
-    def gemv(x, planes, mode="folded", *, layout="dense", logical_k=None):
+    def gemv(x, planes, mode="folded", *, layout="dense", logical_k=None,
+             n_block=None, k_block=None):
         preflight("gemv", x, planes, layout=layout, logical_k=logical_k,
-                  mode=mode)
+                  mode=mode, n_block=n_block, k_block=k_block)
         return bitplane_gemv(x, planes, mode=mode, interpret=interpret(),
-                             layout=layout, logical_k=logical_k)
+                             layout=layout, logical_k=logical_k,
+                             n_block=n_block, k_block=k_block)
 
     def gemv_placed(x, planes, col_ids, mode="folded", *, layout="dense",
-                    logical_k=None, window_block=None):
+                    logical_k=None, window_block=None, n_block=None,
+                    k_block=None):
         preflight("gemv", x, planes, layout=layout, logical_k=logical_k,
-                  col_ids=col_ids, window_block=window_block, mode=mode)
+                  col_ids=col_ids, window_block=window_block, mode=mode,
+                  n_block=n_block, k_block=k_block)
         return bitplane_gemv_placed(
             x, planes, col_ids, mode=mode, interpret=interpret(),
-            layout=layout, logical_k=logical_k, window_block=window_block)
+            layout=layout, logical_k=logical_k, window_block=window_block,
+            n_block=n_block, k_block=k_block)
 
-    def gemm(x, planes, mode="folded", *, layout="dense", logical_k=None):
+    def gemm(x, planes, mode="folded", *, layout="dense", logical_k=None,
+             b_block=None, n_block=None, k_block=None):
         preflight("gemm", x, planes, layout=layout, logical_k=logical_k,
-                  mode=mode)
+                  mode=mode, b_block=b_block, n_block=n_block,
+                  k_block=k_block)
         return bitplane_gemm(x, planes, mode=mode, interpret=interpret(),
-                             layout=layout, logical_k=logical_k)
+                             layout=layout, logical_k=logical_k,
+                             b_block=b_block, n_block=n_block,
+                             k_block=k_block)
 
     def gemm_placed(x, planes, col_ids, mode="folded", *, layout="dense",
-                    logical_k=None, window_block=None):
+                    logical_k=None, window_block=None, b_block=None,
+                    n_block=None, k_block=None):
         preflight("gemm", x, planes, layout=layout, logical_k=logical_k,
-                  col_ids=col_ids, window_block=window_block, mode=mode)
+                  col_ids=col_ids, window_block=window_block, mode=mode,
+                  b_block=b_block, n_block=n_block, k_block=k_block)
         return bitplane_gemm_placed(
             x, planes, col_ids, mode=mode, interpret=interpret(),
-            layout=layout, logical_k=logical_k, window_block=window_block)
+            layout=layout, logical_k=logical_k, window_block=window_block,
+            b_block=b_block, n_block=n_block, k_block=k_block)
 
     return gemv, gemv_placed, gemm, gemm_placed
 
@@ -150,7 +162,10 @@ def _densify(planes, layout, logical_k):
     return planes
 
 
-def _ref_gemv(x, planes, mode="folded", *, layout="dense", logical_k=None):
+def _ref_gemv(x, planes, mode="folded", *, layout="dense", logical_k=None,
+              b_block=None, n_block=None, k_block=None):
+    # Tile overrides are execution hints; the oracle's numerics ignore them
+    # (bit-exactness across tuned and heuristic tiles rests on this).
     planes = _densify(planes, layout, logical_k)
     if layout == "bitpack8" and planes.shape[1] != x.shape[1]:
         x = jnp.pad(x, ((0, 0), (0, planes.shape[1] - x.shape[1])))
@@ -158,7 +173,8 @@ def _ref_gemv(x, planes, mode="folded", *, layout="dense", logical_k=None):
 
 
 def _ref_gemv_placed(x, planes, col_ids, mode="folded", *, layout="dense",
-                     logical_k=None, window_block=None):
+                     logical_k=None, window_block=None, b_block=None,
+                     n_block=None, k_block=None):
     planes = _densify(planes, layout, logical_k)
     if layout == "bitpack8" and planes.shape[1] != x.shape[1]:
         x = jnp.pad(x, ((0, 0), (0, planes.shape[1] - x.shape[1])))

@@ -44,7 +44,7 @@ from repro.analysis.errors import ContractViolation
 # grid position 2 (after the new batch axis); only the grid/BlockSpec
 # plumbing differs.
 from .bitplane_gemv import (_gemv_kernel, _gemv_placed_kernel, _k_tiling,
-                            _largest_divisor, _sign_fix)
+                            _n_tiling, _placed_n_block, _sign_fix)
 
 B_BLOCK = 128
 K_BLOCK = 256
@@ -58,9 +58,21 @@ def _pad_batch(x: jax.Array, bb: int) -> jax.Array:
     return jnp.pad(x, ((0, bb - b % bb), (0, 0)))
 
 
+def _batch_block(b: int, b_block: int | None, kernel: str) -> int:
+    """Batch tile: an explicit tuned block (ragged batches pad with zero
+    rows, sliced off after the kernel) or the VMEM-bounded default."""
+    if b_block is None:
+        return min(b, B_BLOCK)
+    if b_block <= 0:
+        raise ContractViolation(
+            kernel, "tile-plan", f"b_block {b_block} must be positive")
+    return min(b_block, b)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("mode", "interpret", "layout", "logical_k"))
+    static_argnames=("mode", "interpret", "layout", "logical_k",
+                     "b_block", "n_block", "k_block"))
 def bitplane_gemm(
     x: jax.Array,        # [B, K] int8 activations (any B, padded here)
     planes: jax.Array,   # [WB, K, N] int8 bits | [WB, K/8, N] uint8 words
@@ -68,18 +80,26 @@ def bitplane_gemm(
     interpret: bool = True,
     layout: str = "dense",
     logical_k: int | None = None,
+    b_block: int | None = None,
+    n_block: int | None = None,
+    k_block: int | None = None,
 ) -> jax.Array:
     """Batched offset-binary bit-plane GEMM; returns [B, N] int32 of
-    x @ (W - 2^{WB-1}).  Bit-exact vs ``bitplane_gemv`` row by row."""
+    x @ (W - 2^{WB-1}).  Bit-exact vs ``bitplane_gemv`` row by row.
+    ``b_block``/``n_block``/``k_block`` are tuned tile overrides
+    (kernels/autotune.py); non-multiple shapes pad with zeros."""
     b, k = x.shape
     wb, _, n = planes.shape
-    xp, pkb, xkb, k_steps = _k_tiling(x, planes, layout, logical_k,
-                                      kernel="bitplane_gemm")
-    nb = _largest_divisor(n, N_BLOCK)
-    bb = min(b, B_BLOCK)
+    xp, pp, pkb, xkb, k_steps = _k_tiling(x, planes, layout, logical_k,
+                                          kernel="bitplane_gemm",
+                                          k_block=k_block)
+    nb, n_pad = _n_tiling(n, n_block, "bitplane_gemm")
+    if n_pad != n:                       # zero columns, sliced off below
+        pp = jnp.pad(pp, ((0, 0), (0, 0), (0, n_pad - n)))
+    bb = _batch_block(b, b_block, "bitplane_gemm")
     xp = _pad_batch(xp, bb)
     bp = xp.shape[0]
-    grid = (bp // bb, n // nb, k_steps)
+    grid = (bp // bb, n_pad // nb, k_steps)
     kernel = functools.partial(_gemv_kernel, mode=mode, n_bits=wb, k_axis=2,
                                packed=(layout == "bitpack8"))
     unsigned = pl.pallas_call(
@@ -90,16 +110,16 @@ def bitplane_gemm(
             pl.BlockSpec((wb, pkb, nb), lambda jb, jn, jk: (0, jk, jn)),
         ],
         out_specs=pl.BlockSpec((bb, nb), lambda jb, jn, jk: (jb, jn)),
-        out_shape=jax.ShapeDtypeStruct((bp, n), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((bp, n_pad), jnp.int32),
         interpret=interpret,
-    )(xp, planes)
-    return unsigned[:b] - _sign_fix(x, wb)
+    )(xp, pp)
+    return unsigned[:b, :n] - _sign_fix(x, wb)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("mode", "interpret", "layout", "logical_k",
-                     "window_block"))
+                     "window_block", "b_block", "n_block", "k_block"))
 def bitplane_gemm_placed(
     x: jax.Array,         # [B, K] int8 activations
     planes: jax.Array,    # [WB, K(/8), W] physical window (placed layout)
@@ -109,6 +129,9 @@ def bitplane_gemm_placed(
     layout: str = "dense",
     logical_k: int | None = None,
     window_block: int | None = None,
+    b_block: int | None = None,
+    n_block: int | None = None,
+    k_block: int | None = None,
 ) -> jax.Array:
     """Column-placed batched GEMM; returns [B, N] like ``bitplane_gemm``.
 
@@ -122,8 +145,9 @@ def bitplane_gemm_placed(
     b, k = x.shape
     wb, _, w_len = planes.shape
     (n,) = col_ids.shape
-    xp, pkb, xkb, k_steps = _k_tiling(x, planes, layout, logical_k,
-                                      kernel="bitplane_gemm_placed")
+    xp, pp, pkb, xkb, k_steps = _k_tiling(x, planes, layout, logical_k,
+                                          kernel="bitplane_gemm_placed",
+                                          k_block=k_block)
     pwb = window_block or w_len
     if w_len % pwb or n % (w_len // pwb):
         raise ContractViolation(
@@ -131,8 +155,8 @@ def bitplane_gemm_placed(
             f"window length {w_len} / window_block {pwb} does not tile "
             f"N={n}")
     block_cols = n // (w_len // pwb)
-    nb = _largest_divisor(block_cols, N_BLOCK)
-    bb = min(b, B_BLOCK)
+    nb = _placed_n_block(n_block, block_cols, "bitplane_gemm_placed")
+    bb = _batch_block(b, b_block, "bitplane_gemm_placed")
     xp = _pad_batch(xp, bb)
     bp = xp.shape[0]
     grid = (bp // bb, n // nb, k_steps)
@@ -153,5 +177,5 @@ def bitplane_gemm_placed(
         out_specs=pl.BlockSpec((bb, nb), lambda jb, jn, jk: (jb, jn)),
         out_shape=jax.ShapeDtypeStruct((bp, n), jnp.int32),
         interpret=interpret,
-    )(xp, col_ids.astype(jnp.int32)[None, :], planes)
+    )(xp, col_ids.astype(jnp.int32)[None, :], pp)
     return unsigned[:b] - _sign_fix(x, wb)

@@ -63,6 +63,12 @@ N_BLOCK = 256
 
 LAYOUTS = ("dense", "bitpack8")
 
+#: Smallest useful block width: a dimension whose largest divisor under the
+#: cap falls below this (a prime N or K, e.g. 509 or 127) would serialize
+#: the grid into 1-wide tiles, so the heuristic pads to a power-of-two
+#: block instead.
+DEGENERATE_TILE_FLOOR = 8
+
 
 def _largest_divisor(dim: int, cap: int) -> int:
     """Largest block size <= cap that divides dim (>= 1)."""
@@ -70,6 +76,30 @@ def _largest_divisor(dim: int, cap: int) -> int:
         if dim % d == 0:
             return d
     return 1
+
+
+def _pow2_block(dim: int, cap: int) -> int:
+    """Smallest power of two >= dim, capped at ``cap`` — the padded-block
+    fallback for dimensions without a useful divisor."""
+    p = 1
+    while p < dim and p < cap:
+        p *= 2
+    return p
+
+
+def _heuristic_block(dim: int, cap: int) -> int:
+    """Divisor heuristic with the degenerate-tile fix.
+
+    A dim with no divisor >= :data:`DEGENERATE_TILE_FLOOR` under the cap
+    (prime N or K) used to select 1-wide tiles and silently serialize the
+    grid; it now falls back to a padded power-of-two block (the pad is
+    zeros, which contribute nothing to the integer dot products and are
+    sliced off the output).
+    """
+    d = _largest_divisor(dim, cap)
+    if d < min(dim, DEGENERATE_TILE_FLOOR):
+        return _pow2_block(dim, cap)
+    return d
 
 
 def _unpack_bits(words: jax.Array) -> jax.Array:
@@ -160,17 +190,21 @@ def _sign_fix(x: jax.Array, wb: int) -> jax.Array:
 
 
 def _k_tiling(x: jax.Array, planes: jax.Array, layout: str,
-              logical_k: int | None, kernel: str = "bitplane_gemv"):
+              logical_k: int | None, kernel: str = "bitplane_gemv",
+              k_block: int | None = None):
     """Resolve the K-axis tiling for either storage layout.
 
-    Returns (x_padded, planes_k_block, x_k_block, k_steps): the activation
-    operand (byte-padded for bitpack8 so eight x rows match each word row),
-    the plane/word block height, the matching x block width, and the K grid
-    extent.  Padded x rows are zero, padded word bits are zero, and the
-    sign fix is computed from the un-padded x — so the pad contributes
-    exactly nothing on both sides.  ``kernel`` names the entry point in
-    ``ContractViolation`` errors (the same invariants the static checker in
-    repro/analysis/contracts.py verifies without executing anything).
+    Returns (x_padded, planes_padded, planes_k_block, x_k_block, k_steps):
+    both operands padded so the block tiles them exactly, the plane/word
+    block height, the matching x block width, and the K grid extent.
+    Padded x rows are zero, padded word bits are zero, and the sign fix is
+    computed from the un-padded x — so the pad contributes exactly nothing
+    on both sides.  ``k_block`` is an explicit tuned block in logical-K
+    units (a multiple of 8 for bitpack8, where it names whole word rows);
+    None picks the degenerate-safe divisor heuristic.  ``kernel`` names
+    the entry point in ``ContractViolation`` errors (the same invariants
+    the static checker in repro/analysis/contracts.py verifies without
+    executing anything).
     """
     k = x.shape[1]
     if layout == "bitpack8":
@@ -180,9 +214,21 @@ def _k_tiling(x: jax.Array, planes: jax.Array, layout: str,
                 kernel, "bitpack8-logical-k",
                 f"x K={k} inconsistent with word planes Kw={kw} "
                 f"(logical_k={logical_k})")
-        xp = jnp.pad(x, ((0, 0), (0, kw * 8 - k))) if kw * 8 != k else x
-        kwb = _largest_divisor(kw, K_BLOCK // 8)
-        return xp, kwb, kwb * 8, kw // kwb
+        if k_block is not None:
+            if k_block <= 0 or k_block % 8:
+                raise ContractViolation(
+                    kernel, "tile-plan",
+                    f"bitpack8 k_block {k_block} must be a positive "
+                    "multiple of 8 (whole word rows)")
+            kwb = k_block // 8
+        else:
+            kwb = _heuristic_block(kw, K_BLOCK // 8)
+        kw_pad = -(-kw // kwb) * kwb
+        if kw_pad != kw:                 # zero words unpack to zero bits
+            planes = jnp.pad(planes, ((0, 0), (0, kw_pad - kw), (0, 0)))
+        xp = (jnp.pad(x, ((0, 0), (0, kw_pad * 8 - k)))
+              if kw_pad * 8 != k else x)
+        return xp, planes, kwb, kwb * 8, kw_pad // kwb
     if layout != "dense":
         raise ContractViolation(
             kernel, "layout",
@@ -191,13 +237,53 @@ def _k_tiling(x: jax.Array, planes: jax.Array, layout: str,
         raise ContractViolation(
             kernel, "k-mismatch",
             f"x {tuple(x.shape)} vs planes {tuple(planes.shape)}")
-    kb = _largest_divisor(k, K_BLOCK)
-    return x, kb, kb, k // kb
+    if k_block is not None:
+        if k_block <= 0:
+            raise ContractViolation(
+                kernel, "tile-plan", f"k_block {k_block} must be positive")
+        kb = k_block
+    else:
+        kb = _heuristic_block(k, K_BLOCK)
+    k_pad = -(-k // kb) * kb
+    if k_pad != k:                       # zero x cols x zero plane rows
+        x = jnp.pad(x, ((0, 0), (0, k_pad - k)))
+        planes = jnp.pad(planes, ((0, 0), (0, k_pad - k), (0, 0)))
+    return x, planes, kb, kb, k_pad // kb
+
+
+def _n_tiling(n: int, n_block: int | None, kernel: str) -> tuple[int, int]:
+    """(nb, n_pad) for the logical kernels: an explicit tuned block (the
+    operand pads up to a multiple, pad columns are zero planes sliced off
+    the output) or the degenerate-safe divisor heuristic."""
+    if n_block is not None:
+        if n_block <= 0:
+            raise ContractViolation(
+                kernel, "tile-plan", f"n_block {n_block} must be positive")
+        nb = n_block
+    else:
+        nb = _heuristic_block(n, N_BLOCK)
+    return nb, -(-n // nb) * nb
+
+
+def _placed_n_block(n_block: int | None, block_cols: int,
+                    kernel: str) -> int:
+    """Placed N-tile: an explicit tuned block must divide the per-window
+    logical column count (the placed layout cannot pad the window axis);
+    None keeps the divisor heuristic."""
+    if n_block is None:
+        return _largest_divisor(block_cols, N_BLOCK)
+    if n_block <= 0 or block_cols % n_block:
+        raise ContractViolation(
+            kernel, "tile-plan",
+            f"placed n_block {n_block} must divide the {block_cols} "
+            "logical columns per window block")
+    return n_block
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("mode", "interpret", "layout", "logical_k"))
+    static_argnames=("mode", "interpret", "layout", "logical_k",
+                     "n_block", "k_block"))
 def bitplane_gemv(
     x: jax.Array,        # [B, K] int8 activations
     planes: jax.Array,   # [WB, K, N] int8 bits | [WB, K/8, N] uint8 words
@@ -205,18 +291,26 @@ def bitplane_gemv(
     interpret: bool = True,
     layout: str = "dense",
     logical_k: int | None = None,
+    n_block: int | None = None,
+    k_block: int | None = None,
 ) -> jax.Array:
     """Offset-binary bit-plane GeMV; returns [B, N] int32 of x @ (W - 2^{WB-1}).
 
     ``planes`` encode unsigned u = w + 2^{WB-1}; the signed correction
     subtracts 2^{WB-1} * sum_k x_k per output.  ``layout`` selects dense
     int8 planes or K-axis bit-words (unpacked inside the kernel).
+    ``n_block``/``k_block`` are tuned tile overrides (kernels/autotune.py);
+    non-multiple shapes pad with zeros, which the integer dot products
+    never see.
     """
     b, k = x.shape
     wb, _, n = planes.shape
-    xp, pkb, xkb, k_steps = _k_tiling(x, planes, layout, logical_k)
-    nb = _largest_divisor(n, N_BLOCK)
-    grid = (n // nb, k_steps)
+    xp, pp, pkb, xkb, k_steps = _k_tiling(x, planes, layout, logical_k,
+                                          k_block=k_block)
+    nb, n_pad = _n_tiling(n, n_block, "bitplane_gemv")
+    if n_pad != n:                       # zero columns, sliced off below
+        pp = jnp.pad(pp, ((0, 0), (0, 0), (0, n_pad - n)))
+    grid = (n_pad // nb, k_steps)
     kernel = functools.partial(_gemv_kernel, mode=mode, n_bits=wb,
                                packed=(layout == "bitpack8"))
     unsigned = pl.pallas_call(
@@ -227,16 +321,16 @@ def bitplane_gemv(
             pl.BlockSpec((wb, pkb, nb), lambda jn, jk: (0, jk, jn)),
         ],
         out_specs=pl.BlockSpec((b, nb), lambda jn, jk: (0, jn)),
-        out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((b, n_pad), jnp.int32),
         interpret=interpret,
-    )(xp, planes)
-    return unsigned - _sign_fix(x, wb)
+    )(xp, pp)
+    return unsigned[:, :n] - _sign_fix(x, wb)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("mode", "interpret", "layout", "logical_k",
-                     "window_block"))
+                     "window_block", "n_block", "k_block"))
 def bitplane_gemv_placed(
     x: jax.Array,         # [B, K] int8 activations
     planes: jax.Array,    # [WB, K(/8), W] physical window (placed layout)
@@ -246,6 +340,8 @@ def bitplane_gemv_placed(
     layout: str = "dense",
     logical_k: int | None = None,
     window_block: int | None = None,
+    n_block: int | None = None,
+    k_block: int | None = None,
 ) -> jax.Array:
     """Column-placed bit-plane GeMV; returns [B, N] like ``bitplane_gemv``.
 
@@ -263,8 +359,9 @@ def bitplane_gemv_placed(
     b, k = x.shape
     wb, _, w_len = planes.shape
     (n,) = col_ids.shape
-    xp, pkb, xkb, k_steps = _k_tiling(x, planes, layout, logical_k,
-                                      kernel="bitplane_gemv_placed")
+    xp, pp, pkb, xkb, k_steps = _k_tiling(x, planes, layout, logical_k,
+                                          kernel="bitplane_gemv_placed",
+                                          k_block=k_block)
     pwb = window_block or w_len
     if w_len % pwb or n % (w_len // pwb):
         raise ContractViolation(
@@ -272,7 +369,7 @@ def bitplane_gemv_placed(
             f"window length {w_len} / window_block {pwb} does not tile "
             f"N={n}")
     block_cols = n // (w_len // pwb)
-    nb = _largest_divisor(block_cols, N_BLOCK)
+    nb = _placed_n_block(n_block, block_cols, "bitplane_gemv_placed")
     grid = (n // nb, k_steps)
     kernel = functools.partial(_gemv_placed_kernel, mode=mode, n_bits=wb,
                                packed=(layout == "bitpack8"),
@@ -292,5 +389,5 @@ def bitplane_gemv_placed(
         out_specs=pl.BlockSpec((b, nb), lambda jn, jk: (0, jn)),
         out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
         interpret=interpret,
-    )(xp, col_ids.astype(jnp.int32)[None, :], planes)
+    )(xp, col_ids.astype(jnp.int32)[None, :], pp)
     return unsigned - _sign_fix(x, wb)

@@ -10,10 +10,12 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .autotune import TunedTile, plan_for_entry, tune_kernel, tuning_key
 from .backends import get_backend
 from .bitplane_gemm import B_BLOCK, bitplane_gemm, bitplane_gemm_placed
-from .bitplane_gemv import (K_BLOCK, N_BLOCK, bitplane_gemv,
-                            bitplane_gemv_placed)
+from .bitplane_gemv import (DEGENERATE_TILE_FLOOR, K_BLOCK, N_BLOCK,
+                            bitplane_gemv, bitplane_gemv_placed)
+from .bitplane_gemv import _heuristic_block as heuristic_block
 from .bitplane_gemv import _largest_divisor as largest_divisor
 from .majx import calib_iter_fused, majx_sense
 
@@ -21,11 +23,15 @@ __all__ = [
     "majx_sense", "calib_iter_fused", "bitplane_gemv",
     "bitplane_gemv_placed", "bitplane_gemm", "bitplane_gemm_placed",
     "pud_matmul", "pud_gemv", "quantize_activations",
+    # Autotuner surface (kernels/autotune.py): plans ride packs and the
+    # tuning cache through these names.
+    "TunedTile", "plan_for_entry", "tune_kernel", "tuning_key",
     # Tiling facts re-exported for non-kernel consumers (pud/placement.py,
     # analysis/contracts.py): the kernel implementation modules are private
     # to this package — the repo lint enforces that — so the block
     # constants and the divisor rule travel through this public surface.
-    "B_BLOCK", "K_BLOCK", "N_BLOCK", "largest_divisor",
+    "B_BLOCK", "K_BLOCK", "N_BLOCK", "DEGENERATE_TILE_FLOOR",
+    "largest_divisor", "heuristic_block",
 ]
 
 
@@ -53,6 +59,7 @@ def pud_matmul(
     logical_k: int | None = None,       # un-padded K of a bit-packed pack
     window_block: int | None = None,    # placed window stride (block-aligned)
     check_contracts: bool = False,      # pre-flight analysis/contracts.py
+    tile_plan=None,                     # TunedTile | ((entry, TunedTile), ...)
 ) -> jax.Array:
     """Quantize -> bit-plane GEMM -> dequantize. Returns [B, N] float32.
 
@@ -75,17 +82,37 @@ def pud_matmul(
     bounds, VMEM budget — raising ``ContractViolation`` instead of letting
     a mis-built pack fail deep inside the kernel (the ``interpret``
     backend runs the same check unconditionally).
+
+    ``tile_plan`` is the autotuner hook: a :class:`TunedTile` (or a tuple
+    of ``(entry, TunedTile)`` pairs, resolved after the gemv/gemm dispatch)
+    overriding block sizes / window stride / unpack mode.  Plans are
+    execution choices only — every plan computes the identical result
+    (kernels/autotune.py enforces it at tuning time); cold-start (no plan)
+    falls back to the divisor heuristic unchanged.
     """
     xq, x_scale = quantize_activations(x)
     be = get_backend(backend or ("interpret" if interpret else "pallas"))
     batched = xq.shape[0] > 1
+    entry = "gemm" if batched else "gemv"
+    plan = plan_for_entry(tile_plan, entry)
+    eff_mode = (plan.mode or mode) if plan is not None else mode
+    eff_window_block = window_block
+    if plan is not None and plan.window_block is not None:
+        eff_window_block = plan.window_block
     if check_contracts:
-        from repro.analysis.contracts import check_kernel_args
+        from repro.analysis.contracts import (check_kernel_args,
+                                              check_tile_plan)
 
-        check_kernel_args(
-            "gemm" if batched else "gemv", xq.shape, planes.shape,
-            layout=layout, logical_k=logical_k, col_ids=col_ids,
-            window_block=window_block, mode=mode)
+        if plan is not None:
+            check_tile_plan(
+                plan, entry, xq.shape, planes.shape, layout=layout,
+                logical_k=logical_k, col_ids=col_ids,
+                window_block=window_block, mode=mode)
+        else:
+            check_kernel_args(
+                entry, xq.shape, planes.shape,
+                layout=layout, logical_k=logical_k, col_ids=col_ids,
+                window_block=window_block, mode=mode)
     # Layout kwargs only travel when they carry information: a legacy dense
     # pack dispatches through the pre-refactor 3-arg entry signature, so
     # custom backends registered against it keep working (bit-packed packs
@@ -93,14 +120,22 @@ def pud_matmul(
     kw = {}
     if layout != "dense":
         kw = {"layout": layout, "logical_k": logical_k}
+    if plan is not None:
+        if plan.n_block is not None:
+            kw["n_block"] = plan.n_block
+        if plan.k_block is not None:
+            kw["k_block"] = plan.k_block
+        if batched and plan.b_block is not None:
+            kw["b_block"] = plan.b_block
     if col_ids is not None:
-        if window_block is not None:
-            kw["window_block"] = window_block
-        acc = (be.matmul_placed(xq, planes, col_ids, mode, **kw) if batched
-               else be.gemv_placed(xq, planes, col_ids, mode, **kw))
+        if eff_window_block is not None:
+            kw["window_block"] = eff_window_block
+        acc = (be.matmul_placed(xq, planes, col_ids, eff_mode, **kw)
+               if batched
+               else be.gemv_placed(xq, planes, col_ids, eff_mode, **kw))
     else:
-        acc = (be.matmul(xq, planes, mode, **kw) if batched
-               else be.gemv(xq, planes, mode, **kw))
+        acc = (be.matmul(xq, planes, eff_mode, **kw) if batched
+               else be.gemv(xq, planes, eff_mode, **kw))
     return acc.astype(jnp.float32) * x_scale * w_scale
 
 
@@ -116,6 +151,7 @@ def pud_gemv(
     logical_k: int | None = None,
     window_block: int | None = None,
     check_contracts: bool = False,
+    tile_plan=None,
 ) -> jax.Array:
     """Rank-dispatching shim over ``pud_matmul``.
 
@@ -124,7 +160,8 @@ def pud_gemv(
     """
     kw = dict(mode=mode, interpret=interpret, col_ids=col_ids,
               backend=backend, layout=layout, logical_k=logical_k,
-              window_block=window_block, check_contracts=check_contracts)
+              window_block=window_block, check_contracts=check_contracts,
+              tile_plan=tile_plan)
     if x.ndim == 1:
         return pud_matmul(x[None, :], planes, w_scale, **kw)[0]
     return pud_matmul(x, planes, w_scale, **kw)

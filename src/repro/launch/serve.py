@@ -112,6 +112,11 @@ def main(argv=None) -> int:
                          "occupancy-derived optimal batch")
     ap.add_argument("--pud-attention", action="store_true",
                     help="also pack attention wq/wk/wv/wo onto the PUD path")
+    ap.add_argument("--tune", action="store_true",
+                    help="with --pud-gemv: autotune kernel tile plans at "
+                         "startup (persisted under <calib-cache>/tuning; "
+                         "cache hits cost a file read, cold start falls "
+                         "back to the divisor heuristic)")
     ap.add_argument("--weight-bits", type=int, default=4)
     ap.add_argument("--no-placement", dest="placement",
                     action="store_false", default=True,
@@ -207,6 +212,23 @@ def main(argv=None) -> int:
                   f"{rep['occupied_subarrays']}"
                   f"/{rep['n_subarrays']} subarrays, "
                   f"{len(rep['spilled_tensors'])} tensors spilled)")
+
+        if args.tune:
+            # Tile plans load from the persistent tuning cache (miss =
+            # search + persist) and are stamped onto the packs, so the
+            # greedy and engine paths below both decode on tuned tiles.
+            trep = session.tune()
+            n_hit = sum(1 for r in trep["keys"].values()
+                        if r["status"] == "hit")
+            n_tuned = len(trep["keys"]) - n_hit
+            print(f"  autotune: {len(trep['keys'])} keys "
+                  f"({n_hit} cache hits, {n_tuned} searched)")
+            for tkey, row in sorted(trep["keys"].items()):
+                speed = (f"  {row['speedup']:.2f}x vs heuristic"
+                         if "speedup" in row else "")
+                print(f"    {row['status']:<5s} {tkey}: "
+                      f"{row['plan'] or 'heuristic'}{speed}")
+            packed = session.packed   # re-fetch: packs now carry plans
 
         extras_rep = session.decode_extras()
         toks, logits = greedy_generate(

@@ -105,7 +105,7 @@ def pud_linear(x: jax.Array, packed: "PackedTensor | dict",
                  col_ids=pt.col_ids,
                  backend=backend or cfg.backend or pt.backend,
                  layout=pt.layout, logical_k=pt.logical_k,
-                 window_block=pt.window_block)
+                 window_block=pt.window_block, tile_plan=pt.tile_plan)
     return y.reshape(lead + (y.shape[-1],))
 
 

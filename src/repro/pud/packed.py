@@ -69,6 +69,12 @@ class PackedTensor:
                     columns live inside window slice [j*wb, (j+1)*wb), so
                     the kernel blocks the window axis like any other.  None
                     = single-block window (or unplaced).
+      tile_plan     autotuned execution plan (kernels/autotune.py): a
+                    ``TunedTile`` shared by both entries or a hashable
+                    tuple of ``("gemv"|"gemm", TunedTile)`` pairs, stamped
+                    by ``PUDSession.tune()``.  None = divisor heuristic
+                    (the cold-start fallback).  Plans never change
+                    numerics, only tiling/unpack strategy.
     """
 
     planes: jax.Array
@@ -78,6 +84,7 @@ class PackedTensor:
     layout: str = LAYOUT_DENSE
     logical_k: int | None = None
     window_block: int | None = None
+    tile_plan: object | None = None
 
     @property
     def placed(self) -> bool:
@@ -212,9 +219,11 @@ def is_pack(value) -> bool:
 jax.tree_util.register_pytree_node(
     PackedTensor,
     lambda pt: ((pt.planes, pt.scale, pt.col_ids),
-                (pt.backend, pt.layout, pt.logical_k, pt.window_block)),
+                (pt.backend, pt.layout, pt.logical_k, pt.window_block,
+                 pt.tile_plan)),
     lambda aux, ch: PackedTensor(*ch, backend=aux[0], layout=aux[1],
-                                 logical_k=aux[2], window_block=aux[3]))
+                                 logical_k=aux[2], window_block=aux[3],
+                                 tile_plan=aux[4]))
 
 
 @dataclasses.dataclass(eq=False)
@@ -323,6 +332,24 @@ def packed_bytes(params) -> dict:
 # ---------------------------------------------------------------------------
 
 
+def _tile_plan_to_json(tile_plan):
+    """TunedTile | ((entry, TunedTile), ...) -> JSON-safe value."""
+    if tile_plan is None:
+        return None
+    if hasattr(tile_plan, "to_dict"):
+        return tile_plan.to_dict()
+    return [[entry, plan.to_dict()] for entry, plan in tile_plan]
+
+
+def _tile_plan_from_json(value):
+    if value is None:
+        return None
+    from repro.kernels.autotune import TunedTile
+    if isinstance(value, dict):
+        return TunedTile.from_dict(value)
+    return tuple((entry, TunedTile.from_dict(d)) for entry, d in value)
+
+
 def save_packed_npz(path, pm: PackedModel) -> None:
     """Write a ``PackedModel``'s packs to ``path`` as a single .npz.
 
@@ -338,7 +365,8 @@ def save_packed_npz(path, pm: PackedModel) -> None:
         "placed": pm.placed,
         "entries": {
             name: {"layout": pt.layout, "logical_k": pt.logical_k,
-                   "window_block": pt.window_block, "backend": pt.backend}
+                   "window_block": pt.window_block, "backend": pt.backend,
+                   "tile_plan": _tile_plan_to_json(pt.tile_plan)}
             for name, pt in tensors.items()
         },
     }
@@ -379,7 +407,8 @@ def load_packed_npz(path) -> dict[str, PackedTensor] | None:
                         layout=e.get("layout", pt.layout),
                         logical_k=e.get("logical_k"),
                         window_block=e.get("window_block"),
-                        backend=e.get("backend"))
+                        backend=e.get("backend"),
+                        tile_plan=_tile_plan_from_json(e.get("tile_plan")))
                 out[name] = pt
             return out
     except (OSError, ValueError, KeyError, EOFError, json.JSONDecodeError,

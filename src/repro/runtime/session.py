@@ -112,6 +112,7 @@ class PUDSession:
         self._placement_name: str | None = None
         self._placement_status: str | None = None   # hit | planned | skipped
         self._placement_error: str | None = None
+        self._tuning_report: dict | None = None
 
     # -- construction -------------------------------------------------------
 
@@ -291,6 +292,127 @@ class PUDSession:
                         placement=self._placement)
         self._packed, self._pack_cfg = pm, cfg
         return pm
+
+    # -- kernel autotuning ---------------------------------------------------
+
+    def _tuning_cache(self):
+        """The persistent tuning cache riding alongside the calibration
+        cache (``<cache_dir>/tuning``), or None for cache-less sessions
+        (tuning still runs; winners live only in the stamped packs)."""
+        if self.cache is None:
+            return None
+        from repro.runtime.tune import TuningCache
+        return TuningCache(self.cache.directory / "tuning")
+
+    def tune(self, names=None, *, batches=(1, 8), force: bool = False,
+             warmup: int = 1, reps: int = 3,
+             max_candidates: int = 12) -> dict:
+        """Autotune the packed projections and stamp the winners.
+
+        For every pack (restricted to ``names`` — report names or unique
+        path suffixes — when given) and every batch size in ``batches``
+        (1 exercises the decode-shaped GeMV entry, >1 the batch-tiled
+        GEMM), the persisted plan is loaded from the tuning cache; on a
+        miss (or ``force=True``) the search runs (kernels/autotune.py:
+        contract-filtered candidates, warmup + median timing, bit-exactness
+        cross-check) and the winner is persisted.  Winning plans are
+        stamped onto the packs, so every subsequent ``linear`` /
+        ``serving_engine`` call — and any ``save_packed_npz`` — carries
+        them; cold-start without plans falls back to the divisor heuristic.
+
+        Returns the tuning report (also via :meth:`tuning_report`).
+        """
+        if self._packed is None:
+            raise RuntimeError("no packed model: call session.pack() first")
+        from repro.kernels.autotune import tune_kernel, tuning_key
+        cache = self._tuning_cache()
+        cfg = self._pack_cfg or PUDGemvConfig()
+        mode = cfg.mode
+        tensors = self._packed.tensors
+        if names is not None:
+            wanted = {}
+            for name in names:
+                hits = ([name] if name in tensors
+                        else [k for k in tensors if k.endswith(name)])
+                if len(hits) != 1:
+                    raise KeyError(f"packed tensor {name!r} "
+                                   + ("is ambiguous" if hits
+                                      else "not found"))
+                wanted[hits[0]] = tensors[hits[0]]
+            tensors = wanted
+
+        report: dict = {"fingerprint": (cache.fingerprint if cache
+                                        else None),
+                        "cache_dir": (str(cache.directory) if cache
+                                      else None),
+                        "keys": {}}
+        stamped: dict[str, object] = {}
+        for name, pt in tensors.items():
+            planes = pt.planes[0] if pt.planes.ndim == 4 else pt.planes
+            col_ids = None
+            if pt.col_ids is not None:
+                col_ids = (pt.col_ids[0] if pt.col_ids.ndim == 2
+                           else pt.col_ids)
+            plans: dict[str, object] = {}
+            for batch in batches:
+                entry = "gemm" if batch > 1 else "gemv"
+                key = tuning_key(entry, int(batch), pt.k, pt.n, pt.n_bits,
+                                 pt.layout, pt.placed)
+                plan = None if (force or cache is None) else cache.load(key)
+                row = {"name": name, "entry": entry}
+                if plan is not None:
+                    row["status"] = "hit"
+                else:
+                    # Deterministic int8 probe covering the full operand
+                    # range; tuning is timing-only, values are irrelevant
+                    # beyond exercising the same dtype/shape as serving.
+                    x = ((jnp.arange(int(batch) * pt.k) % 255) - 127) \
+                        .astype(jnp.int8).reshape(int(batch), pt.k)
+                    res = tune_kernel(
+                        entry, x, planes, col_ids=col_ids,
+                        window_block=pt.window_block, layout=pt.layout,
+                        logical_k=pt.logical_k, mode=mode,
+                        backend=self.backend, warmup=warmup, reps=reps,
+                        max_candidates=max_candidates)
+                    plan = res.plan
+                    row.update(status="tuned", **res.to_stats())
+                    if cache is not None:
+                        cache.save(key, plan, res.to_stats())
+                row["plan"] = plan.to_dict()
+                report["keys"][key] = row
+                plans[entry] = plan
+            stamped[name] = pt.replace(
+                tile_plan=tuple(sorted(plans.items())))
+        self._restamp_packs(stamped)
+        self._tuning_report = report
+        return report
+
+    def _restamp_packs(self, stamped: dict) -> None:
+        """Swap tuned packs into the packed tree (new ``PackedModel``,
+        same aux metadata — the stamp is trace-static pytree aux)."""
+        def walk(tree, path):
+            out = {}
+            for key, sub in tree.items():
+                if key.endswith("_pud"):
+                    name = "/".join(path + (key[: -len("_pud")],))
+                    out[key] = stamped.get(name, sub)
+                elif isinstance(sub, dict):
+                    out[key] = walk(sub, path + (key,))
+                else:
+                    out[key] = sub
+            return out
+
+        pm = self._packed
+        self._packed = PackedModel(
+            params=walk(pm.params, ()),
+            packed_names=pm.packed_names,
+            skipped_names=pm.skipped_names,
+            weight_bits=pm.weight_bits, placed=pm.placed)
+
+    def tuning_report(self) -> dict | None:
+        """The last :meth:`tune` report (per-key status, plans, measured
+        speedups), or None when the session never tuned."""
+        return self._tuning_report
 
     # -- execution ----------------------------------------------------------
 

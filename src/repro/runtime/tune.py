@@ -1,0 +1,239 @@
+"""Persistent kernel-tuning cache (versioned, atomic, keyed).
+
+The search half of the autotuner (kernels/autotune.py) times candidate tile
+plans on real operands — seconds of compile + measurement per (kernel,
+layout, format, shape) key.  The winners are static until the kernel source
+changes, so serving must never pay the search at startup: this cache stores
+one JSON file per tuning key,
+
+    <root>/<safe_key>.json     {"format", "key", "kernels_fingerprint",
+                                "plan": {...}, "stats": {...}}
+
+with the same durability discipline as ``runtime/calib_cache.py``: writes
+stage to a ``.tmp-<pid>`` file and ``os.replace`` into place (a crash
+mid-save can never leave a torn entry), loads verify format version + key +
+kernel-source fingerprint and report a miss (None) on any mismatch —
+corrupt, torn, stale, or version-skewed entries all read as "re-tune", never
+as an exception.  A ``FORMAT`` bump invalidates old entries instead of
+misreading them.
+
+``kernels_fingerprint()`` hashes the kernel source files themselves, so a
+kernel change (new BlockSpecs, different heuristic) silently invalidates
+every persisted plan — and doubles as the CI ``actions/cache`` key, letting
+the tuning directory survive exactly as long as the kernels it measured.
+
+Deliberately jax-free at module level (the CLI must run without the
+accelerator stack); ``TunedTile`` materializes lazily on load.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pathlib
+import re
+
+FORMAT = "pud-tuning-v1"
+
+#: Kernel source files whose bytes define plan validity: any edit to the
+#: tiling, BlockSpecs, or search space invalidates persisted winners.
+_KERNEL_SOURCES = ("autotune.py", "backends.py", "bitplane_gemm.py",
+                   "bitplane_gemv.py", "ops.py")
+
+
+def kernels_fingerprint() -> str:
+    """Stable hash of the kernel implementation sources (jax-free)."""
+    kernels = pathlib.Path(__file__).resolve().parents[1] / "kernels"
+    h = hashlib.sha256()
+    for name in _KERNEL_SOURCES:
+        h.update(name.encode())
+        h.update((kernels / name).read_bytes())
+    return h.hexdigest()[:16]
+
+
+def _safe_name(name: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]", "_", name)
+
+
+class TuningCache:
+    """One directory of persisted tuning winners, keyed by
+    ``kernels.autotune.tuning_key`` strings."""
+
+    def __init__(self, directory: str | os.PathLike,
+                 fingerprint: str | None = None):
+        self.directory = pathlib.Path(directory)
+        self.fingerprint = fingerprint or kernels_fingerprint()
+
+    def _path(self, key: str) -> pathlib.Path:
+        return self.directory / f"{_safe_name(key)}.json"
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, key: str, plan, stats: dict | None = None) -> pathlib.Path:
+        """Persist one winner atomically; ``plan`` is a TunedTile (or any
+        object with ``to_dict``) or a plain field dict."""
+        final = self._path(key)
+        final.parent.mkdir(parents=True, exist_ok=True)
+        for stale in final.parent.glob(final.name + ".tmp-*"):
+            stale.unlink(missing_ok=True)     # crashed earlier saves
+        entry = {
+            "format": FORMAT,
+            "key": key,
+            "kernels_fingerprint": self.fingerprint,
+            "plan": plan.to_dict() if hasattr(plan, "to_dict") else dict(plan),
+            "stats": stats or {},
+        }
+        tmp = final.with_name(final.name + f".tmp-{os.getpid()}")
+        tmp.write_text(json.dumps(entry, indent=1))
+        os.replace(tmp, final)
+        return final
+
+    # -- load ---------------------------------------------------------------
+
+    def load_entry(self, key: str) -> dict | None:
+        """The raw cache entry, or None (miss) on absence or any mismatch —
+        torn/corrupt JSON, format or fingerprint skew, wrong key."""
+        path = self._path(key)
+        if not path.exists():
+            return None
+        try:
+            entry = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError, UnicodeDecodeError):
+            return None
+        if not isinstance(entry, dict):
+            return None
+        if entry.get("format") != FORMAT:
+            return None
+        if entry.get("key") != key:
+            return None
+        if entry.get("kernels_fingerprint") != self.fingerprint:
+            return None                       # kernels changed: re-tune
+        if not isinstance(entry.get("plan"), dict):
+            return None
+        return entry
+
+    def load(self, key: str):
+        """The persisted ``TunedTile`` for ``key``, or None on any miss."""
+        entry = self.load_entry(key)
+        if entry is None:
+            return None
+        from repro.kernels.autotune import TunedTile
+        try:
+            return TunedTile.from_dict(entry["plan"])
+        except (TypeError, ValueError):       # unknown fields: stale entry
+            return None
+
+    # -- inspection ---------------------------------------------------------
+
+    def entries(self) -> list[dict]:
+        """Every valid entry under the cache root (invalid files skipped)."""
+        out = []
+        if not self.directory.exists():
+            return out
+        for path in sorted(self.directory.glob("*.json")):
+            if ".tmp-" in path.name:
+                continue
+            try:
+                entry = json.loads(path.read_text())
+            except (OSError, json.JSONDecodeError, UnicodeDecodeError):
+                continue
+            if isinstance(entry, dict) and entry.get("format") == FORMAT:
+                out.append(entry)
+        return out
+
+    def evict(self, key: str | None = None) -> int:
+        """Drop one entry (or all of them); returns the number removed."""
+        if key is not None:
+            path = self._path(key)
+            if path.exists():
+                path.unlink()
+                return 1
+            return 0
+        n = 0
+        if self.directory.exists():
+            for path in self.directory.glob("*.json"):
+                path.unlink()
+                n += 1
+        return n
+
+    def stats(self) -> dict:
+        entries = self.entries()
+        current = [e for e in entries
+                   if e.get("kernels_fingerprint") == self.fingerprint]
+        size = 0
+        if self.directory.exists():
+            size = sum(f.stat().st_size
+                       for f in self.directory.glob("*.json"))
+        return {"entries": len(entries), "current": len(current),
+                "stale": len(entries) - len(current), "bytes": size,
+                "fingerprint": self.fingerprint}
+
+
+# ---------------------------------------------------------------------------
+# CLI: inspect/evict persisted tuning entries without writing any Python.
+#
+#     python -m repro.runtime.tune --root DIR --list
+#     python -m repro.runtime.tune --root DIR --stats
+#     python -m repro.runtime.tune --root DIR --evict KEY
+#     python -m repro.runtime.tune --fingerprint
+#
+# jax-free: CI uses --fingerprint as the actions/cache key before any
+# accelerator stack is installed.
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.runtime.tune",
+        description="Inspect a persistent kernel-tuning cache.")
+    ap.add_argument("--root", metavar="DIR",
+                    help="cache root (the --tuning-cache directory)")
+    g = ap.add_mutually_exclusive_group(required=True)
+    g.add_argument("--list", action="store_true",
+                   help="one line per persisted tuning entry")
+    g.add_argument("--stats", action="store_true",
+                   help="aggregate counts and on-disk size")
+    g.add_argument("--evict", metavar="KEY",
+                   help="drop one tuning key ('all' drops every entry)")
+    g.add_argument("--fingerprint", action="store_true",
+                   help="print the kernel-source fingerprint and exit")
+    args = ap.parse_args(argv)
+
+    if args.fingerprint:
+        print(kernels_fingerprint())
+        return 0
+    if not args.root:
+        ap.error("--root is required for --list/--stats/--evict")
+    cache = TuningCache(args.root)
+    if args.evict:
+        n = cache.evict(None if args.evict == "all" else args.evict)
+        print(f"evicted {n} tuning entr{'y' if n == 1 else 'ies'}")
+        return 0
+    if args.list:
+        entries = cache.entries()
+        if not entries:
+            print(f"no tuning entries under {cache.directory}")
+            return 0
+        for e in entries:
+            stale = ("" if e.get("kernels_fingerprint") == cache.fingerprint
+                     else "  [stale]")
+            stats = e.get("stats", {})
+            speed = (f"  {stats['speedup']:.2f}x"
+                     if isinstance(stats.get("speedup"), (int, float))
+                     else "")
+            print(f"{e.get('key', '?'):<48s} {json.dumps(e.get('plan'))}"
+                  f"{speed}{stale}")
+        return 0
+    s = cache.stats()
+    print(f"cache root       {cache.directory}")
+    print(f"entries          {s['entries']}")
+    print(f"current          {s['current']}")
+    print(f"stale            {s['stale']}")
+    print(f"on-disk size     {s['bytes'] / 1024:.1f} KiB")
+    print(f"fingerprint      {s['fingerprint']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,269 @@
+"""Kernel autotuner: the degenerate-tile fix, candidate generation and
+contract pruning, tile-plan pre-flight (window-stride rule), and
+bit-exactness of tuned plans vs the heuristic across every backend on
+logical and placed layouts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.contracts import check_tile_plan
+from repro.analysis.errors import ContractViolation
+from repro.kernels.autotune import (TunedTile, candidate_plans, median_time,
+                                    plan_for_entry, tune_kernel, tuning_key,
+                                    valid_candidates)
+from repro.kernels.backends import backend_names, get_backend
+from repro.kernels.bitplane_gemv import bitplane_gemv
+from repro.kernels.ops import (DEGENERATE_TILE_FLOOR, K_BLOCK, N_BLOCK,
+                               heuristic_block, largest_divisor, pud_matmul)
+from repro.kernels.ref import bitplane_gemv_ref, pack_bitplanes
+
+WB = 4
+
+
+def _fixture(k=64, n=96, b=1, key=0):
+    w = jax.random.randint(jax.random.key(key), (k, n), -8, 8, jnp.int32)
+    planes = pack_bitplanes(w, WB)
+    x = jax.random.randint(jax.random.key(key + 1), (b, k), -127, 128,
+                           jnp.int32).astype(jnp.int8)
+    return x, planes
+
+
+PWB = 16            # pack window stride of the placed fixtures
+
+
+def _placed_fixture(k=64, n=96, b=1, key=0, block_cols=12):
+    """Block-aligned placed layout: n_blocks windows of PWB physical
+    columns, ``block_cols`` logical columns packed at the head of each
+    (the layout ``plan_placement`` emits)."""
+    x, planes = _fixture(k, n, b, key)
+    n_blocks = n // block_cols
+    w_len = n_blocks * PWB
+    cols = jnp.arange(n)
+    col_ids = ((cols // block_cols) * PWB + cols % block_cols) \
+        .astype(jnp.int32)
+    window = jnp.zeros((WB, k, w_len), jnp.int8).at[:, :, col_ids] \
+        .set(planes)
+    return x, window, col_ids
+
+
+# ---------------------------------------------------------------------------
+# Degenerate-tile fix (prime N or K used to select 1-wide tiles)
+# ---------------------------------------------------------------------------
+
+def test_largest_divisor_degenerates_on_primes():
+    assert largest_divisor(509, K_BLOCK) == 1
+    assert largest_divisor(127, 64) == 1
+
+
+def test_heuristic_block_pads_degenerate_dims():
+    """Primes fall back to the padded power-of-two block instead of 1."""
+    assert heuristic_block(509, K_BLOCK) == K_BLOCK      # pow2 capped
+    assert heuristic_block(127, 64) == 64
+    # dims with a real divisor keep the exact-divisor tiling
+    assert heuristic_block(300, K_BLOCK) == 150
+    assert heuristic_block(172, N_BLOCK) == 172
+    assert heuristic_block(2048, K_BLOCK) == K_BLOCK
+    # tiny dims are their own (whole) block, never padded
+    assert heuristic_block(6, K_BLOCK) == 6
+    assert heuristic_block(DEGENERATE_TILE_FLOOR, K_BLOCK) == \
+        DEGENERATE_TILE_FLOOR
+
+
+@pytest.mark.parametrize("k,n", [(509, 127), (127, 509)])
+@pytest.mark.parametrize("mode", ["planes", "folded"])
+def test_prime_shape_bit_exact(k, n, mode):
+    """The shapes from the bug report: prime K and N run on padded blocks
+    (zero pads are inert in the integer dot products) and stay bit-exact
+    against the einsum oracle."""
+    x, planes = _fixture(k=k, n=n, b=1, key=3)
+    got = bitplane_gemv(x, planes, mode=mode)
+    want = bitplane_gemv_ref(x, planes)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.shape == (1, n)
+
+
+def test_prime_shape_gemm_all_backends():
+    x, planes = _fixture(k=509, n=127, b=5, key=4)
+    want = np.asarray(get_backend("reference").matmul(x, planes))
+    for name in backend_names():
+        got = np.asarray(get_backend(name).matmul(x, planes))
+        np.testing.assert_array_equal(got, want,
+                                      err_msg=f"{name} != reference")
+
+
+# ---------------------------------------------------------------------------
+# TunedTile / plan resolution / keys
+# ---------------------------------------------------------------------------
+
+def test_tuned_tile_round_trip_and_default():
+    assert TunedTile().is_default()
+    assert TunedTile().to_dict() == {}
+    plan = TunedTile(n_block=64, k_block=32, mode="planes")
+    assert not plan.is_default()
+    assert TunedTile.from_dict(plan.to_dict()) == plan
+    assert hash(plan) == hash(TunedTile(n_block=64, k_block=32,
+                                        mode="planes"))
+    with pytest.raises(ValueError, match="unknown TunedTile fields"):
+        TunedTile.from_dict({"n_block": 64, "bogus": 1})
+
+
+def test_plan_for_entry_resolution():
+    gemv_plan = TunedTile(k_block=32)
+    gemm_plan = TunedTile(b_block=4, k_block=64)
+    stamp = (("gemm", gemm_plan), ("gemv", gemv_plan))
+    assert plan_for_entry(None, "gemv") is None
+    assert plan_for_entry(gemv_plan, "gemm") is gemv_plan  # shared stamp
+    assert plan_for_entry(stamp, "gemv") is gemv_plan
+    assert plan_for_entry(stamp, "gemm") is gemm_plan
+    assert plan_for_entry((("gemm", gemm_plan),), "gemv") is None
+
+
+def test_tuning_key_coordinates():
+    key = tuning_key("gemv", 1, 64, 96, 4, "bitpack8", placed=True)
+    assert key == "gemv__placed__bitpack8__1x64x96@4b"
+    assert tuning_key("gemm", 8, 64, 96, 4, "dense", placed=False) == \
+        "gemm__logical__dense__8x64x96@4b"
+
+
+# ---------------------------------------------------------------------------
+# Candidate generation + contract pruning
+# ---------------------------------------------------------------------------
+
+def test_candidates_heuristic_first_and_unique():
+    plans = candidate_plans("gemm", 8, 2048, 2048)
+    assert plans[0].is_default()
+    assert len(set(plans)) == len(plans)
+    assert sum(1 for p in plans if p.is_default()) == 1
+
+
+def test_valid_candidates_all_pass_contracts():
+    x, planes = _fixture(k=64, n=96, b=8)
+    plans = candidate_plans("gemm", 8, 64, 96)
+    valid = valid_candidates(plans, "gemm", x.shape, planes.shape)
+    assert valid and valid[0].is_default()
+    for plan in valid:                        # re-check: none may raise
+        check_tile_plan(plan, "gemm", x.shape, planes.shape)
+
+
+def test_over_budget_tuned_tile_is_pruned():
+    """A tuned tile that would blow the 4 MiB VMEM gate never reaches the
+    timer — the same adversarial fixture the static gate carries."""
+    huge = TunedTile(b_block=128, n_block=4096, k_block=4096)
+    with pytest.raises(ContractViolation, match="vmem-budget"):
+        check_tile_plan(huge, "gemm", (128, 4096), (4, 4096, 4096))
+    valid = valid_candidates([TunedTile(), huge], "gemm", (128, 4096),
+                             (4, 4096, 4096))
+    assert huge not in valid and valid[0].is_default()
+
+
+def test_window_stride_rule():
+    """Tuned window_block must be c x pack stride with c dividing the
+    block count; anything else gathers the wrong physical columns."""
+    x, window, col_ids = _placed_fixture()
+    shapes = dict(layout="dense", col_ids=col_ids, window_block=PWB)
+    # 8 blocks of 16: c=2 and c=4 group cleanly ...
+    check_tile_plan(TunedTile(window_block=2 * PWB), "gemv", x.shape,
+                    window.shape, **shapes)
+    check_tile_plan(TunedTile(window_block=4 * PWB), "gemv", x.shape,
+                    window.shape, **shapes)
+    # ... non-multiples and non-dividing multipliers do not
+    for bad in (24, 48, 15, -16):
+        with pytest.raises(ContractViolation, match="window-stride"):
+            check_tile_plan(TunedTile(window_block=bad), "gemv", x.shape,
+                            window.shape, **shapes)
+    # a window_block override on a logical (non-placed) call is meaningless
+    with pytest.raises(ContractViolation, match="tile-plan"):
+        check_tile_plan(TunedTile(window_block=2 * PWB), "gemv", x.shape,
+                        window.shape)
+
+
+def test_gemv_rejects_b_block_and_bitpack8_word_rule():
+    x, planes = _fixture()
+    with pytest.raises(ContractViolation, match="tile-plan"):
+        check_tile_plan(TunedTile(b_block=8), "gemv", x.shape, planes.shape)
+    from repro.kernels.ref import pack_plane_words
+    words = pack_plane_words(planes)
+    with pytest.raises(ContractViolation, match="tile-plan"):
+        check_tile_plan(TunedTile(k_block=12), "gemv", x.shape, words.shape,
+                        layout="bitpack8", logical_k=64)
+
+
+# ---------------------------------------------------------------------------
+# tune_kernel: search, winner, bit-exactness guarantees
+# ---------------------------------------------------------------------------
+
+def test_tune_kernel_returns_valid_winner():
+    x, planes = _fixture(k=64, n=96)
+    res = tune_kernel("gemv", x, planes, reps=1, max_candidates=6)
+    assert res.key == tuning_key("gemv", 1, 64, 96, WB, "dense", False)
+    assert res.heuristic_s > 0 and res.tuned_s > 0
+    assert res.tuned_s <= res.heuristic_s          # heuristic is candidate #0
+    assert res.speedup >= 1.0
+    assert 1 <= res.n_candidates <= 6
+    stats = res.to_stats()
+    assert set(stats) == {"tuned_s", "heuristic_s", "speedup",
+                          "n_candidates"}
+
+
+def test_tune_kernel_rejects_unknown_entry():
+    x, planes = _fixture()
+    with pytest.raises(ContractViolation, match="entry"):
+        tune_kernel("conv", x, planes)
+
+
+@pytest.mark.parametrize("b,entry", [(1, "gemv"), (6, "gemm")])
+def test_tuned_plans_bit_exact_all_backends_logical(b, entry):
+    """Every valid candidate plan — not just the winner — computes the
+    identical integer result on every registered backend."""
+    x, planes = _fixture(k=64, n=96, b=b, key=7)
+    plans = valid_candidates(candidate_plans(entry, b, 64, 96), entry,
+                             x.shape, planes.shape)[:5]
+    assert len(plans) >= 2                    # heuristic + a real override
+    want = np.asarray(pud_matmul(x.astype(jnp.float32), planes, 1.0))
+    for name in backend_names():
+        for plan in plans:
+            got = np.asarray(pud_matmul(x.astype(jnp.float32), planes, 1.0,
+                                        backend=name, tile_plan=plan))
+            np.testing.assert_array_equal(
+                got, want, err_msg=f"{name} with {plan.to_dict()}")
+
+
+@pytest.mark.parametrize("b,entry", [(1, "gemv"), (6, "gemm")])
+def test_tuned_plans_bit_exact_all_backends_placed(b, entry):
+    x, window, col_ids = _placed_fixture(b=b, key=9)
+    w_len = int(window.shape[-1])
+    plans = valid_candidates(
+        candidate_plans(entry, b, 64, 96, placed_window=w_len,
+                        pack_window_block=PWB),
+        entry, x.shape, window.shape, col_ids=col_ids,
+        window_block=PWB)[:6]
+    assert any(p.window_block for p in plans)  # stride grouping searched
+    want = np.asarray(pud_matmul(x.astype(jnp.float32), window, 1.0,
+                                 col_ids=col_ids, window_block=PWB))
+    for name in backend_names():
+        for plan in plans:
+            got = np.asarray(pud_matmul(
+                x.astype(jnp.float32), window, 1.0, col_ids=col_ids,
+                window_block=PWB, backend=name, tile_plan=plan))
+            np.testing.assert_array_equal(
+                got, want, err_msg=f"{name} with {plan.to_dict()}")
+
+
+def test_tune_kernel_bitpack8_placed_search():
+    """The full-fat coordinate: bit-packed words + placed window, searched
+    end to end (this is the serving hot path's tuning problem)."""
+    from repro.kernels.ref import pack_plane_words
+    x, window, col_ids = _placed_fixture(k=64, n=96, key=11)
+    words = pack_plane_words(window)
+    res = tune_kernel("gemv", x, words, col_ids=col_ids, window_block=PWB,
+                      layout="bitpack8", logical_k=64, reps=1,
+                      max_candidates=5)
+    assert res.key == tuning_key("gemv", 1, 64, 96, WB, "bitpack8", True)
+    assert res.speedup >= 1.0
+
+
+def test_median_time_returns_output():
+    t, out = median_time(lambda: jnp.arange(4), warmup=1, reps=3)
+    assert t >= 0
+    np.testing.assert_array_equal(np.asarray(out), np.arange(4))

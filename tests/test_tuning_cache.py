@@ -1,0 +1,266 @@
+"""Tuning-cache failure paths + session/serving integration: every
+corruption/mismatch mode must read as a miss and fall back to re-tuning —
+never raise, never serve a stale or torn plan — and tuned packs must stay
+bit-exact against untuned ones end to end."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.autotune import TunedTile, tuning_key
+from repro.runtime.tune import (FORMAT, TuningCache, kernels_fingerprint,
+                                main as cli)
+
+KEY = tuning_key("gemv", 1, 64, 96, 4, "dense", placed=False)
+PLAN = TunedTile(n_block=48, k_block=32, mode="folded")
+
+
+@pytest.fixture
+def warm(tmp_path):
+    """A cache warmed with one persisted winner."""
+    cache = TuningCache(tmp_path)
+    path = cache.save(KEY, PLAN, {"speedup": 1.25, "tuned_s": 1e-3,
+                                  "heuristic_s": 1.25e-3})
+    assert path.exists()
+    return cache, path
+
+
+def test_warm_hit_round_trips(warm):
+    cache, _ = warm
+    assert cache.load(KEY) == PLAN
+    entry = cache.load_entry(KEY)
+    assert entry["format"] == FORMAT
+    assert entry["kernels_fingerprint"] == kernels_fingerprint()
+    assert entry["stats"]["speedup"] == 1.25
+
+
+def test_absent_key_is_miss(warm):
+    cache, _ = warm
+    assert cache.load(tuning_key("gemm", 8, 64, 96, 4, "dense",
+                                 placed=False)) is None
+
+
+def test_torn_file_is_miss_not_raise(warm):
+    cache, path = warm
+    path.write_text(path.read_text()[:25])            # truncated mid-write
+    assert cache.load(KEY) is None
+    assert cache.load_entry(KEY) is None
+
+
+def test_corrupt_json_is_miss(warm):
+    cache, path = warm
+    path.write_text("{not json")
+    assert cache.load(KEY) is None
+    path.write_text(json.dumps(["not", "a", "dict"]))
+    assert cache.load(KEY) is None
+
+
+def test_version_mismatch_is_miss(warm):
+    """A format bump must invalidate old entries instead of misreading."""
+    cache, path = warm
+    entry = json.loads(path.read_text())
+    entry["format"] = "pud-tuning-v0"
+    path.write_text(json.dumps(entry))
+    assert cache.load(KEY) is None
+    # re-saving restores the current format
+    cache.save(KEY, PLAN)
+    assert json.loads(path.read_text())["format"] == FORMAT
+    assert cache.load(KEY) == PLAN
+
+
+def test_fingerprint_mismatch_is_miss(warm, tmp_path):
+    """A kernel-source change can never silently reuse stale plans."""
+    cache, path = warm
+    entry = json.loads(path.read_text())
+    entry["kernels_fingerprint"] = "0" * 16
+    path.write_text(json.dumps(entry))
+    assert cache.load(KEY) is None
+    # equivalently: a cache pinned to a different fingerprint misses
+    skewed = TuningCache(tmp_path, fingerprint="f" * 16)
+    skewed.save(KEY, PLAN)
+    assert skewed.load(KEY) == PLAN
+    assert TuningCache(tmp_path).load(KEY) is None
+
+
+def test_wrong_key_in_entry_is_miss(warm):
+    cache, path = warm
+    entry = json.loads(path.read_text())
+    entry["key"] = "gemv__logical__dense__1x999x999@4b"
+    path.write_text(json.dumps(entry))
+    assert cache.load(KEY) is None
+
+
+def test_unknown_plan_fields_are_miss(warm):
+    """Plans from a future TunedTile shape read as re-tune, not a crash."""
+    cache, path = warm
+    entry = json.loads(path.read_text())
+    entry["plan"] = {"n_block": 48, "warp_count": 4}
+    path.write_text(json.dumps(entry))
+    assert cache.load_entry(KEY) is not None          # envelope is fine ...
+    assert cache.load(KEY) is None                    # ... the plan is not
+    entry["plan"] = "heuristic"
+    path.write_text(json.dumps(entry))
+    assert cache.load_entry(KEY) is None
+
+
+def test_evict_one_and_all(warm):
+    cache, _ = warm
+    other = tuning_key("gemm", 8, 64, 96, 4, "dense", placed=False)
+    cache.save(other, TunedTile())
+    assert cache.evict(KEY) == 1
+    assert cache.evict(KEY) == 0                      # idempotent
+    assert cache.load(KEY) is None and cache.load(other) is not None
+    assert cache.evict() == 1                         # drops the rest
+    assert cache.entries() == []
+
+
+def test_stale_tmp_files_invisible_and_swept(warm):
+    cache, path = warm
+    torn = path.with_name(path.name + ".tmp-9999")
+    torn.write_text("garbage")
+    assert len(cache.entries()) == 1                  # staging is invisible
+    assert cache.load(KEY) == PLAN
+    cache.save(KEY, PLAN)                             # gc on the next save
+    assert not torn.exists()
+
+
+def test_stats_counts_stale_entries(warm, tmp_path):
+    cache, _ = warm
+    TuningCache(tmp_path, fingerprint="a" * 16).save("old__key", TunedTile())
+    s = cache.stats()
+    assert s["entries"] == 2 and s["current"] == 1 and s["stale"] == 1
+    assert s["bytes"] > 0 and s["fingerprint"] == kernels_fingerprint()
+
+
+def test_save_accepts_plain_dict(warm):
+    cache, _ = warm
+    key = tuning_key("gemm", 8, 64, 96, 4, "bitpack8", placed=True)
+    cache.save(key, {"k_block": 64, "mode": "planes"})
+    assert cache.load(key) == TunedTile(k_block=64, mode="planes")
+
+
+def test_fingerprint_is_stable_and_source_sensitive():
+    assert kernels_fingerprint() == kernels_fingerprint()
+    assert len(kernels_fingerprint()) == 16
+    int(kernels_fingerprint(), 16)                    # hex
+
+
+# ---------------------------------------------------------------------------
+# CLI (python -m repro.runtime.tune) — jax-free; CI keys actions/cache on
+# the --fingerprint output before installing the accelerator stack.
+# ---------------------------------------------------------------------------
+
+def test_cli_fingerprint(capsys):
+    assert cli(["--fingerprint"]) == 0
+    assert capsys.readouterr().out.strip() == kernels_fingerprint()
+
+
+def test_cli_list_and_stats(warm, tmp_path, capsys):
+    assert cli(["--root", str(tmp_path), "--list"]) == 0
+    out = capsys.readouterr().out
+    assert KEY in out and "1.25x" in out
+    assert cli(["--root", str(tmp_path), "--stats"]) == 0
+    out = capsys.readouterr().out
+    assert "entries          1" in out
+    assert kernels_fingerprint() in out
+
+
+def test_cli_evict_and_empty(warm, tmp_path, capsys):
+    assert cli(["--root", str(tmp_path), "--evict", KEY]) == 0
+    assert "evicted 1" in capsys.readouterr().out
+    assert cli(["--root", str(tmp_path), "--list"]) == 0
+    assert "no tuning entries" in capsys.readouterr().out
+    assert cli(["--root", str(tmp_path / "nope"), "--stats"]) == 0
+    assert "entries          0" in capsys.readouterr().out
+
+
+def test_cli_evict_all(warm, tmp_path, capsys):
+    cache, _ = warm
+    cache.save("second__key", TunedTile())
+    assert cli(["--root", str(tmp_path), "--evict", "all"]) == 0
+    assert "evicted 2" in capsys.readouterr().out
+    assert cache.entries() == []
+
+
+def test_cli_requires_root_and_one_action(tmp_path):
+    with pytest.raises(SystemExit):
+        cli(["--list"])                               # --root required
+    with pytest.raises(SystemExit):
+        cli(["--root", str(tmp_path)])                # an action required
+    with pytest.raises(SystemExit):
+        cli(["--root", str(tmp_path), "--list", "--stats"])
+
+
+# ---------------------------------------------------------------------------
+# Session integration: tune -> persist -> hit, stamped packs stay bit-exact
+# ---------------------------------------------------------------------------
+
+def _session(tmp_path):
+    from repro.api import (CalibrationConfig, FleetConfig, PUDGemvConfig,
+                           PUDSession)
+    sess = PUDSession.open(
+        grid=FleetConfig(n_channels=1, n_banks=1, n_subarrays=4,
+                         n_cols=256),
+        calib=CalibrationConfig(n_iterations=4, n_samples=64),
+        n_trials_ecr=128, key=7, cache_dir=tmp_path)
+    kw = jax.random.split(jax.random.key(0), 2)
+    params = {"mixer": {"wi": 0.05 * jax.random.normal(
+        kw[0], (64, 96), jnp.float32)}}
+    sess.pack(params, PUDGemvConfig(weight_bits=4, packable=("mixer.wi",)),
+              include_unembed=False)
+    return sess
+
+
+def test_session_tune_persists_and_hits(tmp_path):
+    sess = _session(tmp_path)
+    x = jax.random.normal(jax.random.key(1), (64,), jnp.float32)
+    before = np.asarray(sess.linear(x, "mixer/wi"))
+
+    rep = sess.tune(reps=1, max_candidates=4)
+    assert sess.tuning_report() is rep
+    assert rep["fingerprint"] == kernels_fingerprint()
+    assert rep["keys"] and all(r["status"] == "tuned"
+                               for r in rep["keys"].values())
+    # winners are stamped onto the pack and persisted on disk
+    pt = sess.packed.tensor("mixer/wi")
+    assert pt.tile_plan is not None
+    cache = TuningCache(tmp_path / "tuning")
+    for key in rep["keys"]:
+        assert cache.load(key) is not None
+    # tuned execution is bit-exact vs the pre-tune pack
+    np.testing.assert_array_equal(np.asarray(sess.linear(x, "mixer/wi")),
+                                  before)
+
+    # a second tune is all cache hits and re-stamps identically
+    rep2 = sess.tune(reps=1, max_candidates=4)
+    assert all(r["status"] == "hit" for r in rep2["keys"].values())
+    assert {k: r["plan"] for k, r in rep2["keys"].items()} == \
+        {k: r["plan"] for k, r in rep["keys"].items()}
+
+
+def test_session_tune_name_filter(tmp_path):
+    sess = _session(tmp_path)
+    rep = sess.tune(names=["wi"], batches=(1,), reps=1, max_candidates=3)
+    assert len(rep["keys"]) == 1
+    with pytest.raises(KeyError, match="not found"):
+        sess.tune(names=["nope"], reps=1)
+
+
+def test_tile_plan_survives_npz_round_trip(tmp_path):
+    from repro.pud.packed import load_packed_npz, save_packed_npz
+    sess = _session(tmp_path)
+    sess.tune(reps=1, max_candidates=4)
+    pm = sess.packed
+    stamp = pm.tensor("mixer/wi").tile_plan
+    assert stamp is not None
+    path = tmp_path / "packs.npz"
+    save_packed_npz(path, pm)
+    loaded = load_packed_npz(path)
+    assert loaded["mixer/wi"].tile_plan == stamp
+    x = jax.random.normal(jax.random.key(2), (3, 64), jnp.float32)
+    from repro.pud.gemv import pud_linear
+    np.testing.assert_array_equal(
+        np.asarray(pud_linear(x, loaded["mixer/wi"])),
+        np.asarray(pud_linear(x, pm.tensor("mixer/wi"))))
