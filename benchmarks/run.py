@@ -4,9 +4,9 @@
 
 Order: offset ladders (Fig. 3) -> Table I -> Frac sensitivity (Fig. 5) ->
 reliability (Fig. 6) -> Algorithm-1 convergence -> fleet calibration ->
-Pallas kernels -> serving -> serving engine (continuous batching) -> MAJX
-generalization -> column placement -> roofline summary (reads dry-run
-artifacts if present).
+Pallas kernels -> serving -> serving engine (continuous batching) -> drift
+recovery (canary detect + hot swap) -> MAJX generalization -> column
+placement -> roofline summary (reads dry-run artifacts if present).
 
 Benchmarks register in the ``BENCHES`` dict (name -> runner taking a
 ``BenchScale``); imports stay inside the runners so ``--only``/``--list``
@@ -85,6 +85,13 @@ def _serving_engine(scale):
     serving_engine.main(scale)
 
 
+def _drift(scale):
+    """Online drift recovery: detection latency, partial recal scope,
+    zero-downtime hot swap (fails on any stalled step)."""
+    from . import drift_recovery
+    drift_recovery.main(scale)
+
+
 def _majx(scale):
     """MAJX generalization (MAJ3/MAJ7)."""
     from . import majx_general
@@ -123,6 +130,7 @@ BENCHES: dict[str, Callable[[BenchScale], None]] = {
     "kernel_microbench": _kernel_microbench,
     "serving": _serving,
     "serving_engine": _serving_engine,
+    "drift": _drift,
     "majx": _majx,
     "placement": _placement,
     "roofline": _roofline,

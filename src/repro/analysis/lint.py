@@ -29,6 +29,14 @@ Rule catalog (docs/analysis.md mirrors this):
   no-removed-jax-api          APIs removed from the pinned jax
                               (``jax.set_mesh``) — use the portable
                               ``launch/mesh.use_mesh`` shim.
+  no-recal-on-decode-path     ladder identification (Algorithm 1) is
+                              minutes of work and must never run inside
+                              the decode loop — the decode path
+                              (``runtime/engine.py``, ``models/``) may not
+                              import or call fleet recalibration; drift
+                              recovery recalibrates from the controller
+                              between steps (``runtime/drift.py``) and
+                              hands the engine a finished pack.
 """
 from __future__ import annotations
 
@@ -41,6 +49,17 @@ KERNEL_MODULES = frozenset({"bitplane_gemv", "bitplane_gemm", "majx"})
 
 #: jax attributes removed on the pinned jaxlib (rule: no-removed-jax-api).
 REMOVED_JAX_APIS = frozenset({"set_mesh"})
+
+#: Fleet recalibration entrypoints (rule: no-recal-on-decode-path).
+#: Anything that runs Algorithm-1 ladder identification — step-granular
+#: serving must reach these only from the drift controller, never from
+#: the decode loop itself.
+RECALIBRATION_ENTRYPOINTS = frozenset({
+    "calibrate_fleet", "identify_calibration", "identify_calibration_fn",
+    "load_or_calibrate", "recalibrate_subarrays"})
+
+#: Modules on the step-granular decode path (rule: no-recal-on-decode-path).
+DECODE_PATH_PREFIXES = ("repro/runtime/engine.py", "repro/models/")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -215,6 +234,37 @@ def _check_removed_apis(tree: ast.AST, path: str):
                 "no-removed-jax-api", path, node.lineno,
                 f"jax.{node.attr} was removed on the pinned jax — use "
                 "repro.launch.mesh.use_mesh")
+
+
+def _on_decode_path(path: str) -> bool:
+    p = _norm(path)
+    return any(f"src/{pre}" in p or p.startswith(pre) or f"/{pre}" in p
+               for pre in DECODE_PATH_PREFIXES)
+
+
+@rule("no-recal-on-decode-path",
+      "the decode path must not import or call fleet recalibration")
+def _check_decode_recal(tree: ast.AST, path: str):
+    if not _on_decode_path(path):
+        return
+    msg = ("Algorithm-1 recalibration reached from the decode path — "
+           "drift recovery runs it in the controller between steps "
+           "(runtime/drift.py) and hands the engine a finished pack via "
+           "stage_params")
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            names = {a.name.split(".")[-1] for a in node.names}
+            hit = names & RECALIBRATION_ENTRYPOINTS
+            if hit:
+                yield Finding(
+                    "no-recal-on-decode-path", path, node.lineno,
+                    f"import of {sorted(hit)[0]!r}: {msg}")
+        elif isinstance(node, ast.Call):
+            tail = _attr_chain(node.func).split(".")[-1]
+            if tail in RECALIBRATION_ENTRYPOINTS:
+                yield Finding(
+                    "no-recal-on-decode-path", path, node.lineno,
+                    f"call to {tail!r}: {msg}")
 
 
 def lint_source(source: str, path: str) -> list[Finding]:

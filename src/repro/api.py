@@ -19,7 +19,10 @@ table.
 from __future__ import annotations
 
 from repro.core.calibrate import CalibrationConfig
-from repro.core.fleet import FleetConfig, load_or_calibrate
+from repro.core.canary import CanarySet, drifted_offsets, probe_ecr
+from repro.core.fleet import (FleetConfig, load_or_calibrate,
+                              recalibrate_subarrays)
+from repro.core.reliability import DriftSimulator
 from repro.kernels.backends import (Backend, backend_names, get_backend,
                                     register_backend)
 from repro.pud.gemv import (ATTN_PACKABLE, ECR_BASELINE_B300,
@@ -33,16 +36,25 @@ from repro.pud.packed import (LAYOUT_BITPACK, LAYOUT_DENSE, PackedModel,
 from repro.pud.packer import pack_for_serving, pack_model, packing_requests
 from repro.pud.physics import PhysicsParams
 from repro.pud.placement import (Placement, PlacementError, PlacementRequest,
-                                 TensorPlacement, inject_read_faults)
+                                 TensorPlacement, inject_read_faults,
+                                 refresh_fault_state)
 from repro.runtime.calib_cache import CalibrationTableCache
+from repro.runtime.drift import (DriftConfig, DriftController, DriftDetector,
+                                 DriftEvent, DriftMonitor)
 from repro.runtime.engine import Completion, Request, ServingEngine
 from repro.runtime.session import CalibrationState, PUDSession
+from repro.runtime.watchdog import Heartbeat, StepWatchdog
 
 __all__ = [
     # session lifecycle
     "PUDSession", "CalibrationState",
     # batched serving
     "ServingEngine", "Request", "Completion",
+    "StepWatchdog", "Heartbeat",
+    # drift monitoring + live recalibration
+    "DriftMonitor", "DriftController", "DriftDetector", "DriftConfig",
+    "DriftEvent", "DriftSimulator", "CanarySet", "probe_ecr",
+    "drifted_offsets", "recalibrate_subarrays", "refresh_fault_state",
     # configs
     "PUDGemvConfig", "FleetConfig", "CalibrationConfig", "PhysicsParams",
     "FFN_PACKABLE", "ATTN_PACKABLE",

@@ -1,0 +1,144 @@
+"""Canary-column drift primitives shared by Fig. 6 and the live monitor.
+
+The paper calibrates once at nominal conditions and *holds the table fixed*;
+its reliability story (Fig. 6) is an offline sweep.  Production serving needs
+the same measurement online, so this module factors drift sampling and probe
+measurement out of ``core/reliability`` into primitives both consumers share:
+
+  * ``drifted_offsets``   — the physics drift model (sigma_temp_drift /
+    sigma_time_drift legs) applied to any offset array.  Fig. 6's sweep and
+    the ``DriftSimulator`` behind ``serve --drift-sim`` call exactly this.
+  * ``reserve_canaries`` / ``CanarySet`` — per-subarray columns, chosen from
+    the calibration-time error-free set and withheld from placement, whose
+    only job is to be probed.
+  * ``probe_ecr`` — push random known bit-patterns through the majority-X
+    path on a column subset and score per-subarray ECR, i.e. the paper's
+    test campaign (Sec. IV-A) restricted to canaries so a probe round is
+    cheap enough to interleave with decode.
+
+Why canaries work: drift is a *column-independent* threshold shift (the
+physics legs draw i.i.d. per column), so the flip probability of a reserved
+error-free column equals that of any placed error-free column.  A handful of
+canaries per subarray is therefore an unbiased — just coarse — estimator of
+the fraction of placed columns that silently went bad; the detector on top
+(runtime/drift.py) only has to resolve "a few canaries flipped" against the
+re-measurement churn floor (~0.5-0.7 % per trial campaign), not the paper's
+0.1 %-scale drift tails.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.pud.physics import PhysicsParams
+from .ecr import measure_ecr_fleet
+
+
+def drifted_offsets(
+    key: jax.Array,
+    sense_offset: jax.Array,
+    params: PhysicsParams,
+    temp_c: float | None = None,
+    days: float | None = None,
+) -> jax.Array:
+    """Apply the paper's temperature/time drift model to sense offsets.
+
+    Each leg adds an i.i.d. normal shift per column: temperature scales as
+    ``sigma_temp_drift * |T - T_nominal|``, aging as
+    ``sigma_time_drift * sqrt(days)``.  Works on any offset shape (single
+    subarray ``[C]`` or fleet ``[G, C]``).
+    """
+    drift = jnp.zeros_like(sense_offset)
+    if temp_c is not None:
+        scale = params.sigma_temp_drift * jnp.abs(temp_c - params.temp_nominal_c)
+        drift = drift + scale * jax.random.normal(
+            key, sense_offset.shape, jnp.float32)
+    if days is not None:
+        scale = params.sigma_time_drift * jnp.sqrt(jnp.float32(days))
+        drift = drift + scale * jax.random.normal(
+            jax.random.fold_in(key, 1), sense_offset.shape, jnp.float32)
+    return sense_offset + drift
+
+
+def reserve_canaries(masks, n_per_subarray: int) -> np.ndarray:
+    """Pick ``n_per_subarray`` calibration-time error-free columns per subarray.
+
+    Columns are spread evenly across each subarray's error-free set so a
+    spatially-correlated failure (one bad mat) cannot hide between canaries.
+    Deterministic given the masks — no RNG, so the same calibration always
+    reserves the same columns.  Raises if a subarray lacks enough error-free
+    columns to sacrifice.
+    """
+    masks = np.asarray(masks, bool)
+    g, _ = masks.shape
+    cols = np.zeros((g, n_per_subarray), np.int32)
+    for gi in range(g):
+        free = np.nonzero(~masks[gi])[0]
+        if free.size < n_per_subarray:
+            raise ValueError(
+                f"subarray {gi}: only {free.size} error-free columns, "
+                f"cannot reserve {n_per_subarray} canaries")
+        idx = np.linspace(0, free.size - 1, n_per_subarray).round().astype(int)
+        cols[gi] = free[idx]
+    return cols
+
+
+@dataclasses.dataclass(frozen=True)
+class CanarySet:
+    """Reserved canary columns for one fleet: ``cols[g, i]`` is the i-th
+    canary's column index within subarray ``g``."""
+
+    cols: np.ndarray              # [G, n_per_subarray] int32
+    n_cols: int                   # columns per subarray (mask width)
+
+    @property
+    def n_per_subarray(self) -> int:
+        return int(self.cols.shape[1])
+
+    def mask(self) -> np.ndarray:
+        """[G, n_cols] bool, True at canary columns — OR into planning masks
+        so placement treats canaries as unusable despite being error-free."""
+        g = self.cols.shape[0]
+        out = np.zeros((g, self.n_cols), bool)
+        out[np.arange(g)[:, None], self.cols] = True
+        return out
+
+    def fingerprint(self) -> str:
+        """Short stable hash of the reservation — keyed into persisted
+        placement names so a canary-less cached plan can never be reused
+        for a canary-reserving session (it might occupy canary columns)."""
+        h = hashlib.sha256(np.ascontiguousarray(self.cols).tobytes())
+        return h.hexdigest()[:10]
+
+
+def probe_ecr(
+    key: jax.Array,
+    sense_offsets: jax.Array,     # [G, n_cols] current (possibly drifted)
+    calib_charges: jax.Array,     # [G, n_calib, n_cols] from the live table
+    params: PhysicsParams,
+    n_fracs: int,
+    *,
+    cols: np.ndarray | None = None,   # [G, n] canary columns; None = all
+    n_trials: int = 64,
+    chunk: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """One probe round: per-subarray ECR of a column subset (paper protocol).
+
+    With ``cols`` this is the monitor's canary probe; with ``cols=None`` it
+    measures every column (Fig. 6's sweep, and the drift-sim's ground-truth
+    fault masks).  Returns (ecr [G] float32, error masks [G, n] bool) where
+    n follows the probed subset.
+    """
+    offs = jnp.asarray(sense_offsets)
+    charges = jnp.asarray(calib_charges)
+    if cols is not None:
+        idx = jnp.asarray(cols)
+        offs = jnp.take_along_axis(offs, idx, axis=1)
+        charges = jnp.take_along_axis(charges, idx[:, None, :], axis=2)
+    return measure_ecr_fleet(
+        key, offs, charges, params, n_fracs,
+        n_trials=n_trials, chunk=min(chunk, n_trials))

@@ -35,6 +35,9 @@ def _majx_error_mask(key, sense_offset, calib_charge, params, n_fracs,
                      n_trials, chunk, n_inputs=5, const_charge_sum=0.0,
                      const_swing_sq=0.0):
     n_cols = sense_offset.shape[0]
+    # n_trials < chunk would otherwise scan zero chunks and report a
+    # perfect (all-False) mask without measuring anything
+    chunk = min(chunk, n_trials)
 
     def body(any_err, k):
         k_in, k_noise = jax.random.split(k)

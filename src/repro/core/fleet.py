@@ -205,6 +205,54 @@ def calibrate_fleet(
     return FleetCalibration(levels, hist, cfg, method)
 
 
+def recalibrate_subarrays(
+    key: jax.Array,
+    sense_offsets: jax.Array,             # [G, C] full fleet, as sensed NOW
+    subarrays,                            # iterable of subarray indices
+    cfg: FleetConfig,
+    params: PhysicsParams,
+    config: CalibrationConfig = CalibrationConfig(),
+    *,
+    method: str = "reference",
+    interpret: bool = True,
+) -> jax.Array:
+    """Re-run Algorithm 1 for a subset of subarrays against current offsets.
+
+    The background-recalibration primitive behind the drift monitor: on a
+    drift event only the flagged subarrays re-identify, against the fleet's
+    *currently sensed* (drifted) offsets, while the rest of the table is
+    left untouched.  Every subarray keeps its own RNG stream
+    (``subarray_key(key, g)``), so the result is independent of how drift
+    events were batched — recalibrating {3} then {5} yields exactly the rows
+    a joint {3, 5} pass would.  (Block methods run per subarray here rather
+    than sharing one iteration stream across the block like
+    ``calibrate_fleet``; for a *partial* pass, batching-independence is the
+    contract that matters.)
+
+    Returns refreshed levels ``[len(subarrays), C]`` in ascending-index
+    order; merging them into the full table is the caller's job
+    (``PUDSession.recalibrate_subarrays``).
+    """
+    if method not in METHODS:
+        raise ValueError(f"method {method!r} not in {METHODS}")
+    idx = jnp.asarray(sorted(int(s) for s in subarrays), jnp.int32)
+    offs = jnp.asarray(sense_offsets)[idx]
+    ladder = cfg.ladder(params)
+
+    if method == "per_subarray":
+        def one(g, o):
+            return identify_calibration_fn(
+                subarray_key(key, g), o, ladder, params, config)
+        return jax.jit(jax.vmap(one))(idx, offs)
+
+    run = _block_calibrate(ladder, params, config, method, interpret)
+
+    def one(g, o):
+        levels, _ = run(subarray_key(key, g), o[None])
+        return levels[0]
+    return jax.jit(jax.vmap(one))(idx, offs)
+
+
 def fleet_calib_charges(
     ladder: OffsetLadder, levels: jax.Array, params: PhysicsParams
 ) -> jax.Array:
@@ -261,5 +309,6 @@ def load_or_calibrate(
     cache.save(device_id, cfg, params, np.asarray(cal.levels),
                ecr=np.asarray(ecr), masks=np.asarray(masks),
                metadata={"method": cal.method,
-                         "n_iterations": config.n_iterations})
+                         "n_iterations": config.n_iterations},
+               assumed_temp_c=params.temp_nominal_c)
     return cal.levels, ecr, masks, False

@@ -6,6 +6,13 @@ thresholds drift with temperature and age; the metric is **new ECR** — the
 fraction of columns that were error-free at calibration time but become
 error-prone under the shifted condition.  The paper measures < 0.14 % across
 40-100 C and < 0.27 % over one week.
+
+Both the drift sampling and the probe measurement live in ``core/canary``
+(``drifted_offsets`` / ``probe_ecr``) so Fig. 6's offline sweep and the live
+monitor (``runtime/drift.py``) score drift with the same code.  This module
+keeps the sweep itself plus ``DriftSimulator`` — the stand-in device behind
+``serve --drift-sim`` and the recovery tests, which ages a fleet's offsets
+with the same physics legs the sweep uses.
 """
 from __future__ import annotations
 
@@ -16,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.pud.physics import PhysicsParams
 from .calibrate import CalibrationConfig, identify_calibration
-from .ecr import measure_ecr_maj5
+from .canary import drifted_offsets, probe_ecr
 from .offsets import levels_to_charges, make_ladder
 
 
@@ -25,19 +32,6 @@ class ReliabilityPoint:
     condition: float          # degC or days
     ecr: float                # total ECR at the condition
     new_ecr: float            # newly error-prone among calibration-time EF
-
-
-def _drifted_offsets(key, sense_offset, params, temp_c=None, days=None):
-    drift = jnp.zeros_like(sense_offset)
-    if temp_c is not None:
-        scale = params.sigma_temp_drift * jnp.abs(temp_c - params.temp_nominal_c)
-        drift = drift + scale * jax.random.normal(
-            key, sense_offset.shape, jnp.float32)
-    if days is not None:
-        scale = params.sigma_time_drift * jnp.sqrt(jnp.float32(days))
-        drift = drift + scale * jax.random.normal(
-            jax.random.fold_in(key, 1), sense_offset.shape, jnp.float32)
-    return sense_offset + drift
 
 
 def reliability_sweep(
@@ -60,27 +54,104 @@ def reliability_sweep(
         k_cal, sense_offset, ladder, params, calib_config)
     calib = levels_to_charges(ladder, levels, params)
 
-    _, base_err = measure_ecr_maj5(
-        k_base, sense_offset, calib, params, ladder.n_fracs, n_trials=n_trials)
-    base_ef = ~base_err
+    # Probe through the canary primitives as a 1-subarray fleet, so the
+    # sweep exercises the exact measurement path the live monitor runs.
+    offs_fleet = sense_offset[None]
+    charges_fleet = calib[None]
+
+    _, base_err = probe_ecr(
+        k_base, offs_fleet, charges_fleet, params, ladder.n_fracs,
+        n_trials=n_trials)
+    base_ef = ~base_err[0]
 
     def eval_at(k, offs):
-        ecr, err = measure_ecr_maj5(
-            k, offs, calib, params, ladder.n_fracs, n_trials=n_trials)
-        new_ecr = float((err & base_ef).mean())
-        return ecr, new_ecr
+        ecr, err = probe_ecr(
+            k, offs[None], charges_fleet, params, ladder.n_fracs,
+            n_trials=n_trials)
+        new_ecr = float((err[0] & base_ef).mean())
+        return float(ecr[0]), new_ecr
 
     temp_points, time_points = [], []
     for t in temps_c:
         k_t, k = jax.random.split(k_t)
-        offs = _drifted_offsets(jax.random.fold_in(k, int(t)), sense_offset,
-                                params, temp_c=float(t))
+        offs = drifted_offsets(jax.random.fold_in(k, int(t)), sense_offset,
+                               params, temp_c=float(t))
         ecr, new = eval_at(k, offs)
         temp_points.append(ReliabilityPoint(float(t), ecr, new))
     for d in days:
         k_d, k = jax.random.split(k_d)
-        offs = _drifted_offsets(jax.random.fold_in(k, int(d * 100)),
-                                sense_offset, params, days=float(d))
+        offs = drifted_offsets(jax.random.fold_in(k, int(d * 100)),
+                               sense_offset, params, days=float(d))
         ecr, new = eval_at(k, offs)
         time_points.append(ReliabilityPoint(float(d), ecr, new))
     return temp_points, time_points
+
+
+class DriftSimulator:
+    """A PUD fleet whose sense offsets age — the device behind ``--drift-sim``.
+
+    Holds the fleet's manufactured (calibration-time) offsets and exposes
+    ``sense_offsets()``, the one method the drift monitor needs from a
+    device.  ``advance`` moves the simulated condition; offsets are then
+    resampled through ``canary.drifted_offsets`` under a per-epoch folded
+    key, so they are *stable within an epoch* — the monitor's probe, the
+    ground-truth fault masks, and the recalibration pass all see the same
+    drifted device until the next ``advance``.
+
+    ``subarrays`` restricts an advance to a localized hot spot (rows of the
+    grid); other subarrays keep their base offsets, which is what makes
+    "only affected subarrays recalibrate" a sharp, testable claim.
+    """
+
+    def __init__(self, key: jax.Array, base_offsets: jax.Array,
+                 params: PhysicsParams):
+        self.key = key
+        self.base = jnp.asarray(base_offsets)
+        self.params = params
+        self.temp_c = float(params.temp_nominal_c)
+        self.days = 0.0
+        self._epoch = 0
+        self._subarrays: list[int] | None = None
+
+    @classmethod
+    def for_session(cls, session) -> "DriftSimulator":
+        """Simulator over the same manufactured fleet a session calibrated —
+        epoch 0 reproduces the offsets its table was identified against."""
+        from .fleet import manufacture_fleet
+        base = manufacture_fleet(session.key, session.fleet_cfg,
+                                 session.physics)
+        return cls(jax.random.fold_in(session.key, 0x0D21F7), base,
+                   session.physics)
+
+    def advance(self, temp_c: float | None = None, days: float | None = None,
+                subarrays=None) -> None:
+        """Age the device: set operating temperature and/or add elapsed days,
+        optionally confined to ``subarrays`` (a localized hot spot)."""
+        if temp_c is not None:
+            self.temp_c = float(temp_c)
+        if days is not None:
+            self.days += float(days)
+        self._subarrays = (None if subarrays is None
+                           else sorted(int(s) for s in subarrays))
+        self._epoch += 1
+
+    @property
+    def drifted(self) -> bool:
+        return (self._epoch > 0
+                and (self.temp_c != self.params.temp_nominal_c
+                     or self.days > 0.0))
+
+    def sense_offsets(self) -> jax.Array:
+        """Current [G, n_cols] offsets under the simulated condition."""
+        if not self.drifted:
+            return self.base
+        temp = self.temp_c if self.temp_c != self.params.temp_nominal_c else None
+        days = self.days if self.days > 0.0 else None
+        offs = drifted_offsets(
+            jax.random.fold_in(self.key, self._epoch), self.base,
+            self.params, temp_c=temp, days=days)
+        if self._subarrays is None:
+            return offs
+        sel = jnp.zeros((self.base.shape[0], 1), bool)
+        sel = sel.at[jnp.asarray(self._subarrays)].set(True)
+        return jnp.where(sel, offs, self.base)

@@ -94,6 +94,114 @@ def greedy_generate(model, params, tokens, gen: int, max_len: int,
     return jnp.concatenate(out, axis=1), jnp.stack(all_logits, axis=1)
 
 
+def _monitored_serve(args, session, engine, model, params, requests,
+                     tokens, max_len) -> int:
+    """Serve ``requests`` under the drift monitor (--monitor).
+
+    With ``--drift-sim`` the simulator drifts the device's sense offsets at
+    step ``--drift-at`` and the live pack is corrupted to match (faults
+    re-derived from the drifted offsets, injected into the serving tree),
+    so the canary probes are detecting a real numeric failure, not a flag.
+    The controller then drives detection -> partial recalibration ->
+    repack -> between-steps hot swap, and a post-swap spot check proves
+    decode is bit-identical to a fresh pack on the recovered table.
+    """
+    from repro.core.canary import probe_ecr
+    from repro.core.reliability import DriftSimulator
+    from repro.pud.placement import inject_read_faults, refresh_fault_state
+    from repro.runtime.drift import (DriftConfig, DriftController,
+                                     DriftMonitor)
+    from repro.runtime.engine import Request
+
+    sim = DriftSimulator.for_session(session)
+    mon = DriftMonitor(session, sim, config=DriftConfig(
+        n_canary=args.n_canary, probe_every=args.probe_every))
+    read_faults = None
+    if args.drift_sim and session.placement is not None:
+        def read_faults(packed_params):
+            masks = np.asarray(session.calibration.masks, bool)
+            pl = refresh_fault_state(session.placement, masks,
+                                     np.asarray(sim.sense_offsets()))
+            return inject_read_faults(packed_params, pl)
+    ctl = DriftController(engine, mon, params,
+                          pack_name=f"{args.arch}-{args.preset}",
+                          read_faults=read_faults)
+    print(f"  monitor: probing {args.n_canary} canaries/subarray every "
+          f"{args.probe_every} steps "
+          f"(amortized overhead {mon.probe_overhead():.2%} of decode)")
+
+    engine.submit_all(requests)
+    drifted, steps = False, 0
+    while (engine.n_pending or engine.n_active
+           or ctl.phase != "monitor" or engine.swap_pending):
+        if args.drift_sim and not drifted and steps >= args.drift_at:
+            subs = [int(s) for s in args.drift_subarrays.split(",") if s]
+            sim.advance(temp_c=args.drift_temp, days=args.drift_days,
+                        subarrays=subs)
+            _, masks = probe_ecr(
+                jax.random.fold_in(jax.random.key(args.seed), 0xD21F),
+                sim.sense_offsets(), mon._charges(), session.physics,
+                session.n_fracs, n_trials=128)
+            if session.placement is not None:
+                engine.params = inject_read_faults(
+                    engine.params, refresh_fault_state(
+                        session.placement, np.asarray(masks, bool),
+                        np.asarray(sim.sense_offsets())))
+            print(f"  drift-sim: offsets drifted at step {steps} "
+                  f"(temp {args.drift_temp:.0f}C, {args.drift_days:g} "
+                  f"days, subarrays {subs}); live pack corrupted")
+            drifted = True
+        ctl.step()
+        steps += 1
+        if steps > 64 * (len(requests) + 8):
+            raise RuntimeError("monitor loop did not converge")
+
+    rep = ctl.report()
+    for ev in mon.detector.events:
+        print(f"    drift event: subarray {ev.subarray} {ev.severity} "
+              f"(canary ECR {ev.new_ecr:.3f}, probe round "
+              f"{ev.probe_round})")
+    for rec in rep["recoveries"]:
+        ecr = ", ".join(f"{g}: {e:.3f}"
+                        for g, e in rec["recalibrated_ecr"].items())
+        print(f"    recovery: detected step {rec['detected_step']}, "
+              f"recalibrated subarrays {rec['subarrays']} "
+              f"(post-recal table ECR {{{ecr}}}), hot swap staged at "
+              f"step {rec['swap_staged_step']}")
+    print(f"    swaps at steps {rep['swap_steps']}, tokens on swap steps "
+          f"{rep['swap_step_tokens']}, min tokens/step "
+          f"{rep['min_tokens_per_step']} (zero-downtime: no stalled step)")
+    sched = engine.scheduler_report()
+    print(f"  engine: {sched['completed']} requests, "
+          f"{sched['generated_tokens']} tokens in {sched['steps']} steps "
+          f"({sched['batch_size']} slots, "
+          f"occupancy {sched['slot_occupancy']:.1%})")
+
+    if rep["recoveries"]:
+        # Spot check: post-swap decode must equal a fresh decode on the
+        # recovered pack (the bit-exactness contract, tests/test_drift.py).
+        post = [Request(request_id=1000 + i,
+                        tokens=tokens[i], max_new_tokens=args.gen)
+                for i in range(min(2, len(requests)))]
+        comps = {c.request_id: c for c in ctl.run(post)}
+        fresh = session.packed.params
+        n_ok = 0
+        for r in post:
+            want, _ = greedy_generate(
+                model, fresh, jnp.asarray(r.tokens)[None, :],
+                args.gen, max_len)
+            n_ok += comps[r.request_id].tokens == list(np.asarray(want[0]))
+        print(f"    post-swap spot check: {n_ok}/{len(post)} requests "
+              "bit-identical to fresh decode on the recovered pack")
+        if n_ok != len(post):
+            raise RuntimeError("post-swap decode diverged from fresh pack")
+    age = session.calibration_age()
+    if age is not None:
+        print(f"    table age: {age['age_days']:.4f} days "
+              f"(assumed temp {age['assumed_temp_c']:.0f}C)")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -122,6 +230,29 @@ def main(argv=None) -> int:
                     action="store_false", default=True,
                     help="with --calib-cache: skip column placement and "
                          "pack onto logical columns (faulty ones included)")
+    ap.add_argument("--monitor", action="store_true",
+                    help="with --pud-gemv --engine: reserve canary columns, "
+                         "probe them between decode steps (runtime/drift.py) "
+                         "and recover from detected drift via partial "
+                         "recalibration + a between-steps hot swap")
+    ap.add_argument("--drift-sim", action="store_true",
+                    help="with --monitor: inject simulated offset drift "
+                         "(core/reliability.DriftSimulator) mid-serve and "
+                         "demonstrate the full detect/recal/swap loop")
+    ap.add_argument("--drift-at", type=int, default=3,
+                    help="engine step at which --drift-sim injects drift")
+    ap.add_argument("--drift-temp", type=float, default=3000.0,
+                    help="simulated operating temperature in C; the default "
+                         "is a deliberate stress far beyond the paper's "
+                         "envelope so detection is certain in one round")
+    ap.add_argument("--drift-days", type=float, default=0.0,
+                    help="simulated days since calibration (time-drift leg)")
+    ap.add_argument("--drift-subarrays", default="1,5",
+                    help="comma-separated subarray ids hit by --drift-sim")
+    ap.add_argument("--probe-every", type=int, default=4,
+                    help="canary probe cadence in engine steps")
+    ap.add_argument("--n-canary", type=int, default=16,
+                    help="reserved canary columns per subarray")
     ap.add_argument("--calib-cache", default=None, metavar="DIR",
                     help="persistent calibration-table cache; serving "
                          "starts from the device's stored per-subarray "
@@ -133,6 +264,10 @@ def main(argv=None) -> int:
                     help="columns per subarray used on a cache miss")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.monitor and not (args.pud_gemv and args.engine):
+        ap.error("--monitor requires --pud-gemv and --engine")
+    if args.drift_sim and not args.monitor:
+        ap.error("--drift-sim requires --monitor")
 
     spec = get(args.arch)
     model = spec.make_smoke() if args.preset == "smoke" else spec.make_model()
@@ -195,6 +330,19 @@ def main(argv=None) -> int:
                   f"in {st.wall_s:.2f}s: "
                   f"{session.fleet_cfg.n_subarrays_total} subarrays, "
                   f"mean ECR {mean_ecr:.3f}")
+
+        if args.monitor:
+            # Canaries must be carved out before packing so placement
+            # avoids them; a cache-less session calibrates here.
+            if session.calibration is None:
+                st = session.calibrate()
+                print(f"  calibration (for --monitor): identified "
+                      f"{session.fleet_cfg.n_subarrays_total} subarrays "
+                      f"in {st.wall_s:.2f}s")
+            session.reserve_canaries(args.n_canary)
+            print(f"  canaries: {args.n_canary}/subarray reserved "
+                  f"(set {session.canaries.fingerprint()}), excluded "
+                  "from placement")
 
         packed = session.pack(params, cfg,
                               name=f"{args.arch}-{args.preset}")
@@ -273,6 +421,9 @@ def main(argv=None) -> int:
         requests = [Request(request_id=i, tokens=tokens[i],
                             max_new_tokens=args.gen)
                     for i in range(args.batch)]
+        if args.monitor:
+            return _monitored_serve(args, session, engine, model, params,
+                                    requests, tokens, max_len)
         completions = engine.run(requests)
         sched = engine.scheduler_report()
         print(f"  engine: {sched['completed']} requests, "

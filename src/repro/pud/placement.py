@@ -344,6 +344,41 @@ def plan_for_grid(masks, requests, grid_shape, **kw) -> Placement:
     return dataclasses.replace(p, grid_shape=tuple(grid_shape))
 
 
+def refresh_fault_state(placement: Placement, masks,
+                        sense_offsets=None) -> Placement:
+    """Recompute every entry's faulty/stuck window masks from new masks.
+
+    Drift changes *which* columns are error-prone, not where tensors live:
+    the column maps were planned at calibration time and the packs built
+    from them.  This re-reads each materialized window's fault state out of
+    fresh (drifted) per-column masks, which is exactly what
+    ``inject_read_faults`` needs to model serving from the aged device — a
+    column that went bad after planning now corrupts the window position it
+    backs.  Capacity accounting keeps its calibration-time values;
+    re-planning against the new masks is the recovery path's job, not this
+    view's.
+    """
+    masks = np.asarray(masks, bool)
+    flat_faulty = masks.reshape(-1)
+    entries: dict[str, TensorPlacement] = {}
+    for name, tp in placement.entries.items():
+        stacked = tp.phys_cols.ndim == 2
+        slices = tp.phys_cols if stacked else tp.phys_cols[None]
+        faulty, stuck = [], []
+        for cols in slices:
+            starts, spans = _slice_blocks(
+                np.asarray(cols, np.int64), tp.block_cols)
+            f, s = _window_masks(starts, spans, tp.window_block,
+                                 flat_faulty, sense_offsets)
+            faulty.append(f)
+            stuck.append(s)
+        entries[name] = dataclasses.replace(
+            tp,
+            faulty=np.stack(faulty) if stacked else faulty[0],
+            stuck=np.stack(stuck) if stacked else stuck[0])
+    return dataclasses.replace(placement, entries=entries)
+
+
 # ---------------------------------------------------------------------------
 # Fault injection (pud/physics stuck-read model)
 # ---------------------------------------------------------------------------

@@ -35,11 +35,18 @@ import os
 import pathlib
 import re
 import shutil
+import time
 import zlib
 
 import numpy as np
 
 FORMAT = "fleet-calib-v2"
+
+# Age metadata (drift monitoring) rides in an OPTIONAL "calibration" manifest
+# block rather than a format bump: v2 entries written before the drift
+# subsystem existed must keep loading as valid — re-characterizing a fleet
+# because its manifest lacks a timestamp would be strictly worse than
+# serving from it and letting the canary monitor judge its staleness.
 
 
 def params_fingerprint(params) -> str:
@@ -64,6 +71,17 @@ class CalibrationTable:
     ecr: np.ndarray | None            # [G] float32
     masks: np.ndarray | None          # [G, n_cols] bool (True = error-prone)
     metadata: dict
+    # Age metadata — None for entries saved before the drift subsystem.
+    calibrated_at: float | None = None       # wall time of identification
+    assumed_temp_c: float | None = None      # operating temp the table assumes
+    params_fingerprint: str | None = None    # physics fingerprint of the entry
+
+    def age_days(self, now: float | None = None) -> float | None:
+        """Days since identification, or None for a pre-age-metadata entry."""
+        if self.calibrated_at is None:
+            return None
+        return max(0.0, ((time.time() if now is None else now)
+                         - self.calibrated_at) / 86400.0)
 
 
 def _safe_name(name: str) -> str:
@@ -82,7 +100,9 @@ class CalibrationTableCache:
     def save(self, device_id: str, cfg, params, levels: np.ndarray,
              ecr: np.ndarray | None = None,
              masks: np.ndarray | None = None,
-             metadata: dict | None = None) -> pathlib.Path:
+             metadata: dict | None = None,
+             calibrated_at: float | None = None,
+             assumed_temp_c: float | None = None) -> pathlib.Path:
         final = self._entry_dir(device_id, cfg, params)
         # sweep staging dirs of crashed earlier saves of this entry
         for stale in final.parent.glob(final.name + ".tmp-*"):
@@ -101,6 +121,12 @@ class CalibrationTableCache:
             "params_fingerprint": params_fingerprint(params),
             "crc32": crc,
             "metadata": metadata or {},
+            "calibration": {
+                "calibrated_at": float(time.time() if calibrated_at is None
+                                       else calibrated_at),
+                "assumed_temp_c": (None if assumed_temp_c is None
+                                   else float(assumed_temp_c)),
+            },
         }
         if ecr is not None:
             np.save(tmp / "ecr.npy", np.asarray(ecr, np.float32))
@@ -179,9 +205,16 @@ class CalibrationTableCache:
                 masks = None
             if masks is not None and tuple(masks.shape) != want_shape:
                 masks = None
+        # Version-tolerant age read: entries saved before the drift subsystem
+        # have no "calibration" block — they load as valid with None ages.
+        calib = manifest.get("calibration") or {}
         return CalibrationTable(device_id=device_id, levels=levels, ecr=ecr,
                                 masks=masks,
-                                metadata=manifest.get("metadata", {}))
+                                metadata=manifest.get("metadata", {}),
+                                calibrated_at=calib.get("calibrated_at"),
+                                assumed_temp_c=calib.get("assumed_temp_c"),
+                                params_fingerprint=manifest.get(
+                                    "params_fingerprint"))
 
     def load_placement(self, device_id: str, cfg, params, name: str):
         """One persisted Placement, or None on absence/corruption/mismatch."""
@@ -259,6 +292,7 @@ def _entry_rows(root: pathlib.Path) -> list[dict]:
             m = {}
         placements = entry / "placements"
         rows.append({
+            "calibrated_at": (m.get("calibration") or {}).get("calibrated_at"),
             "device_id": entry.parent.name,
             "table_key": entry.name,
             "format": m.get("format", "?"),
@@ -302,9 +336,12 @@ def main(argv=None) -> int:
         for r in rows:
             grid = "x".join(str(s) for s in (r["grid_shape"] or ["?"]))
             frac = "".join(str(f) for f in (r["frac_counts"] or ["?"]))
+            at = r["calibrated_at"]
+            age = (f"age {(time.time() - at) / 86400.0:.1f}d"
+                   if at else "age unknown")
             print(f"{r['device_id']:<12s} {r['table_key']:<40s} "
                   f"{r['format']:<15s} grid {grid} x {r['n_cols']} cols "
-                  f"T{frac}  {r['n_placements']} placement(s)  "
+                  f"T{frac}  {r['n_placements']} placement(s)  {age}  "
                   f"{r['bytes'] / 1024:.1f} KiB")
         return 0
     devices = {r["device_id"] for r in rows}

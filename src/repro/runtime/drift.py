@@ -1,0 +1,341 @@
+"""Online drift monitor + zero-downtime live recalibration for serving.
+
+The paper calibrates once and holds the table fixed; PuDGhost-style drift
+(temperature, aging — ``pud/physics`` sigma_temp/time_drift) slowly turns
+calibration-time error-free columns error-prone, and a placed pack built
+from stale masks starts reading stuck values on the columns that went bad.
+This module closes the loop while the engine keeps serving:
+
+  1. **Canary probing** (``DriftMonitor``): every ``probe_every`` controller
+     ticks, push ``probe_trials`` known MAJ5 patterns through the reserved
+     canary columns (``core/canary``) and score per-subarray canary ECR
+     against the calibrated baseline.  Canaries were error-free at
+     calibration by construction, so the baseline is zero up to the
+     re-measurement churn floor; the per-subarray EMA detector
+     (``DriftDetector``, ``StepWatchdog`` style — flagged rounds are
+     excluded from the baseline EMA) raises ``DriftEvent(subarray,
+     new_ecr, severity)`` when the excess clears the thresholds.
+  2. **Background recalibration** (``DriftController``): on a critical
+     event, re-run ladder identification for *only* the affected subarrays
+     (``PUDSession.recalibrate_subarrays`` -> ``core/fleet``), persist the
+     refreshed table through ``runtime/calib_cache`` (which drops the
+     entry's stale placements), and re-plan + re-pack so tensors move off
+     the columns that went bad.
+  3. **Hot swap**: the rebuilt pack is parked via
+     ``ServingEngine.stage_params`` and swapped in at the next step
+     boundary — the engine decodes on the old pack through every recovery
+     phase, so no request ever stalls and tokens flow on every step.
+
+The controller runs its state machine *between* engine steps, one phase
+per tick (probe / recalibrate / repack+stage), so fleet recalibration never
+executes synchronously on the decode path — pinned by the
+``no-recal-on-decode-path`` rule in ``analysis/lint.py``.
+
+Detector thresholds vs the churn floor: canary ECR is quantized to 1/N for
+N canaries, and re-probing an "error-free" column with a fresh finite trial
+campaign flips marginal columns — the shallower the calibration, the more
+marginal columns, so at smoke-test calibration depth 1-2 of 16 canaries
+flip per round at *nominal* conditions.  The defaults (16 canaries, warn
+at +0.15 ~ 3 flips, critical at +0.30 ~ 5 flips above the EMA baseline)
+sit well above that floor while a real drift event — a sizeable fraction
+of the subarray's columns flipping at once — clears critical in a single
+probe round.  After a recovery the affected subarrays *re-baseline*: their
+next probe value is absorbed as the new EMA, because recalibrating against
+drifted offsets legitimately leaves a higher residual churn level than the
+pristine table had.
+
+Probe amortization: a probe round is ``probe_trials`` MAJ5 waves (the
+canary columns of every subarray ride the same waves — columns within a
+wave are free), priced by the same ``wave_latency_ns`` model serving rates
+come from; ``DriftMonitor.probe_overhead()`` reports the modeled fraction
+of DRAM time the schedule spends probing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core.canary import probe_ecr
+from repro.pud.timing import maj5_counts, wave_latency_ns
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftConfig:
+    """Monitor schedule + detector thresholds (see module docstring)."""
+
+    n_canary: int = 16            # canary columns per subarray
+    probe_every: int = 4          # controller ticks between probe rounds
+    probe_trials: int = 64        # MAJ5 patterns per probe round
+    ema_alpha: float = 0.25       # churn-baseline EMA weight
+    warn_new_ecr: float = 0.15    # excess canary ECR -> warn event
+    critical_new_ecr: float = 0.30  # excess canary ECR -> recalibrate
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftEvent:
+    """One detector firing: ``new_ecr`` is the canary ECR the probe read."""
+
+    subarray: int
+    new_ecr: float
+    severity: str                 # "warn" | "critical"
+    probe_round: int = 0
+
+
+class DriftDetector:
+    """Per-subarray EMA detector over canary ECR (``StepWatchdog`` idiom).
+
+    The baseline starts at zero — canaries are error-free at calibration
+    by construction — and healthy rounds refine it toward the churn floor;
+    rounds that raise an event are excluded so drift cannot poison the
+    baseline it is measured against.
+    """
+
+    def __init__(self, n_subarrays: int, config: DriftConfig):
+        self.config = config
+        self.ema = np.zeros(n_subarrays, np.float32)
+        self.events: list[DriftEvent] = []
+        self._rebaseline: set[int] = set()
+
+    def rebaseline(self, subarrays) -> None:
+        """Absorb the next probe of ``subarrays`` directly as their EMA.
+
+        Called after a recovery: a table recalibrated against drifted
+        offsets legitimately has a higher residual churn level, and judging
+        it against the pristine baseline would re-trigger forever.
+        """
+        self._rebaseline.update(int(s) for s in subarrays)
+
+    def update(self, canary_ecr, probe_round: int) -> list[DriftEvent]:
+        out = []
+        a = self.config.ema_alpha
+        for g, e in enumerate(np.asarray(canary_ecr, np.float32)):
+            if g in self._rebaseline:
+                self._rebaseline.discard(g)
+                self.ema[g] = float(e)
+                continue
+            excess = float(e) - float(self.ema[g])
+            if excess > self.config.critical_new_ecr:
+                out.append(DriftEvent(g, float(e), "critical", probe_round))
+            elif excess > self.config.warn_new_ecr:
+                out.append(DriftEvent(g, float(e), "warn", probe_round))
+            else:
+                self.ema[g] = (1 - a) * self.ema[g] + a * float(e)
+        self.events.extend(out)
+        return out
+
+
+class DriftMonitor:
+    """Canary probing of one device against a session's live table.
+
+    ``device`` is anything with ``sense_offsets() -> [G, n_cols]`` — the
+    ``core/reliability.DriftSimulator`` under ``--drift-sim``, or a real-
+    hardware adapter.  Probes always measure against the session's
+    *current* levels, so post-recovery rounds score the refreshed table.
+    """
+
+    def __init__(self, session, device, *, config: DriftConfig = DriftConfig(),
+                 key: jax.Array | None = None):
+        if session.calibration is None:
+            raise RuntimeError("DriftMonitor requires a calibrated session")
+        if session.canaries is None:
+            session.reserve_canaries(config.n_canary)
+        self.session = session
+        self.device = device
+        self.config = config
+        self.key = (key if key is not None
+                    else jax.random.fold_in(session.key, 0x0D41F7))
+        self.detector = DriftDetector(
+            session.fleet_cfg.n_subarrays_total, config)
+        self.probe_rounds = 0
+        self.last_canary_ecr: np.ndarray | None = None
+
+    def _charges(self):
+        from repro.core.fleet import fleet_calib_charges
+        return fleet_calib_charges(
+            self.session.ladder, self.session.calibration.levels,
+            self.session.physics)
+
+    def probe(self) -> list[DriftEvent]:
+        """One probe round over the canary columns; returns new events."""
+        cs = self.session.canaries
+        ecr, _ = probe_ecr(
+            jax.random.fold_in(self.key, self.probe_rounds),
+            self.device.sense_offsets(), self._charges(),
+            self.session.physics, self.session.n_fracs,
+            cols=cs.cols, n_trials=self.config.probe_trials)
+        self.last_canary_ecr = np.asarray(ecr)
+        events = self.detector.update(self.last_canary_ecr,
+                                      self.probe_rounds)
+        self.probe_rounds += 1
+        return events
+
+    def probe_overhead(self, flops_per_token: float | None = None,
+                       batch_size: int = 1) -> float | None:
+        """Modeled fraction of DRAM time the probe schedule costs.
+
+        One probe round = ``probe_trials`` MAJ5 waves (all subarrays' canary
+        columns ride the same wave — columns are the free axis), amortized
+        over ``probe_every`` decode steps priced by the session's
+        ``FleetPerfModel``.  None when the session cannot price a token.
+        """
+        pm = (self.session.placement_perf_model()
+              or self.session.tuned_perf_model())
+        flops = flops_per_token or self.session.flops_per_token()
+        if flops is None or not hasattr(pm, "batched_tokens_per_second"):
+            return None
+        counts = maj5_counts(self.session.fleet_cfg.frac_counts)
+        probe_s = (self.config.probe_trials
+                   * wave_latency_ns(counts, pm.sys) * 1e-9)
+        tok_s = pm.batched_tokens_per_second(flops, batch_size)
+        step_s = batch_size / tok_s
+        return probe_s / (probe_s + self.config.probe_every * step_s)
+
+    def report(self) -> dict:
+        """Monitor telemetry: probe progress, detector state, staleness."""
+        return {
+            "probe_rounds": self.probe_rounds,
+            "n_canary": (self.session.canaries.n_per_subarray
+                         if self.session.canaries else 0),
+            "last_canary_ecr": (None if self.last_canary_ecr is None
+                                else [float(e)
+                                      for e in self.last_canary_ecr]),
+            "ema": [float(e) for e in self.detector.ema],
+            "events": len(self.detector.events),
+            "critical_events": sum(e.severity == "critical"
+                                   for e in self.detector.events),
+            "probe_overhead": self.probe_overhead(),
+            "table_age": self.session.calibration_age(),
+        }
+
+
+class DriftController:
+    """Recovery state machine driven between engine steps.
+
+    ``step()`` runs one engine step, then one controller phase:
+
+        monitor      probe on schedule; critical events queue subarrays
+        recalibrate  partial fleet recal via the session (background)
+        repack       re-plan placement + rebuild the pack, stage the swap
+
+    The swap itself happens inside the *engine* at the top of its next
+    step (``stage_params`` double buffer), so decode continues on the old
+    pack through every phase and tokens are emitted on every step with
+    live requests — zero downtime by construction.
+
+    ``read_faults``: optional ``f(packed_params) -> packed_params`` mapping
+    a freshly built pack to what the (possibly faulty) device would serve —
+    under ``--drift-sim`` this injects the simulator's stuck-read state, a
+    numeric no-op for an ``avoid_faulty`` placement since the refreshed
+    plan dodges every drifted column.
+    """
+
+    def __init__(self, engine, monitor: DriftMonitor, model_params, *,
+                 pack_cfg=None, pack_name: str | None = None,
+                 read_faults=None):
+        self.engine = engine
+        self.monitor = monitor
+        self.session = monitor.session
+        self.model_params = model_params
+        # Default to the config of the pack the engine is serving, so the
+        # rebuilt pack differs only by placement.
+        self.pack_cfg = (pack_cfg if pack_cfg is not None
+                         else self.session._pack_cfg)
+        self.pack_name = pack_name
+        self.read_faults = read_faults
+        self.phase = "monitor"
+        self.tokens_per_step: list[int] = []
+        self.swap_step_tokens: list[int] = []   # tokens emitted on swap steps
+        self.recoveries: list[dict] = []
+        self._pending: set[int] = set()
+        self._current: dict | None = None
+        self._ticks = 0
+
+    # -- loop ----------------------------------------------------------------
+
+    def step(self):
+        """One engine step + one controller phase; returns completions."""
+        emitted0 = self.engine._active_slot_steps
+        swaps0 = len(self.engine._swap_steps)
+        completions = self.engine.step()
+        emitted = self.engine._active_slot_steps - emitted0
+        self.tokens_per_step.append(emitted)
+        if len(self.engine._swap_steps) > swaps0:
+            self.swap_step_tokens.append(emitted)
+        self._tick()
+        return completions
+
+    def run(self, requests=None):
+        """Drain requests (and any in-flight recovery) to completion."""
+        if requests is not None:
+            self.engine.submit_all(requests)
+        while (self.engine.n_pending or self.engine.n_active
+               or self.phase != "monitor" or self.engine.swap_pending):
+            self.step()
+        return sorted(self.engine._completions,
+                      key=lambda c: c.request_id)
+
+    # -- state machine -------------------------------------------------------
+
+    def _tick(self) -> None:
+        self._ticks += 1
+        if self.phase == "monitor":
+            if (self._ticks - 1) % self.monitor.config.probe_every:
+                return
+            events = self.monitor.probe()
+            critical = sorted({e.subarray for e in events
+                               if e.severity == "critical"})
+            if critical:
+                self._pending.update(critical)
+                ecr = self.monitor.last_canary_ecr
+                self._current = {
+                    "detected_step": self.engine._step_idx,
+                    "detected_round": self.monitor.probe_rounds - 1,
+                    "subarrays": critical,
+                    "canary_ecr_at_detection": {
+                        g: float(ecr[g]) for g in critical},
+                }
+                self.phase = "recalibrate"
+        elif self.phase == "recalibrate":
+            affected = sorted(self._pending)
+            self._pending.clear()
+            self.session.recalibrate_subarrays(
+                affected, self.device.sense_offsets(),
+                assumed_temp_c=getattr(self.device, "temp_c", None))
+            self.phase = "repack"
+        elif self.phase == "repack":
+            packed = self.session.pack(self.model_params, self.pack_cfg,
+                                       name=self.pack_name)
+            params = packed.params
+            if self.read_faults is not None:
+                params = self.read_faults(params)
+            self.engine.stage_params(params)
+            self._current["swap_staged_step"] = self.engine._step_idx
+            self._current["recalibrated_ecr"] = {
+                g: float(np.asarray(self.session.calibration.ecr)[g])
+                for g in self._current["subarrays"]}
+            self.monitor.detector.rebaseline(self._current["subarrays"])
+            self.recoveries.append(self._current)
+            self._current = None
+            self.phase = "monitor"
+
+    @property
+    def device(self):
+        return self.monitor.device
+
+    # -- reporting -----------------------------------------------------------
+
+    def report(self) -> dict:
+        """Controller + monitor + engine-swap telemetry in one dict."""
+        rep = self.monitor.report()
+        rep.update({
+            "phase": self.phase,
+            "ticks": self._ticks,
+            "recoveries": list(self.recoveries),
+            "swap_steps": list(self.engine._swap_steps),
+            "swap_step_tokens": list(self.swap_step_tokens),
+            "min_tokens_per_step": (min(self.tokens_per_step)
+                                    if self.tokens_per_step else 0),
+        })
+        return rep

@@ -43,6 +43,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .watchdog import StepWatchdog
+
 DEFAULT_MAX_BATCH = 32
 
 
@@ -97,7 +99,9 @@ class ServingEngine:
     def __init__(self, model, params, *, max_len: int,
                  session=None, batch_size: int | None = None,
                  max_batch: int = DEFAULT_MAX_BATCH,
-                 collect_logits: bool = False):
+                 collect_logits: bool = False,
+                 watchdog: StepWatchdog | None = None,
+                 heartbeat=None):
         if batch_size is None:
             batch_size = self._default_batch_size(session, max_batch)
         if batch_size < 1:
@@ -119,6 +123,29 @@ class ServingEngine:
         self._step_idx = 0
         self._active_slot_steps = 0              # sum of live slots per step
         self._decode_wall_s = 0.0
+
+        # Step telemetry: every decode step is bracketed by a StepWatchdog
+        # (EMA step time, straggler flags, optional hang callback) and
+        # optionally announced through a Heartbeat for fleet-level liveness.
+        # The default watchdog has no on_hang, so no monitor thread spawns.
+        self.watchdog = watchdog if watchdog is not None else StepWatchdog()
+        self.heartbeat = heartbeat
+        self._hangs = 0
+        user_hang = self.watchdog.on_hang
+        if user_hang is not None:
+            def _counted_hang(waited_s, _cb=user_hang):
+                self._hangs += 1
+                _cb(waited_s)
+            self.watchdog.on_hang = _counted_hang
+
+        # Double-buffered serving tree: ``stage_params`` parks a freshly
+        # packed tree here and the NEXT ``step()`` swaps it in at the step
+        # boundary, so decode never observes a half-replaced pack and no
+        # request stalls (the params argument of the jitted step is not
+        # donated — only the KV cache is — so the old tree stays valid
+        # through the step that builds its replacement).
+        self._staged_params = None
+        self._swap_steps: list[int] = []
 
         # The cache argument is donated: the engine owns the single
         # [L, B, max_len, ...] KV pytree and rebinds it after every call,
@@ -235,22 +262,43 @@ class ServingEngine:
         self._slots[slot] = None
         self._lens[slot] = 0
 
+    def stage_params(self, params) -> None:
+        """Stage a replacement serving tree for a between-steps hot swap.
+
+        The engine keeps decoding on the current tree; the swap happens at
+        the top of the next ``step()``, before admission, so every request
+        (in-flight and newly admitted) sees a consistent pack and no step
+        is ever skipped.  Staging again before the swap replaces the
+        previously staged tree (last writer wins).
+        """
+        self._staged_params = params
+
+    @property
+    def swap_pending(self) -> bool:
+        return self._staged_params is not None
+
     def step(self) -> list[Completion]:
         """Admit, run one batched decode step, evict finished requests.
 
         Returns the requests that finished on this step.
         """
+        if self._staged_params is not None:
+            self.params = self._staged_params
+            self._staged_params = None
+            self._swap_steps.append(self._step_idx)
         self._admit()
         live = [i for i, s in enumerate(self._slots) if s is not None]
         if not live:
             return []
         self._active_slot_steps += len(live)
+        self.watchdog.start_step(self._step_idx)
         t0 = time.time()
         nxt, logits, self._cache = self._step(
             self.params, self._cache, jnp.asarray(self._tokens),
             jnp.asarray(self._lens))
         nxt = np.asarray(nxt)
         self._decode_wall_s += time.time() - t0
+        self.watchdog.end_step()
         self._step_idx += 1
         done_before = len(self._completions)
         logits_np = np.asarray(logits) if self.collect_logits else None
@@ -263,6 +311,10 @@ class ServingEngine:
             self._lens[i] += 1
             if len(st.generated) >= st.request.max_new_tokens:
                 self._evict(i)
+        # beat after evictions so a supervisor reads end-of-step state
+        if self.heartbeat is not None:
+            self.heartbeat.beat(self._step_idx, active=self.n_active,
+                                completed=len(self._completions))
         return self._completions[done_before:]
 
     def run(self, requests=None) -> list[Completion]:
@@ -295,6 +347,11 @@ class ServingEngine:
             "decode_wall_s": self._decode_wall_s,
             "wall_tok_s": (gen_tokens / self._decode_wall_s
                            if self._decode_wall_s else 0.0),
+            "stragglers": len(self.watchdog.stragglers),
+            "step_ema_s": self.watchdog.ema_s,
+            "hangs": self._hangs,
+            "swaps": len(self._swap_steps),
+            "swap_steps": list(self._swap_steps),
         }
 
     def perf_report(self, flops_per_token: float | None = None) -> dict:

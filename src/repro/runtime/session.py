@@ -105,6 +105,7 @@ class PUDSession:
         self.n_trials_ecr = n_trials_ecr
 
         self._state: CalibrationState | None = None
+        self._canaries = None                     # core/canary.CanarySet
         self._operating_point: float | None = None
         self._packed: PackedModel | None = None
         self._pack_cfg: PUDGemvConfig | None = None
@@ -216,6 +217,96 @@ class PUDSession:
             self.physics, 3, n_trials=n_trials or self.n_trials_ecr)
         return float(np.asarray(ecr).mean())
 
+    # -- canaries + live recalibration --------------------------------------
+
+    @property
+    def canaries(self):
+        """The reserved ``core/canary.CanarySet``, or None."""
+        return self._canaries
+
+    def reserve_canaries(self, n_per_subarray: int = 16):
+        """Reserve per-subarray canary columns for the drift monitor.
+
+        Canaries come out of the calibration-time error-free set (evenly
+        spread over each subarray) and are OR-ed into the planning masks,
+        so no tensor is ever placed on them — the monitor can hammer them
+        with probe patterns while decode runs on the rest of the grid.
+        Call after ``calibrate`` and before ``pack``; the reservation also
+        keys persisted placement names, so a canary-less cached plan is
+        never reused for a canary-reserving session.
+        """
+        if self._state is None:
+            raise RuntimeError("reserve_canaries requires calibrate() first")
+        from repro.core.canary import CanarySet, reserve_canaries
+        cols = reserve_canaries(self._state.masks, n_per_subarray)
+        self._canaries = CanarySet(cols=cols, n_cols=self.fleet_cfg.n_cols)
+        return self._canaries
+
+    def recalibrate_subarrays(self, subarrays, sense_offsets, *,
+                              assumed_temp_c: float | None = None
+                              ) -> CalibrationState:
+        """Partial live recalibration against the device's *current* offsets.
+
+        The background half of drift recovery: re-runs ladder
+        identification for ``subarrays`` only (per-subarray RNG streams,
+        so the result is independent of how drift events were batched),
+        re-measures their ECR + masks against the drifted offsets, merges
+        the refreshed rows into the session state, and persists the merged
+        table as a new cache version.  The cache save replaces the whole
+        entry directory, which drops its persisted placements — exactly
+        right, since plans made from the stale masks may sit on columns
+        that went bad; the next ``pack`` re-plans from the merged masks.
+        """
+        if self._state is None:
+            raise RuntimeError(
+                "recalibrate_subarrays requires calibrate() first")
+        from repro.core.ecr import measure_ecr_fleet
+        from repro.core.fleet import fleet_calib_charges, recalibrate_subarrays
+        t0 = time.time()
+        idx = sorted(int(s) for s in subarrays)
+        offs = jnp.asarray(sense_offsets)
+        sub_levels = recalibrate_subarrays(
+            self.key, offs, idx, self.fleet_cfg, self.physics,
+            self.calib_cfg, method=self.method)
+        charges = fleet_calib_charges(self.ladder, sub_levels, self.physics)
+        sub_ecr, sub_masks = measure_ecr_fleet(
+            jax.random.fold_in(self.key, 0x0EC5), offs[jnp.asarray(idx)],
+            charges, self.physics, self.n_fracs,
+            n_trials=self.n_trials_ecr)
+        levels = np.asarray(self._state.levels).copy()
+        ecr = np.asarray(self._state.ecr).copy()
+        masks = np.asarray(self._state.masks).copy()
+        levels[idx] = np.asarray(sub_levels)
+        ecr[idx] = np.asarray(sub_ecr)
+        masks[idx] = np.asarray(sub_masks)
+        self._state = CalibrationState(
+            levels=jnp.asarray(levels), ecr=jnp.asarray(ecr),
+            masks=jnp.asarray(masks), cache_hit=False,
+            wall_s=time.time() - t0)
+        if self.cache is not None:
+            self.cache.save(
+                self.device_id, self.fleet_cfg, self.physics, levels,
+                ecr=ecr, masks=masks,
+                metadata={"method": self.method,
+                          "recalibrated_subarrays": idx},
+                assumed_temp_c=(self.physics.temp_nominal_c
+                                if assumed_temp_c is None
+                                else assumed_temp_c))
+        return self._state
+
+    def calibration_age(self) -> dict | None:
+        """Age metadata of the persisted table (staleness for the drift
+        monitor), or None without a cache / persisted entry."""
+        if self.cache is None or isinstance(self.cache, _NullCache):
+            return None
+        table = self.cache.load(self.device_id, self.fleet_cfg, self.physics)
+        if table is None:
+            return None
+        return {"calibrated_at": table.calibrated_at,
+                "age_days": table.age_days(),
+                "assumed_temp_c": table.assumed_temp_c,
+                "params_fingerprint": table.params_fingerprint}
+
     # -- placement + packing ------------------------------------------------
 
     @property
@@ -244,6 +335,12 @@ class PUDSession:
               name: str | None) -> Placement | None:
         reqs = packing_requests(params, cfg)
         pname = f"{name or self.arch or 'model'}-{requests_fingerprint(reqs)}"
+        masks = self._state.masks
+        if self._canaries is not None:
+            # Reserved canaries plan as unusable despite being error-free,
+            # and the reservation hash keys the persisted plan.
+            masks = np.asarray(masks, bool) | self._canaries.mask()
+            pname += f"-c{self._canaries.fingerprint()}"
         self._placement_name = pname
         placement = None
         if self.cache is not None:
@@ -254,7 +351,7 @@ class PUDSession:
             return placement
         try:
             placement = plan_for_grid(
-                self._state.masks, reqs, self.fleet_cfg.grid_shape)
+                masks, reqs, self.fleet_cfg.grid_shape)
         except PlacementError as e:
             self._placement_status, self._placement_error = "skipped", str(e)
             return None

@@ -1,4 +1,8 @@
-"""Straggler / hang mitigation for the training loop.
+"""Straggler / hang mitigation for the training and serving loops.
+
+``launch/train.py`` brackets its optimizer steps with these; ``ServingEngine``
+brackets every decode step the same way and surfaces the counters
+(stragglers, EMA step time, hangs) through ``perf_report``.
 
 Two cooperating pieces, both host-side (the device program is SPMD and
 lock-stepped — detection must happen at the host boundary):

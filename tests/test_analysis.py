@@ -64,6 +64,12 @@ FIXTURES = [
         import jax
         jax.set_mesh(mesh)
         """),
+    ("no-recal-on-decode-path", "src/repro/runtime/engine.py", """
+        from repro.core.fleet import recalibrate_subarrays
+        """),
+    ("no-recal-on-decode-path", LIB, """
+        levels = calibrate_fleet(key, offsets, cfg, params)
+        """),
 ]
 
 
@@ -95,6 +101,12 @@ def test_rules_are_path_scoped():
         (LIB, "import jax\nkey = jax.random.fold_in(key, 3)"),
         # assert outside kernel code is pytest's job, not the lint's
         ("tests/test_x.py", "assert x == 1"),
+        # recalibration is legal off the decode path: the drift controller
+        # and session run it between steps and hand the engine a pack
+        ("src/repro/runtime/drift.py",
+         "from repro.core.fleet import recalibrate_subarrays"),
+        ("src/repro/runtime/session.py",
+         "levels = calibrate_fleet(key, offsets, cfg, params)"),
     ]
     for path, snippet in ok:
         assert lint.lint_source(snippet, path) == [], (path, snippet)

@@ -133,6 +133,58 @@ def test_crashed_staging_dir_swept_on_save(warm, tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# Calibration age metadata (drift monitoring): stamped on save, version-
+# tolerant on load — entries written before the metadata existed still read
+# as valid tables with unknown age.
+# ---------------------------------------------------------------------------
+
+def test_fresh_save_stamps_calibration_age(warm):
+    cache, entry, _ = warm
+    manifest = json.loads((entry / "manifest.json").read_text())
+    calib = manifest["calibration"]
+    assert calib["calibrated_at"] > 0
+    table = cache.load("dev", CFG, P)
+    assert table.calibrated_at == calib["calibrated_at"]
+    assert table.params_fingerprint == params_fingerprint(P)
+    # load_or_calibrate stamps the physics' nominal temperature
+    assert table.assumed_temp_c == P.temp_nominal_c
+    assert table.age_days() >= 0.0
+    assert table.age_days(now=table.calibrated_at + 86400.0) == \
+        pytest.approx(1.0)
+    # clock skew can't produce negative ages
+    assert table.age_days(now=table.calibrated_at - 60.0) == 0.0
+
+
+def test_entry_without_calibration_block_loads_with_unknown_age(warm):
+    """Pre-metadata entries (same format version) must stay readable."""
+    cache, entry, (levels, _, _) = warm
+    manifest = json.loads((entry / "manifest.json").read_text())
+    del manifest["calibration"]
+    (entry / "manifest.json").write_text(json.dumps(manifest))
+    table = cache.load("dev", CFG, P)
+    assert table is not None                          # still a hit ...
+    np.testing.assert_array_equal(table.levels, levels)
+    assert table.calibrated_at is None                # ... age unknown
+    assert table.assumed_temp_c is None
+    assert table.age_days() is None
+
+
+def test_explicit_calibrated_at_roundtrips(warm):
+    cache, entry, (levels, ecr, masks) = warm
+    cache.save("dev", CFG, P, levels, ecr=ecr, masks=masks,
+               calibrated_at=123456.0, assumed_temp_c=62.5)
+    table = cache.load("dev", CFG, P)
+    assert table.calibrated_at == 123456.0
+    assert table.assumed_temp_c == 62.5
+
+
+def test_cli_list_shows_age(warm, tmp_path, capsys):
+    from repro.runtime.calib_cache import main as cli
+    assert cli(["--root", str(tmp_path), "--list"]) == 0
+    assert "age " in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
 # CLI (python -m repro.runtime.calib_cache)
 # ---------------------------------------------------------------------------
 
