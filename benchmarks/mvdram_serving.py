@@ -17,11 +17,13 @@ a placed device multiplies this by its replica count).
 """
 from __future__ import annotations
 
-from repro.api import (ECR_BASELINE_B300, ECR_PUDTUNE_T210, FleetPerfModel,
-                       PUDSession)
+from repro.api import (ECR_BASELINE_B300, ECR_PUDTUNE_T210,
+                       FleetPerfAggregate, FleetPerfModel, PUDSession)
 from repro.configs import all_archs, get
 
 from .common import emit, parse_scale  # noqa: F401  (parse_scale: CLI compat)
+
+SHARD_COUNTS = (1, 2, 4)
 
 
 def run(scale=None) -> list[dict]:
@@ -29,6 +31,10 @@ def run(scale=None) -> list[dict]:
     tune = PUDSession.at_operating_point(ECR_PUDTUNE_T210)
     tune_fleet = FleetPerfModel.from_table([ECR_PUDTUNE_T210])
     opt = tune_fleet.optimal_batch_size()
+    # tensor-parallel fleet of identical pinned devices, even column split
+    # (per-arch block raggedness is serving_engine_sharded's job)
+    shard_aggs = {s: FleetPerfAggregate(shards=(tune_fleet,) * s, n_data=1)
+                  for s in SHARD_COUNTS}
     rows = []
     for arch in all_archs():
         spec = get(arch)
@@ -45,6 +51,10 @@ def run(scale=None) -> list[dict]:
             "batch_opt": opt,
             "batch_opt_tok_s": tune_fleet.batched_tokens_per_second(
                 flops_tok, opt),
+            **{f"shard{s}_tok_s":
+               shard_aggs[s].tokens_per_second(flops_tok)
+               for s in SHARD_COUNTS},
+            "shard4_eff": shard_aggs[4].scaling_efficiency(flops_tok),
         })
     return rows
 
@@ -60,10 +70,14 @@ def main(scale=None) -> None:
               f"{r['baseline_tok_s']:7.3f} -> {r['pudtune_tok_s']:7.3f} tok/s"
               f"  ({r['gain']:.2f}x)"
               f"  | batched: {r['batch2_tok_s']:7.3f} @2, "
-              f"{r['batch_opt_tok_s']:7.3f} @{r['batch_opt']} (opt)")
+              f"{r['batch_opt_tok_s']:7.3f} @{r['batch_opt']} (opt)"
+              f"  | sharded: {r['shard2_tok_s']:7.3f} @2, "
+              f"{r['shard4_tok_s']:7.3f} @4 "
+              f"({r['shard4_eff']:.0%} eff)")
     print("  (PUDTune's column gain converts 1:1 into serving throughput "
-          "for every arch; batching amortizes per-wave weight staging on "
-          "top of it)")
+          "for every arch; batching amortizes per-wave weight staging, "
+          "tensor-parallel shards split every projection's columns on "
+          "window-block boundaries on top of it)")
 
 
 if __name__ == "__main__":

@@ -14,14 +14,22 @@ Two rate surfaces per batch size:
     requests through the placed Pallas path on this container's CPU
     (interpret mode), reporting scheduler occupancy and wall tokens/s.
     CPU wall numbers are for the scheduler's health, not DRAM throughput.
+
+A third section prices the tensor-parallel fleet: the same calibrated
+device's rate model composed into a ``FleetPerfAggregate`` at 1/2/4 model
+shards, with shard widths from the FULL arch geometry split on window-block
+boundaries (``shard_column_slices`` — the same split ``PUDFleetSession``
+executes).  Pure rate-model math: no forced multi-device runtime, so this
+runs on the single-device CI container.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.api import (CalibrationConfig, FleetConfig, PUDGemvConfig,
-                       PUDSession, Request, ServingEngine)
+from repro.api import (CalibrationConfig, FleetConfig, FleetPerfAggregate,
+                       FleetPerfModel, PUDGemvConfig, PUDSession, Request,
+                       ServingEngine, shard_column_slices)
 from repro.configs import get
 
 from .common import emit
@@ -30,6 +38,7 @@ ARCH = "qwen3-1.7b"
 N_REQUESTS = 6
 PROMPT_LEN = 8
 GEN = 4
+SHARD_COUNTS = (1, 2, 4)
 
 
 def _session() -> PUDSession:
@@ -41,6 +50,44 @@ def _session() -> PUDSession:
         key=11, n_trials_ecr=256)
     s.calibrate()
     return s
+
+
+def _full_arch_projections(spec) -> list[tuple[int, int]]:
+    """(n_cols, n_slices) of every projection the packer would pack for the
+    FULL arch config — the gated-FFN triplet per layer plus the unembed —
+    without allocating any weights (the dry-run idiom)."""
+    cfg = spec.make_model().cfg
+    return [(cfg.d_ff, cfg.n_layers), (cfg.d_ff, cfg.n_layers),
+            (cfg.d_model, cfg.n_layers), (cfg.vocab, 1)]
+
+
+def shard_scaling_rows(pm, flops_tok: float, spec) -> list[dict]:
+    """Aggregate modeled tokens/s at 1/2/4 model shards of one data lane.
+
+    Widths come from splitting the full arch's projections exactly the way
+    the fleet packs them: per-tensor window-block boundaries, remainder
+    blocks to earlier shards.  Efficiency < 1 measures only that block
+    raggedness (the slowest-shard bound of ``FleetPerfAggregate``).
+    """
+    if not isinstance(pm, FleetPerfModel):
+        pm = FleetPerfModel.from_table([1.0 - pm.error_free_frac])
+    projections = _full_arch_projections(spec)
+    rows = []
+    for n_shards in SHARD_COUNTS:
+        widths = [0] * n_shards
+        for n_cols, n_slices in projections:
+            spans, _ = shard_column_slices(n_cols, n_shards)
+            for m, (lo, hi) in enumerate(spans):
+                widths[m] += (hi - lo) * n_slices
+        agg = FleetPerfAggregate(shards=(pm,) * n_shards, n_data=1,
+                                 shard_widths=tuple(widths))
+        rows.append({
+            "n_shards": n_shards,
+            "shard_fraction": agg.shard_fraction,
+            "aggregate_tok_s": agg.tokens_per_second(flops_tok),
+            "scaling_efficiency": agg.scaling_efficiency(flops_tok),
+        })
+    return rows
 
 
 def run(scale=None) -> list[dict]:
@@ -81,11 +128,11 @@ def run(scale=None) -> list[dict]:
             "slot_occupancy": sched["slot_occupancy"],
             "wall_tok_s": sched["wall_tok_s"],
         })
-    return rows
+    return rows, shard_scaling_rows(pm, flops_tok, spec)
 
 
 def main(scale=None) -> None:
-    rows = run(scale)
+    rows, shard_rows = run(scale)
     emit("serving_engine", rows,
          header=f"{ARCH} smoke, {N_REQUESTS} requests x {GEN} tokens, "
                 f"placed PUD path")
@@ -108,6 +155,24 @@ def main(scale=None) -> None:
         raise AssertionError(
             "batched rate must increase monotonically up to the "
             f"occupancy-derived optimum; got {up_to_opt}")
+
+    emit("serving_engine_sharded", shard_rows,
+         header=f"{ARCH} FULL geometry, tensor-parallel model shards of "
+                "one data lane (FleetPerfAggregate, device-free)")
+    print("Tensor-parallel shard scaling (modeled, full arch geometry):")
+    for r in shard_rows:
+        print(f"  {r['n_shards']} shard(s): "
+              f"{r['aggregate_tok_s']:8.2f} aggregate tok/s, "
+              f"widest shard {r['shard_fraction']:.1%} of columns, "
+              f"scaling efficiency {r['scaling_efficiency']:.1%}")
+    agg1 = shard_rows[0]["aggregate_tok_s"]
+    agg4 = shard_rows[-1]["aggregate_tok_s"]
+    if agg4 < 2.0 * agg1:
+        raise AssertionError(
+            "4-shard aggregate modeled tokens/s must be at least 2x the "
+            f"single-shard rate; got {agg4:.2f} vs {agg1:.2f}")
+    print(f"  4-shard aggregate {agg4 / agg1:.2f}x single shard "
+          f"(acceptance floor 2.0x): OK")
 
 
 if __name__ == "__main__":

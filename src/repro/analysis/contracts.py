@@ -334,6 +334,44 @@ def check_col_ids(col_ids, n: int, window: int, window_block: int | None,
                 tile=int(blk[bad]))
 
 
+def check_shard_slices(spans, n: int, block_cols: int,
+                       kernel: str = "sharded_gemm") -> None:
+    """Verify a model-shard column split against the block-aligned layout.
+
+    ``spans`` are per-shard half-open ``(lo, hi)`` column ranges (what
+    ``pud.placement.shard_column_slices`` emits).  The placed kernels
+    stream whole ``block_cols``-wide window blocks, so a shard boundary
+    that lands mid-block would make one window straddle two devices — the
+    invariant here is that every span starts and ends on a block multiple,
+    the spans tile ``[0, n)`` contiguously in order, and no span is
+    negative.  Raises :class:`ContractViolation` (invariant
+    ``"shard-straddle"``) on the first violation.
+    """
+    if block_cols <= 0 or n % block_cols:
+        raise ContractViolation(
+            kernel, "shard-straddle",
+            f"block_cols {block_cols} does not tile N={n}")
+    lo_expect = 0
+    for i, (lo, hi) in enumerate(spans):
+        if lo != lo_expect or hi < lo:
+            raise ContractViolation(
+                kernel, "shard-straddle",
+                f"shard {i} span [{lo}, {hi}) does not continue the "
+                f"previous shard (expected lo={lo_expect})", tile=i)
+        if lo % block_cols or hi % block_cols:
+            raise ContractViolation(
+                kernel, "shard-straddle",
+                f"shard {i} span [{lo}, {hi}) straddles a {block_cols}-"
+                "column window block — placement windows must stay whole "
+                "per shard", tile=i)
+        lo_expect = hi
+    if lo_expect != n:
+        raise ContractViolation(
+            kernel, "shard-straddle",
+            f"shard spans cover [0, {lo_expect}) but the tensor has "
+            f"N={n} columns")
+
+
 def _concrete(a):
     """Best-effort numpy view of ``a``; None for tracers (shape-only
     checks still run under jit, value checks are skipped)."""

@@ -37,6 +37,11 @@ Rule catalog (docs/analysis.md mirrors this):
                               recovery recalibrates from the controller
                               between steps (``runtime/drift.py``) and
                               hands the engine a finished pack.
+  no-mesh-outside-launch-mesh device meshes (``jax.make_mesh`` /
+                              ``jax.sharding.Mesh(...)``) are constructed
+                              only by the ``launch/mesh.py`` factories, so
+                              device-topology decisions live in one place;
+                              call sites take a mesh as an argument.
 """
 from __future__ import annotations
 
@@ -265,6 +270,35 @@ def _check_decode_recal(tree: ast.AST, path: str):
                 yield Finding(
                     "no-recal-on-decode-path", path, node.lineno,
                     f"call to {tail!r}: {msg}")
+
+
+@rule("no-mesh-outside-launch-mesh",
+      "device meshes are constructed only by the launch/mesh.py factories")
+def _check_mesh_construction(tree: ast.AST, path: str):
+    if _norm(path).endswith("repro/launch/mesh.py"):
+        return  # the one mesh factory module
+    # Aliases `from jax.sharding import Mesh [as M]` binds in this module —
+    # importing Mesh for annotations is fine, *calling* it is not.
+    mesh_ctors = {a.asname or a.name
+                  for node in ast.walk(tree)
+                  if isinstance(node, ast.ImportFrom)
+                  and node.module == "jax.sharding"
+                  for a in node.names if a.name == "Mesh"}
+    msg = ("mesh construction outside launch/mesh.py — use "
+           "make_production_mesh / make_host_mesh / make_mesh_for_devices / "
+           "parse_mesh_spec so device-topology decisions live in one place")
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        parts = chain.split(".")
+        if (chain == "jax.sharding.Mesh"
+                or (parts[0] == "jax" and parts[-1] == "make_mesh")):
+            yield Finding("no-mesh-outside-launch-mesh", path, node.lineno,
+                          f"{chain}(...): {msg}")
+        elif isinstance(node.func, ast.Name) and node.func.id in mesh_ctors:
+            yield Finding("no-mesh-outside-launch-mesh", path, node.lineno,
+                          f"{node.func.id}(...): {msg}")
 
 
 def lint_source(source: str, path: str) -> list[Finding]:

@@ -23,31 +23,41 @@ from repro.core.canary import CanarySet, drifted_offsets, probe_ecr
 from repro.core.fleet import (FleetConfig, load_or_calibrate,
                               recalibrate_subarrays)
 from repro.core.reliability import DriftSimulator
+from repro.analysis.contracts import check_shard_slices
 from repro.kernels.backends import (Backend, backend_names, get_backend,
                                     register_backend)
 from repro.pud.gemv import (ATTN_PACKABLE, ECR_BASELINE_B300,
-                            ECR_PUDTUNE_T210, FFN_PACKABLE, FleetPerfModel,
+                            ECR_PUDTUNE_T210, FFN_PACKABLE,
+                            FleetPerfAggregate, FleetPerfModel,
                             PUDGemvConfig, PUDPerfModel, pack_linear,
                             pud_linear, weight_traffic)
 from repro.pud.packed import (LAYOUT_BITPACK, LAYOUT_DENSE, PackedModel,
-                              PackedTensor, as_packed_tensor,
-                              load_packed_npz, packed_bytes, save_packed_npz,
-                              to_bitpacked, to_dense)
-from repro.pud.packer import pack_for_serving, pack_model, packing_requests
+                              PackedTensor, ShardedPackedTensor,
+                              as_packed_tensor, load_packed_npz,
+                              packed_bytes, save_packed_npz, to_bitpacked,
+                              to_dense)
+from repro.pud.packer import (pack_for_serving, pack_model,
+                              pack_model_sharded, packing_requests)
 from repro.pud.physics import PhysicsParams
 from repro.pud.placement import (Placement, PlacementError, PlacementRequest,
                                  TensorPlacement, inject_read_faults,
-                                 refresh_fault_state)
+                                 refresh_fault_state, shard_column_slices)
 from repro.runtime.calib_cache import CalibrationTableCache
 from repro.runtime.drift import (DriftConfig, DriftController, DriftDetector,
-                                 DriftEvent, DriftMonitor)
-from repro.runtime.engine import Completion, Request, ServingEngine
-from repro.runtime.session import CalibrationState, PUDSession
+                                 DriftEvent, DriftMonitor, FleetDriftMonitor)
+from repro.runtime.engine import (Completion, FleetServingEngine, Request,
+                                  ServingEngine)
+from repro.runtime.session import (CalibrationState, PUDFleetSession,
+                                   PUDSession)
 from repro.runtime.watchdog import Heartbeat, StepWatchdog
 
 __all__ = [
     # session lifecycle
     "PUDSession", "CalibrationState",
+    # sharded multi-device serving fleet
+    "PUDFleetSession", "FleetServingEngine", "FleetDriftMonitor",
+    "FleetPerfAggregate", "ShardedPackedTensor", "pack_model_sharded",
+    "shard_column_slices", "check_shard_slices",
     # batched serving
     "ServingEngine", "Request", "Completion",
     "StepWatchdog", "Heartbeat",

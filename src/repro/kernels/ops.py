@@ -22,7 +22,7 @@ from .majx import calib_iter_fused, majx_sense
 __all__ = [
     "majx_sense", "calib_iter_fused", "bitplane_gemv",
     "bitplane_gemv_placed", "bitplane_gemm", "bitplane_gemm_placed",
-    "pud_matmul", "pud_gemv", "quantize_activations",
+    "pud_matmul", "pud_matmul_sharded", "pud_gemv", "quantize_activations",
     # Autotuner surface (kernels/autotune.py): plans ride packs and the
     # tuning cache through these names.
     "TunedTile", "plan_for_entry", "tune_kernel", "tuning_key",
@@ -137,6 +137,68 @@ def pud_matmul(
         acc = (be.matmul(xq, planes, eff_mode, **kw) if batched
                else be.gemv(xq, planes, eff_mode, **kw))
     return acc.astype(jnp.float32) * x_scale * w_scale
+
+
+def pud_matmul_sharded(
+    x: jax.Array,          # [B, K] float activations (replicated per device)
+    st,                    # ShardedPackedTensor: children stacked [S, ...]
+    mode: str = "folded",
+    interpret: bool = True,
+    backend: str | None = None,
+    check_contracts: bool = False,
+) -> jax.Array:
+    """Tensor-parallel ``pud_matmul`` over the pack's mesh "model" axis.
+
+    ``st`` is a ``pud.packed.ShardedPackedTensor`` (duck-typed here so the
+    kernel layer stays import-free of ``pud``): per-shard packs padded to a
+    common per-device shape and stacked on a leading shard axis S that maps
+    onto ``st.axis`` of ``st.mesh``.  Each device runs the ordinary
+    ``pud_matmul`` on its own shard — its own planes, dequant scales and
+    (placed layout) ``col_ids`` — with ``x`` replicated in, then the
+    per-shard outputs reassemble by static column slices.
+
+    Bit-exact against the unsharded path by construction: activation
+    quantization is per-row (identical on every replica), the integer
+    accumulation per output column touches exactly the same K values, and
+    the dequant multiply order ``acc * x_scale * w_scale`` is the same
+    expression ``pud_matmul`` computes — float columns never cross a shard
+    boundary, so no re-association happens anywhere.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if st.mesh is None:
+        raise ValueError(
+            "sharded pack carries no mesh — build it through "
+            "PUDFleetSession.pack / pack_model_sharded(mesh=...)")
+    axis = st.axis
+    placed = st.col_ids is not None
+    kw = dict(mode=mode, interpret=interpret,
+              backend=backend or st.backend, layout=st.layout,
+              logical_k=st.logical_k, window_block=st.window_block,
+              check_contracts=check_contracts, tile_plan=st.tile_plan)
+
+    if placed:
+        def body(xr, planes, scale, col_ids):
+            return pud_matmul(xr, planes[0], scale[0],
+                              col_ids=col_ids[0], **kw)[None]
+
+        f = shard_map(body, mesh=st.mesh,
+                      in_specs=(P(), P(axis), P(axis), P(axis)),
+                      out_specs=P(axis), check_rep=False)
+        y = f(x, st.planes, st.scale, st.col_ids)
+    else:
+        def body(xr, planes, scale):
+            return pud_matmul(xr, planes[0], scale[0], **kw)[None]
+
+        f = shard_map(body, mesh=st.mesh,
+                      in_specs=(P(), P(axis), P(axis)),
+                      out_specs=P(axis), check_rep=False)
+        y = f(x, st.planes, st.scale)
+    # [S, B, Np] -> [B, N]: drop per-shard padding columns, concatenate in
+    # logical order (shards own contiguous column ranges by construction).
+    parts = [y[i, :, :w] for i, w in enumerate(st.shard_widths) if w]
+    return jnp.concatenate(parts, axis=-1)
 
 
 def pud_gemv(

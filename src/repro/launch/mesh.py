@@ -25,6 +25,42 @@ def make_host_mesh(data: int = 2, model: int = 2):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_mesh_for_devices():
+    """Largest ("data", "model") factorization of the visible devices —
+    model axis capped at 8 — the launcher default without an explicit mesh.
+    """
+    n = len(jax.devices())
+    model = 1
+    for m in (8, 4, 2, 1):
+        if n % m == 0 and m <= n:
+            model = m
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def parse_mesh_spec(spec: str):
+    """``"D,M"`` (e.g. ``--mesh 2,4``) -> a ("data", "model") host mesh.
+
+    The one place a CLI mesh request turns into a ``Mesh`` — device-mesh
+    construction is confined to this module (analysis/lint.py:
+    no-mesh-outside-launch-mesh).
+    """
+    try:
+        data, model = (int(p) for p in spec.split(","))
+    except ValueError:
+        raise ValueError(
+            f"mesh spec {spec!r} is not 'DATA,MODEL' (e.g. '2,4')") from None
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be >= 1, got {data}x{model}")
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(
+            f"mesh {data}x{model} needs {data * model} devices but only "
+            f"{n} visible — set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={data * model}")
+    return make_host_mesh(data, model)
+
+
 def use_mesh(mesh):
     """Context manager installing ``mesh`` as the ambient mesh, portable
     across JAX versions.

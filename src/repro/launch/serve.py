@@ -202,6 +202,79 @@ def _monitored_serve(args, session, engine, model, params, requests,
     return 0
 
 
+def _sharded_serve(args, spec, model, params, tokens, ref_toks,
+                   max_len) -> int:
+    """Serve through the tensor+data-parallel fleet (``--mesh D,M``).
+
+    Opens one logical ``PUDSession`` per mesh device, calibrates and packs
+    each lane's tensor-parallel shards (placement windows never straddle a
+    shard), then drains the request queue through one ``ServingEngine``
+    lane per data row — per-request decode stays bit-identical to the
+    single-device engine, which the token-agreement print verifies against
+    the bf16 reference exactly like the unsharded path.
+    """
+    from repro.core.calibrate import CalibrationConfig
+    from repro.core.fleet import FleetConfig
+    from repro.launch.mesh import parse_mesh_spec
+    from repro.runtime.engine import Request
+    from repro.runtime.session import PUDSession
+
+    mesh = parse_mesh_spec(args.mesh)
+    n_data, n_model = int(mesh.shape["data"]), int(mesh.shape["model"])
+    packable = FFN_PACKABLE + (ATTN_PACKABLE if args.pud_attention else ())
+    cfg = PUDGemvConfig(weight_bits=args.weight_bits, packable=packable)
+    fleet = PUDSession.open_fleet(
+        args.arch, mesh=mesh,
+        grid=FleetConfig(n_channels=1, n_banks=1,
+                         n_subarrays=args.fleet_subarrays,
+                         n_cols=args.fleet_cols),
+        cache_dir=args.calib_cache, device_id=args.device_id,
+        calib=CalibrationConfig(n_iterations=12, n_samples=256),
+        key=jax.random.key(args.seed + 2), placement=args.placement)
+    print(f"[serve] fleet mesh {n_data}x{n_model} (data x model), "
+          f"{fleet.n_devices} logical devices")
+    t0 = time.time()
+    fleet.calibrate()
+    print(f"  calibration: {fleet.n_devices} devices in "
+          f"{time.time() - t0:.2f}s")
+    fleet.pack(params, cfg, name=f"{args.arch}-{args.preset}-fleet")
+    statuses = sorted({s.placement_status or "logical"
+                       for row in fleet.sessions for s in row})
+    print(f"  placement per shard: {statuses}; "
+          f"shard widths {list(fleet.shard_widths)} "
+          f"(windows never straddle a shard)")
+    if args.tune:
+        trep = fleet.tune()
+        n_hit = sum(1 for r in trep["keys"].values()
+                    if r["status"] == "hit")
+        print(f"  autotune: {len(trep['keys'])} per-shard keys "
+              f"({n_hit} cache hits, {len(trep['keys']) - n_hit} searched)")
+
+    engine = fleet.serving_engine(model, max_len=max_len,
+                                  batch_size=args.batch_size)
+    requests = [Request(request_id=i, tokens=tokens[i],
+                        max_new_tokens=args.gen)
+                for i in range(args.batch)]
+    completions = engine.run(requests)
+    sched = engine.scheduler_report()
+    print(f"  fleet engine: {sched['completed']} requests over "
+          f"{sched['n_lanes']} lanes in {sched['steps']} steps "
+          f"({sched['batch_size']} slots/lane, "
+          f"{sched['generated_tokens']} tokens)")
+    agree = float(np.mean(
+        [c.tokens == list(np.asarray(ref_toks[c.request_id]))
+         for c in completions]))
+    print(f"    token agreement vs bf16: {100 * agree:.1f}% "
+          "(quantization only — sharded decode is bit-identical to the "
+          "single-device engine)")
+    perf = engine.perf_report(2 * spec.n_active_params)
+    print(f"    aggregate DDR4-PUD model: {perf['aggregate_tok_s']:.2f} "
+          f"tok/s over {perf['n_devices']} devices, scaling efficiency "
+          f"{perf['scaling_efficiency']:.2f} "
+          f"(slowest-shard work share {perf['shard_fraction']:.3f})")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -253,6 +326,14 @@ def main(argv=None) -> int:
                     help="canary probe cadence in engine steps")
     ap.add_argument("--n-canary", type=int, default=16,
                     help="reserved canary columns per subarray")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="with --pud-gemv --engine: serve through a "
+                         "tensor+data-parallel fleet on a DATAxMODEL host "
+                         "mesh (PUDSession.open_fleet) — one calibrated "
+                         "device per mesh position, packs sharded on "
+                         "placement-window boundaries, one engine lane per "
+                         "data row; requires XLA_FLAGS="
+                         "--xla_force_host_platform_device_count>=DATA*MODEL")
     ap.add_argument("--calib-cache", default=None, metavar="DIR",
                     help="persistent calibration-table cache; serving "
                          "starts from the device's stored per-subarray "
@@ -268,6 +349,11 @@ def main(argv=None) -> int:
         ap.error("--monitor requires --pud-gemv and --engine")
     if args.drift_sim and not args.monitor:
         ap.error("--drift-sim requires --monitor")
+    if args.mesh and not (args.pud_gemv and args.engine):
+        ap.error("--mesh requires --pud-gemv and --engine")
+    if args.mesh and args.monitor:
+        ap.error("--mesh and --monitor are mutually exclusive (use "
+                 "runtime.drift.FleetDriftMonitor programmatically)")
 
     spec = get(args.arch)
     model = spec.make_smoke() if args.preset == "smoke" else spec.make_model()
@@ -300,6 +386,14 @@ def main(argv=None) -> int:
     dt = time.time() - t0
     print(f"  bf16 path: {args.batch * args.gen} tokens in {dt:.2f}s "
           "(CPU wall; TPU perf comes from the dry-run roofline)")
+
+    if args.mesh:
+        if extras:
+            print("  fleet: vlm/encdec families not supported yet "
+                  "(extras require family-specific prefill); skipping")
+            return 0
+        return _sharded_serve(args, spec, model, params, tokens, ref_toks,
+                              max_len)
 
     if args.pud_gemv:
         packable = FFN_PACKABLE + (ATTN_PACKABLE if args.pud_attention

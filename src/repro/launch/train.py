@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get
-from repro.launch.mesh import use_mesh
+from repro.launch.mesh import make_mesh_for_devices, use_mesh
 from repro.models.params import init_params, param_count, param_pspecs
 from repro.runtime import sharding as shd
 from repro.runtime.checkpoint import CheckpointManager
@@ -69,16 +69,6 @@ def family_extras(spec, model, batch_shape, step: int, seed: int = 0) -> dict:
         return {"frames": 0.1 * jax.random.normal(
             key, (b, c.n_frames, c.d_model), jnp.bfloat16)}
     return {}
-
-
-def make_mesh_for_devices():
-    n = len(jax.devices())
-    model = 1
-    for m in (8, 4, 2, 1):
-        if n % m == 0 and m <= n:
-            model = m
-            break
-    return jax.make_mesh((n // model, model), ("data", "model"))
 
 
 def main(argv=None) -> int:

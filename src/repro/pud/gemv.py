@@ -25,12 +25,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.ops import pud_gemv
+from repro.kernels.ops import pud_gemv, pud_matmul_sharded
 from repro.kernels.ref import pack_bitplanes, pack_plane_words
 
 from .bitserial import add8_counts, mul8_counts
-from .packed import (LAYOUT_BITPACK, PackedTensor, as_packed_tensor,
-                     packed_bytes)
+from .packed import (LAYOUT_BITPACK, PackedTensor, ShardedPackedTensor,
+                     as_packed_tensor, packed_bytes)
 from .timing import OpCounts, SystemConfig, wave_latency_ns
 
 # Default packable set: FFN projections (dominant decode GeMV flops).
@@ -97,6 +97,13 @@ def pud_linear(x: jax.Array, packed: "PackedTensor | dict",
     (how a session's choice reaches model forwards, which call this with
     the default config) > the legacy ``interpret`` flag.
     """
+    if isinstance(packed, ShardedPackedTensor):
+        lead = x.shape[:-1]
+        x2 = x.reshape((-1, x.shape[-1]))
+        y = pud_matmul_sharded(x2, packed, mode=cfg.mode,
+                               interpret=cfg.interpret,
+                               backend=backend or cfg.backend)
+        return y.reshape(lead + (y.shape[-1],))
     pt = as_packed_tensor(packed)
     lead = x.shape[:-1]
     x2 = x.reshape((-1, x.shape[-1]))
@@ -349,3 +356,84 @@ class FleetPerfModel:
         """
         opt = self.n_replicas * self.operand_slots
         return min(opt, max_batch) if max_batch else opt
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetPerfAggregate:
+    """Cross-shard serving-rate model of a sharded mesh deployment.
+
+    ``shards`` are the per-model-shard :class:`FleetPerfModel`s (one per
+    "model"-axis device — each built from that device's own calibration
+    table/placement); ``n_data`` counts the data-parallel engine lanes.
+
+    A decoded token needs *every* model shard's partial GEMM, so the
+    per-lane token rate is bound by the slowest shard evaluated at the
+    slowest shard's work share: with the N axis split on window-block
+    boundaries the largest shard owns ``shard_fraction`` of the columns
+    (> 1/S when the block count does not divide the shard count — the
+    padding/imbalance cost the scaling-efficiency column measures).
+    Aggregate throughput then scales linearly with the independent data
+    lanes.
+    """
+
+    shards: tuple[FleetPerfModel, ...]
+    n_data: int = 1
+    shard_widths: tuple[int, ...] | None = None   # logical columns per shard
+
+    @property
+    def n_model(self) -> int:
+        return len(self.shards)
+
+    @property
+    def n_devices(self) -> int:
+        return self.n_model * self.n_data
+
+    @property
+    def shard_fraction(self) -> float:
+        """Work share of the slowest (widest) model shard."""
+        if self.shard_widths:
+            total = sum(self.shard_widths)
+            return max(self.shard_widths) / max(1, total)
+        return 1.0 / self.n_model
+
+    def _working_shards(self):
+        """Shards that own columns — a zero-width shard (more shards than
+        window blocks) executes no GEMM work and never bounds the lane."""
+        if self.shard_widths:
+            live = [m for m, w in zip(self.shards, self.shard_widths) if w]
+            if live:
+                return live
+        return list(self.shards)
+
+    def tokens_per_second(self, flops_per_token: float) -> float:
+        lane = min(m.tokens_per_second(flops_per_token * self.shard_fraction)
+                   for m in self._working_shards())
+        return self.n_data * lane
+
+    def batched_tokens_per_second(self, flops_per_token: float,
+                                  batch: int) -> float:
+        """Aggregate decode rate across all lanes at per-lane ``batch``."""
+        lane = min(
+            m.batched_tokens_per_second(
+                flops_per_token * self.shard_fraction, batch)
+            for m in self._working_shards())
+        return self.n_data * lane
+
+    def scaling_efficiency(self, flops_per_token: float,
+                           batch: int = 1) -> float:
+        """Aggregate rate vs ``n_devices`` ideal copies of shard 0 alone."""
+        single = self.shards[0].batched_tokens_per_second(
+            flops_per_token, batch)
+        agg = self.batched_tokens_per_second(flops_per_token, batch)
+        return agg / (self.n_devices * single)
+
+    def report(self, flops_per_token: float, batch: int = 1) -> dict:
+        return {
+            "n_model": self.n_model,
+            "n_data": self.n_data,
+            "shard_fraction": self.shard_fraction,
+            "agg_tok_s": self.batched_tokens_per_second(
+                flops_per_token, batch),
+            "scaling_efficiency": self.scaling_efficiency(
+                flops_per_token, batch),
+        }

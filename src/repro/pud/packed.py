@@ -170,7 +170,7 @@ def as_packed_tensor(pack) -> PackedTensor:
     are bit-packed words (logical K = Kw*8 — a dict cannot record byte
     padding), anything else is the legacy dense one-byte-per-bit layout.
     """
-    if isinstance(pack, PackedTensor):
+    if isinstance(pack, (PackedTensor, ShardedPackedTensor)):
         return pack
     planes = pack["planes"]
     layout = (LAYOUT_BITPACK if planes.dtype == jnp.uint8 else LAYOUT_DENSE)
@@ -209,9 +209,105 @@ def to_bitpacked(pt: PackedTensor) -> PackedTensor:
     return pt.replace(planes=words, layout=LAYOUT_BITPACK, logical_k=k)
 
 
+@dataclasses.dataclass(eq=False)
+class ShardedPackedTensor:
+    """One projection split column-wise across the "model" mesh axis.
+
+    The tensor-parallel serving format: shard s owns the whole placement
+    windows of logical columns ``[lo_s, hi_s)`` (``shard_widths[s]`` wide,
+    always a multiple of ``block_cols`` — see
+    ``pud.placement.shard_column_slices``), packed with that shard's own
+    calibration/placement state.  Per-shard packs are padded to a common
+    per-device shape (shard_map runs one SPMD program) and stacked on a
+    shard axis S just inside the optional stacked-layer axis:
+
+      planes   [L?, S, WB, Kw, R]   R = common padded window (placed) or
+                                    padded column count (logical layout)
+      scale    [L?, S, Np]          Np = max shard width, padded with 1.0
+      col_ids  [L?, S, Np]          padded entries point at their own
+                                    (zero-plane) window block, or None
+
+    Keeping L leading means a layer ``lax.scan`` slices the children to
+    ``[S, ...]`` per step, exactly like ``PackedTensor``.  Padding columns
+    back zero planes, so they accumulate zero and are statically sliced
+    away after the per-shard GEMM; zero-width shards (fewer blocks than
+    devices) are all-padding and still run the same program.
+
+    Aux metadata adds to ``PackedTensor``'s: ``shard_widths`` (static
+    per-shard logical column counts), ``block_cols`` (the full tensor's
+    window-block width every shard split on), ``axis`` (mesh axis name the
+    shard dimension maps to) and ``mesh`` (the ``jax.sharding.Mesh`` the
+    pack was built for — hashable, so it rides as trace-static aux).
+    """
+
+    planes: jax.Array
+    scale: jax.Array
+    col_ids: jax.Array | None = None
+    shard_widths: tuple[int, ...] = ()
+    block_cols: int = 0
+    backend: str | None = None
+    layout: str = LAYOUT_BITPACK
+    logical_k: int | None = None
+    window_block: int | None = None
+    tile_plan: object | None = None
+    axis: str = "model"
+    mesh: object | None = None
+
+    @property
+    def placed(self) -> bool:
+        return self.col_ids is not None
+
+    @property
+    def n_shards(self) -> int:
+        return self.planes.shape[-4]
+
+    @property
+    def n_bits(self) -> int:
+        return self.planes.shape[-3]
+
+    @property
+    def k(self) -> int:
+        if self.layout == LAYOUT_BITPACK:
+            return self.logical_k or self.planes.shape[-2] * 8
+        return self.planes.shape[-2]
+
+    @property
+    def n(self) -> int:
+        """Logical output columns across all shards (un-padded)."""
+        return sum(self.shard_widths)
+
+    @property
+    def padded_n(self) -> int:
+        """Per-shard padded column count Np (what each device computes)."""
+        return self.scale.shape[-1]
+
+    @property
+    def stored_bytes(self) -> int:
+        total = self.planes.size * self.planes.dtype.itemsize
+        total += self.scale.size * self.scale.dtype.itemsize
+        if self.col_ids is not None:
+            total += self.col_ids.size * self.col_ids.dtype.itemsize
+        return total
+
+    def replace(self, **kw) -> "ShardedPackedTensor":
+        return dataclasses.replace(self, **kw)
+
+
+jax.tree_util.register_pytree_node(
+    ShardedPackedTensor,
+    lambda st: ((st.planes, st.scale, st.col_ids),
+                (st.shard_widths, st.block_cols, st.backend, st.layout,
+                 st.logical_k, st.window_block, st.tile_plan, st.axis,
+                 st.mesh)),
+    lambda aux, ch: ShardedPackedTensor(
+        *ch, shard_widths=aux[0], block_cols=aux[1], backend=aux[2],
+        layout=aux[3], logical_k=aux[4], window_block=aux[5],
+        tile_plan=aux[6], axis=aux[7], mesh=aux[8]))
+
+
 def is_pack(value) -> bool:
     """Is ``value`` a pack in either format (typed or legacy dict)?"""
-    if isinstance(value, PackedTensor):
+    if isinstance(value, (PackedTensor, ShardedPackedTensor)):
         return True
     return (isinstance(value, dict) and "planes" in value and "scale" in value)
 

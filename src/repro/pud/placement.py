@@ -68,11 +68,19 @@ class PlacementError(RuntimeError):
 
 @dataclasses.dataclass(frozen=True)
 class PlacementRequest:
-    """Column demand of one packable projection."""
+    """Column demand of one packable projection.
+
+    ``block_cols`` forces the window-block width instead of the default
+    ``largest_divisor(n_cols, PLACE_BLOCK)`` rule.  Sharded packing uses
+    this: every model shard plans its column slice with the *full* tensor's
+    block width so the per-shard window geometry stays uniform across the
+    mesh (see ``shard_column_slices``).
+    """
 
     name: str                 # tensor path, e.g. "layers_0_dense/mixer/wi"
     n_cols: int               # logical (output) columns per slice
     n_slices: int = 0         # leading stacked-layer count; 0 = unstacked
+    block_cols: int = 0       # forced window-block width; 0 = derive
 
     @property
     def total_cols(self) -> int:
@@ -81,8 +89,39 @@ class PlacementRequest:
 
 def requests_fingerprint(requests: list[PlacementRequest]) -> str:
     """Stable short hash of a request list (keys persisted placements)."""
-    blob = json.dumps([(r.name, r.n_cols, r.n_slices) for r in requests])
+    blob = json.dumps([
+        (r.name, r.n_cols, r.n_slices) if not r.block_cols
+        else (r.name, r.n_cols, r.n_slices, r.block_cols)
+        for r in requests])
     return hashlib.sha256(blob.encode()).hexdigest()[:10]
+
+
+def shard_column_slices(n_cols: int,
+                        n_shards: int) -> tuple[tuple[tuple[int, int], ...],
+                                                int]:
+    """Split a tensor's N columns across model shards on block boundaries.
+
+    Returns ``(((lo, hi), ...), block_cols)``: one half-open column span per
+    shard plus the block width the split respects — the *full* tensor's
+    ``largest_divisor(n_cols, PLACE_BLOCK)``, the same width the unsharded
+    allocator would pick.  Every shard owns a whole number of window blocks
+    (earlier shards take the remainder blocks), so no placement window ever
+    straddles a shard; when there are fewer blocks than shards the trailing
+    shards own zero columns and serve pure padding.
+    """
+    if n_cols <= 0 or n_shards <= 0:
+        raise PlacementError(
+            f"shard_column_slices needs positive n_cols/n_shards, got "
+            f"{n_cols}/{n_shards}")
+    block_cols = largest_divisor(n_cols, PLACE_BLOCK)
+    n_blocks = n_cols // block_cols
+    base, extra = divmod(n_blocks, n_shards)
+    spans, lo = [], 0
+    for i in range(n_shards):
+        hi = lo + (base + (1 if i < extra else 0)) * block_cols
+        spans.append((lo, hi))
+        lo = hi
+    return tuple(spans), block_cols
 
 
 @dataclasses.dataclass
@@ -291,7 +330,13 @@ def plan_placement(
     cursor = 0
     for req in requests:
         n_slices = max(1, req.n_slices)
-        block_cols = largest_divisor(req.n_cols, PLACE_BLOCK)
+        block_cols = req.block_cols or largest_divisor(req.n_cols,
+                                                       PLACE_BLOCK)
+        if block_cols > PLACE_BLOCK or req.n_cols % block_cols:
+            raise PlacementError(
+                f"request {req.name!r}: forced block_cols {block_cols} "
+                f"must divide n_cols {req.n_cols} and stay within "
+                f"PLACE_BLOCK {PLACE_BLOCK}")
         slice_cols, slice_starts, slice_spans = [], [], []
         for _ in range(n_slices):
             cols = usable_ids[cursor:cursor + req.n_cols]

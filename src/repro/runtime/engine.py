@@ -361,3 +361,109 @@ class ServingEngine:
             rep.update(self.session.perf_report(
                 flops_per_token, batch_size=self.batch_size))
         return rep
+
+
+class FleetServingEngine:
+    """Data-parallel fleet of ``ServingEngine``s over per-lane sharded packs.
+
+    One inner engine per "data"-axis lane of a ``PUDFleetSession``;
+    requests partition round-robin at submit time and every lane keeps the
+    single-engine semantics — continuous batching, per-request bit-exact
+    decode — so a request's tokens (and logits) are identical to running
+    it through a single-device ``ServingEngine``.  The model-parallel
+    dimension lives *inside* each lane's params: every packed projection
+    is a ``ShardedPackedTensor`` executing via ``shard_map`` over the
+    mesh's "model" axis (``kernels.ops.pud_matmul_sharded``), so a lane's
+    decode step is one jitted program spanning its model shards.
+    """
+
+    def __init__(self, model, lane_params, *, max_len: int,
+                 fleet=None, sessions=None, batch_size: int | None = None,
+                 **kw):
+        if not lane_params:
+            raise ValueError("need at least one data lane")
+        if sessions is None and fleet is not None:
+            # lane d's default batch size derives from its shard-0 session
+            sessions = [row[0] for row in fleet.sessions]
+        if sessions is None:
+            sessions = [None] * len(lane_params)
+        self.fleet = fleet
+        self.lanes = [
+            ServingEngine(model, p, session=s, max_len=max_len,
+                          batch_size=batch_size, **kw)
+            for p, s in zip(lane_params, sessions)]
+        self._next_lane = 0
+
+    @property
+    def n_lanes(self) -> int:
+        return len(self.lanes)
+
+    @property
+    def batch_size(self) -> int:
+        return self.lanes[0].batch_size
+
+    @property
+    def n_pending(self) -> int:
+        return sum(lane.n_pending for lane in self.lanes)
+
+    @property
+    def n_active(self) -> int:
+        return sum(lane.n_active for lane in self.lanes)
+
+    def submit(self, request: Request) -> int:
+        """Round-robin the request onto a lane; returns the lane index."""
+        lane = self._next_lane
+        self.lanes[lane].submit(request)
+        self._next_lane = (lane + 1) % len(self.lanes)
+        return lane
+
+    def submit_all(self, requests) -> None:
+        for r in requests:
+            self.submit(r)
+
+    def stage_lane_params(self, lane: int, params) -> None:
+        """Per-lane hot-swap hook (drift recovery repacks one lane only)."""
+        self.lanes[lane].stage_params(params)
+
+    def step(self) -> list[Completion]:
+        """Step every lane that has work; returns this step's completions."""
+        done: list[Completion] = []
+        for lane in self.lanes:
+            if lane._queue or lane.n_active or lane.swap_pending:
+                done.extend(lane.step())
+        return done
+
+    def run(self, requests=None) -> list[Completion]:
+        """Drain every lane; all completions sorted by request_id."""
+        if requests is not None:
+            self.submit_all(requests)
+        while any(lane._queue or lane.n_active for lane in self.lanes):
+            self.step()
+        comps = [c for lane in self.lanes for c in lane._completions]
+        return sorted(comps, key=lambda c: c.request_id)
+
+    # -- reporting -----------------------------------------------------------
+
+    def scheduler_report(self) -> dict:
+        """Fleet-merged counters plus the per-lane reports."""
+        reps = [lane.scheduler_report() for lane in self.lanes]
+        return {
+            "n_lanes": len(self.lanes),
+            "batch_size": self.batch_size,
+            "steps": max(r["steps"] for r in reps),
+            "completed": sum(r["completed"] for r in reps),
+            "pending": sum(r["pending"] for r in reps),
+            "active": sum(r["active"] for r in reps),
+            "generated_tokens": sum(r["generated_tokens"] for r in reps),
+            "slot_occupancy": (sum(r["slot_occupancy"] for r in reps)
+                               / len(reps)),
+            "lanes": reps,
+        }
+
+    def perf_report(self, flops_per_token: float | None = None) -> dict:
+        """Merged scheduler counters + the fleet's aggregate rate model."""
+        rep = self.scheduler_report()
+        if self.fleet is not None:
+            rep.update(self.fleet.perf_report(
+                flops_per_token, batch_size=self.batch_size))
+        return rep

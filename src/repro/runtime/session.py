@@ -41,13 +41,13 @@ from repro.core.calibrate import CalibrationConfig
 from repro.core.fleet import FleetConfig, load_or_calibrate, manufacture_fleet
 from repro.kernels.backends import DEFAULT_BACKEND, backend_names
 from repro.pud.gemv import (ECR_BASELINE_B300, ECR_PUDTUNE_T210,
-                            FleetPerfModel, PUDGemvConfig, PUDPerfModel,
-                            pud_linear)
+                            FleetPerfAggregate, FleetPerfModel, PUDGemvConfig,
+                            PUDPerfModel, pud_linear)
 from repro.pud.packed import PackedModel, packed_bytes
-from repro.pud.packer import pack_model, packing_requests
+from repro.pud.packer import pack_model, pack_model_sharded, packing_requests
 from repro.pud.physics import PhysicsParams
 from repro.pud.placement import (Placement, PlacementError, plan_for_grid,
-                                 requests_fingerprint)
+                                 requests_fingerprint, shard_column_slices)
 from repro.runtime.calib_cache import CalibrationTableCache
 
 
@@ -64,6 +64,28 @@ class CalibrationState:
     @property
     def mean_ecr(self) -> float:
         return float(np.asarray(self.ecr).mean())
+
+
+def _restamp_model(pm: PackedModel, stamped: dict) -> PackedModel:
+    """Rebuild a ``PackedModel`` with ``stamped[name]`` tensors swapped in
+    (same aux metadata — tuning stamps are trace-static pytree aux)."""
+    def walk(tree, path):
+        out = {}
+        for key, sub in tree.items():
+            if key.endswith("_pud"):
+                name = "/".join(path + (key[: -len("_pud")],))
+                out[key] = stamped.get(name, sub)
+            elif isinstance(sub, dict):
+                out[key] = walk(sub, path + (key,))
+            else:
+                out[key] = sub
+        return out
+
+    return PackedModel(
+        params=walk(pm.params, ()),
+        packed_names=pm.packed_names,
+        skipped_names=pm.skipped_names,
+        weight_bits=pm.weight_bits, placed=pm.placed)
 
 
 class _NullCache:
@@ -168,6 +190,56 @@ class PUDSession:
                      backend=backend)
         s._operating_point = float(ecr)
         return s
+
+    @classmethod
+    def open_fleet(cls, arch_or_grid: "str | FleetConfig | None" = None, *,
+                   mesh=None, n_data: int | None = None,
+                   n_model: int | None = None,
+                   grid: FleetConfig | None = None,
+                   cache_dir=None, device_id: str = "dimm0",
+                   backend: str = DEFAULT_BACKEND,
+                   physics: PhysicsParams | None = None,
+                   calib: CalibrationConfig | None = None,
+                   key: "jax.Array | int" = 0,
+                   placement: bool = True,
+                   method: str = "reference",
+                   n_trials_ecr: int = 1024) -> "PUDFleetSession":
+        """Open one logical session per device of a serving mesh.
+
+        ``mesh`` is a ``("data", "model")`` mesh from ``launch/mesh.py``;
+        its "model" axis carries tensor-parallel shards of every packable
+        projection, its "data" axis independent serving lanes.  Without a
+        mesh, pass ``n_data``/``n_model`` explicitly — packing and all
+        host-side state management still work (useful for planning tests),
+        only sharded *execution* requires the mesh.
+
+        Each of the ``n_data x n_model`` sessions gets its own derived
+        ``device_id`` (suffix ``-d{lane}m{shard}``) and its own fold of
+        ``key`` — so per-device calibration tables, placements, canaries
+        and drift state are fully independent, exactly as physically
+        distinct DIMMs would be.
+        """
+        if mesh is not None:
+            if n_data is None:
+                n_data = int(mesh.shape["data"])
+            if n_model is None:
+                n_model = int(mesh.shape["model"])
+        if not n_data or not n_model or n_data < 1 or n_model < 1:
+            raise ValueError("open_fleet needs a mesh or explicit "
+                             "n_data/n_model >= 1")
+        if not isinstance(key, jax.Array):
+            key = jax.random.key(int(key))
+        sessions = [
+            [cls.open(arch_or_grid, grid=grid, cache_dir=cache_dir,
+                      device_id=f"{device_id}-d{d}m{m}", backend=backend,
+                      physics=physics, calib=calib,
+                      key=jax.random.fold_in(key, d * n_model + m),
+                      placement=placement, method=method,
+                      n_trials_ecr=n_trials_ecr)
+             for m in range(n_model)]
+            for d in range(n_data)]
+        return PUDFleetSession(sessions, mesh=mesh,
+                               arch=sessions[0][0].arch)
 
     # -- calibration --------------------------------------------------------
 
@@ -331,10 +403,15 @@ class PUDSession:
     def packed(self) -> PackedModel | None:
         return self._packed
 
-    def _plan(self, params: dict, cfg: PUDGemvConfig,
-              name: str | None) -> Placement | None:
-        reqs = packing_requests(params, cfg)
-        pname = f"{name or self.arch or 'model'}-{requests_fingerprint(reqs)}"
+    def _plan_requests(self, reqs, base_name: str) -> Placement | None:
+        """Cache-aware placement planning for an explicit request list.
+
+        The shard-slicing entry used by ``PUDFleetSession``: each model
+        shard plans its *own column slice* of every request against its own
+        masks and persists under its own fingerprinted name. ``_plan``
+        feeds it the whole-model requests.
+        """
+        pname = f"{base_name}-{requests_fingerprint(reqs)}"
         masks = self._state.masks
         if self._canaries is not None:
             # Reserved canaries plan as unusable despite being error-free,
@@ -348,6 +425,7 @@ class PUDSession:
                 self.device_id, self.fleet_cfg, self.physics, pname)
         if placement is not None:
             self._placement_status = "hit"
+            self._placement = placement
             return placement
         try:
             placement = plan_for_grid(
@@ -359,7 +437,13 @@ class PUDSession:
             self.cache.save_placement(self.device_id, self.fleet_cfg,
                                       self.physics, pname, placement)
         self._placement_status = "planned"
+        self._placement = placement
         return placement
+
+    def _plan(self, params: dict, cfg: PUDGemvConfig,
+              name: str | None) -> Placement | None:
+        return self._plan_requests(packing_requests(params, cfg),
+                                   name or self.arch or "model")
 
     def pack(self, params: dict, cfg: PUDGemvConfig | None = None, *,
              name: str | None = None,
@@ -487,24 +571,7 @@ class PUDSession:
     def _restamp_packs(self, stamped: dict) -> None:
         """Swap tuned packs into the packed tree (new ``PackedModel``,
         same aux metadata — the stamp is trace-static pytree aux)."""
-        def walk(tree, path):
-            out = {}
-            for key, sub in tree.items():
-                if key.endswith("_pud"):
-                    name = "/".join(path + (key[: -len("_pud")],))
-                    out[key] = stamped.get(name, sub)
-                elif isinstance(sub, dict):
-                    out[key] = walk(sub, path + (key,))
-                else:
-                    out[key] = sub
-            return out
-
-        pm = self._packed
-        self._packed = PackedModel(
-            params=walk(pm.params, ()),
-            packed_names=pm.packed_names,
-            skipped_names=pm.skipped_names,
-            weight_bits=pm.weight_bits, placed=pm.placed)
+        self._packed = _restamp_model(self._packed, stamped)
 
     def tuning_report(self) -> dict | None:
         """The last :meth:`tune` report (per-key status, plans, measured
@@ -547,8 +614,11 @@ class PUDSession:
 
     def placement_perf_model(self) -> FleetPerfModel | None:
         """Rate from the actual column placement (occupied-subarray waves),
-        None when serving on the logical layout."""
-        if self._placement is None:
+        None when serving on the logical layout.  An *empty* placement
+        (a zero-width model shard serving pure padding) also yields None —
+        the device executes no placed columns, so the table-derived model
+        is the honest rate."""
+        if self._placement is None or not self._placement.entries:
             return None
         return FleetPerfModel.from_placement(
             self._placement, n_fracs=self.n_fracs)
@@ -658,3 +728,338 @@ class PUDSession:
     @property
     def _placed_layout(self) -> bool:
         return self._packed is not None and self._packed.placed
+
+
+class PUDFleetSession:
+    """A mesh-shaped grid of ``PUDSession``s serving one sharded model.
+
+    ``sessions[d][m]`` is the device at data lane ``d``, model shard ``m``
+    — each with its own device id, and therefore its own calibration-cache
+    entry, placement plans, canary reservation and drift state.
+
+    The "model" axis carries tensor parallelism: every packable
+    projection's N columns split on *full-tensor* window-block boundaries
+    (``pud.placement.shard_column_slices``, verified by
+    ``analysis.contracts.check_shard_slices``) so shard ``m`` owns whole
+    placement windows, plans them on its own masks, and executes its slice
+    through ``shard_map`` (``kernels.ops.pud_matmul_sharded`` — bit-exact
+    against the unsharded path).  The "data" axis carries independent
+    serving lanes: :meth:`pack` builds one ``PackedModel`` of
+    ``ShardedPackedTensor``s per lane and :meth:`serving_engine` runs one
+    ``ServingEngine`` per lane over a round-robin split of the request
+    queue (``runtime.engine.FleetServingEngine``).
+
+    Build one with :meth:`PUDSession.open_fleet`.
+    """
+
+    def __init__(self, sessions, *, mesh=None, axis: str = "model",
+                 arch: str | None = None):
+        if not sessions or not sessions[0]:
+            raise ValueError("open_fleet needs at least one session")
+        self.sessions = sessions
+        self.mesh = mesh
+        self.axis = axis
+        self.arch = arch
+        self.n_data = len(sessions)
+        self.n_model = len(sessions[0])
+        self._packs: "list[PackedModel] | None" = None
+        self._pack_cfg: PUDGemvConfig | None = None
+        self._pack_args = None          # (params, name, include_unembed)
+        self._shard_widths: tuple[int, ...] | None = None
+        self._tuning_report: dict | None = None
+
+    # -- grid views ----------------------------------------------------------
+
+    @property
+    def n_devices(self) -> int:
+        return self.n_data * self.n_model
+
+    @property
+    def device_ids(self) -> list:
+        return [[s.device_id for s in row] for row in self.sessions]
+
+    @property
+    def shard_widths(self) -> "tuple[int, ...] | None":
+        """Total N columns each model shard owns (set by :meth:`pack`)."""
+        return self._shard_widths
+
+    @property
+    def packs(self) -> "list[PackedModel] | None":
+        return self._packs
+
+    def shard(self, data_lane: int, model_shard: int) -> PUDSession:
+        return self.sessions[data_lane][model_shard]
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def calibrate(self, force: bool = False) -> list:
+        """Calibrate every device; returns the [n_data][n_model] states."""
+        return [[s.calibrate(force) for s in row] for row in self.sessions]
+
+    def reserve_canaries(self, n_per_subarray: int = 16) -> list:
+        return [[s.reserve_canaries(n_per_subarray) for s in row]
+                for row in self.sessions]
+
+    def flops_per_token(self) -> float | None:
+        return self.sessions[0][0].flops_per_token()
+
+    def optimal_batch_size(self, max_batch: int | None = None) -> int:
+        """Worst-case (min over devices) so every lane's engine sustains it."""
+        return min(s.optimal_batch_size(max_batch)
+                   for row in self.sessions for s in row)
+
+    # -- placement + packing -------------------------------------------------
+
+    def _shard_requests(self, reqs):
+        """Per-model-shard sliced request lists + per-shard total widths.
+
+        Every request splits on the boundaries of its *own* full-tensor
+        window block (``shard_column_slices``), so no placement window ever
+        straddles a shard — ``check_shard_slices`` enforces it before any
+        planning happens.  Zero-width shards (more shards than blocks)
+        simply receive no request for that tensor.
+        """
+        from repro.analysis.contracts import check_shard_slices
+        sliced = [[] for _ in range(self.n_model)]
+        widths = [0] * self.n_model
+        for r in reqs:
+            spans, bc = shard_column_slices(r.n_cols, self.n_model)
+            check_shard_slices(spans, r.n_cols, bc)
+            for m, (lo, hi) in enumerate(spans):
+                widths[m] += hi - lo
+                if hi > lo:
+                    sliced[m].append(dataclasses.replace(
+                        r, n_cols=hi - lo, block_cols=bc))
+        return sliced, tuple(widths)
+
+    def _plan_shard(self, data_lane: int, model_shard: int, sliced,
+                    name: str | None) -> Placement | None:
+        s = self.sessions[data_lane][model_shard]
+        s._placement_status = s._placement_error = None
+        s._placement = None
+        if not (s.placement_enabled and s._state is not None):
+            return None
+        base = (f"{name or self.arch or 'model'}"
+                f"-shard{model_shard}of{self.n_model}")
+        return s._plan_requests(sliced, base)
+
+    def pack(self, params: dict, cfg: PUDGemvConfig | None = None, *,
+             name: str | None = None,
+             include_unembed: bool = True) -> "list[PackedModel]":
+        """Pack one sharded ``PackedModel`` per data lane.
+
+        Each lane's model shards plan their own column slice of every
+        request on their own calibration masks.  If any live shard of a
+        lane cannot place (uncalibrated, or planning fails), the whole
+        lane falls back to the logical sharded layout — shards of one lane
+        always share a layout, which the stacked-children representation
+        requires.
+        """
+        if cfg is None:
+            cfg = PUDGemvConfig(backend=self.sessions[0][0].backend)
+        elif cfg.backend is None:
+            cfg = dataclasses.replace(
+                cfg, backend=self.sessions[0][0].backend)
+        reqs = packing_requests(params, cfg, include_unembed)
+        sliced, self._shard_widths = self._shard_requests(reqs)
+        packs = []
+        for d in range(self.n_data):
+            placements = [self._plan_shard(d, m, sliced[m], name)
+                          for m in range(self.n_model)]
+            if any(placements[m] is None
+                   for m in range(self.n_model) if sliced[m]):
+                placements = None     # logical fallback, lane-consistent
+            packs.append(pack_model_sharded(
+                params, cfg, n_shards=self.n_model, placements=placements,
+                include_unembed=include_unembed, mesh=self.mesh,
+                axis=self.axis))
+        self._packs, self._pack_cfg = packs, cfg
+        self._pack_args = (params, name, include_unembed)
+        return packs
+
+    def repack_lane(self, data_lane: int, *,
+                    changed_model: int | None = None) -> PackedModel:
+        """Rebuild one lane's sharded pack from its shards' current state.
+
+        With ``changed_model`` given (the drift-recovery path), only that
+        shard re-plans; every other shard of the lane reuses its existing
+        ``Placement`` object untouched — the isolation guarantee per-shard
+        recalibration rests on.
+        """
+        if self._packs is None or self._pack_args is None:
+            raise RuntimeError("no packed fleet: call pack() first")
+        params, name, include_unembed = self._pack_args
+        cfg = self._pack_cfg
+        reqs = packing_requests(params, cfg, include_unembed)
+        sliced, self._shard_widths = self._shard_requests(reqs)
+        placements = []
+        for m in range(self.n_model):
+            s = self.sessions[data_lane][m]
+            if (changed_model is not None and m != changed_model
+                    and s._placement is not None):
+                placements.append(s._placement)   # untouched shard: reuse
+            else:
+                placements.append(
+                    self._plan_shard(data_lane, m, sliced[m], name))
+        if any(placements[m] is None
+               for m in range(self.n_model) if sliced[m]):
+            placements = None
+        pm = pack_model_sharded(
+            params, cfg, n_shards=self.n_model, placements=placements,
+            include_unembed=include_unembed, mesh=self.mesh, axis=self.axis)
+        self._packs[data_lane] = pm
+        return pm
+
+    def recalibrate_shard(self, model_shard: int, subarrays, sense_offsets,
+                          *, data_lane: int = 0,
+                          assumed_temp_c: float | None = None):
+        """Route a drift event to the owning shard only.
+
+        Re-runs partial recalibration on ``sessions[data_lane]
+        [model_shard]``, re-plans that shard's slice of the last pack and
+        rebuilds the lane's sharded ``PackedModel``.  Every other shard's
+        table, placement and canaries are untouched — their ``PUDSession``
+        state objects are not even read.  Returns the refreshed lane pack
+        (also swapped into :attr:`packs`), or the refreshed
+        ``CalibrationState`` when the fleet has not packed yet.
+        """
+        s = self.sessions[data_lane][model_shard]
+        state = s.recalibrate_subarrays(subarrays, sense_offsets,
+                                        assumed_temp_c=assumed_temp_c)
+        if self._packs is None:
+            return state
+        return self.repack_lane(data_lane, changed_model=model_shard)
+
+    # -- kernel autotuning ---------------------------------------------------
+
+    def tune(self, *, batches=(1, 8), force: bool = False, warmup: int = 1,
+             reps: int = 3, max_candidates: int = 12) -> dict:
+        """Autotune the common per-shard kernel geometry, stamp every lane.
+
+        All shards of a pack share one padded per-device shape by
+        construction (``pack_linear_sharded`` pads every shard to the
+        widest), so a single search per (pack, batch) — run on shard
+        (0, 0)'s slice — covers the whole mesh.  Keys differ from the
+        unsharded session's because N is the padded per-shard width.
+        Winners persist in shard (0, 0)'s tuning cache.  Never routes
+        through ``PUDSession.tune`` (whose stacked-layer slicing would
+        mis-read the [S, WB, Kw, R] shard axis as a layer axis).
+        """
+        if self._packs is None:
+            raise RuntimeError("no packed fleet: call pack() first")
+        from repro.kernels.autotune import tune_kernel, tuning_key
+        s0 = self.sessions[0][0]
+        cache = s0._tuning_cache()
+        cfg = self._pack_cfg or PUDGemvConfig()
+        report: dict = {"fingerprint": (cache.fingerprint if cache
+                                        else None),
+                        "cache_dir": (str(cache.directory) if cache
+                                      else None),
+                        "keys": {}}
+        ref = self._packs[0]
+        tile_plans: dict[str, tuple] = {}
+        for pname in ref.packed_names:
+            st = ref.tensor(pname)
+            if st.planes.ndim == 5:            # stacked layers: [L, S, ...]
+                planes = st.planes[0, 0]
+                col_ids = (st.col_ids[0, 0] if st.col_ids is not None
+                           else None)
+            else:                              # [S, WB, Kw, R]
+                planes = st.planes[0]
+                col_ids = st.col_ids[0] if st.col_ids is not None else None
+            plans: dict[str, object] = {}
+            for batch in batches:
+                entry = "gemm" if batch > 1 else "gemv"
+                key = tuning_key(entry, int(batch), st.k, st.padded_n,
+                                 st.n_bits, st.layout, st.placed)
+                plan = None if (force or cache is None) else cache.load(key)
+                row = {"name": pname, "entry": entry}
+                if plan is not None:
+                    row["status"] = "hit"
+                else:
+                    x = ((jnp.arange(int(batch) * st.k) % 255) - 127) \
+                        .astype(jnp.int8).reshape(int(batch), st.k)
+                    res = tune_kernel(
+                        entry, x, planes, col_ids=col_ids,
+                        window_block=st.window_block, layout=st.layout,
+                        logical_k=st.logical_k, mode=cfg.mode,
+                        backend=s0.backend, warmup=warmup, reps=reps,
+                        max_candidates=max_candidates)
+                    plan = res.plan
+                    row.update(status="tuned", **res.to_stats())
+                    if cache is not None:
+                        cache.save(key, plan, res.to_stats())
+                row["plan"] = plan.to_dict()
+                report["keys"][key] = row
+                plans[entry] = plan
+            tile_plans[pname] = tuple(sorted(plans.items()))
+        for d, pm in enumerate(self._packs):
+            stamped = {n: pm.tensor(n).replace(tile_plan=tile_plans[n])
+                       for n in tile_plans}
+            self._packs[d] = _restamp_model(pm, stamped)
+        self._tuning_report = report
+        return report
+
+    def tuning_report(self) -> dict | None:
+        return self._tuning_report
+
+    # -- execution + reporting -----------------------------------------------
+
+    def serving_engine(self, model, *, max_len: int,
+                       batch_size: int | None = None, **kw):
+        """A ``FleetServingEngine``: one continuous-batching lane per
+        "data"-axis row, tensor parallelism inside each lane's packs."""
+        from repro.runtime.engine import FleetServingEngine
+        if self._packs is None:
+            raise RuntimeError("no packed fleet: call pack() first")
+        return FleetServingEngine(
+            model, [pm.params for pm in self._packs], fleet=self,
+            max_len=max_len, batch_size=batch_size, **kw)
+
+    def fleet_perf_model(self) -> FleetPerfAggregate:
+        """Aggregate Eq.-1 rate model: the slowest device of each model
+        shard bounds that shard, the slowest shard bounds every lane, and
+        data lanes multiply (``pud.gemv.FleetPerfAggregate``)."""
+        shards = []
+        for m in range(self.n_model):
+            worst = None
+            for row in self.sessions:
+                s = row[m]
+                pm = s.placement_perf_model() or s.tuned_perf_model()
+                if not isinstance(pm, FleetPerfModel):
+                    pm = FleetPerfModel.from_table(
+                        [1.0 - pm.error_free_frac])
+                if worst is None or \
+                        pm.macs_per_second < worst.macs_per_second:
+                    worst = pm
+            shards.append(worst)
+        return FleetPerfAggregate(shards=tuple(shards), n_data=self.n_data,
+                                  shard_widths=self._shard_widths)
+
+    def perf_report(self, flops_per_token: float | None = None,
+                    batch_size: int | None = None) -> dict:
+        """Mesh shape, per-device reports, and the aggregate rates the
+        serving driver prints (tokens/s over the whole fleet + scaling
+        efficiency vs ``n_devices`` copies of shard (0, 0))."""
+        agg = self.fleet_perf_model()
+        flops = flops_per_token or self.flops_per_token()
+        rep: dict = {
+            "n_data": self.n_data,
+            "n_model": self.n_model,
+            "n_devices": self.n_devices,
+            "device_ids": self.device_ids,
+            "shard_widths": self._shard_widths,
+            "shard_fraction": agg.shard_fraction,
+            "aggregate_model": agg,
+            "shards": [[s.perf_report(flops) for s in row]
+                       for row in self.sessions],
+        }
+        if flops is not None:
+            rep["flops_per_token"] = flops
+            rep["aggregate_tok_s"] = agg.tokens_per_second(flops)
+            rep["scaling_efficiency"] = agg.scaling_efficiency(flops)
+            if batch_size is not None:
+                rep["batch_size"] = int(batch_size)
+                rep["aggregate_batched_tok_s"] = \
+                    agg.batched_tokens_per_second(flops, batch_size)
+        return rep

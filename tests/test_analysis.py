@@ -70,6 +70,14 @@ FIXTURES = [
     ("no-recal-on-decode-path", LIB, """
         levels = calibrate_fleet(key, offsets, cfg, params)
         """),
+    ("no-mesh-outside-launch-mesh", LIB, """
+        import jax
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        """),
+    ("no-mesh-outside-launch-mesh", LIB, """
+        from jax.sharding import Mesh
+        mesh = Mesh(devices, ("data", "model"))
+        """),
 ]
 
 
@@ -107,6 +115,11 @@ def test_rules_are_path_scoped():
          "from repro.core.fleet import recalibrate_subarrays"),
         ("src/repro/runtime/session.py",
          "levels = calibrate_fleet(key, offsets, cfg, params)"),
+        # mesh construction is legal only in the launch/mesh.py factories
+        ("src/repro/launch/mesh.py",
+         'import jax\nmesh = jax.make_mesh((2, 2), ("data", "model"))'),
+        # importing Mesh for a type annotation is fine — only calls count
+        (LIB, "from jax.sharding import Mesh\ndef f(m: Mesh): return m"),
     ]
     for path, snippet in ok:
         assert lint.lint_source(snippet, path) == [], (path, snippet)

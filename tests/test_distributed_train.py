@@ -1,17 +1,8 @@
 """SPMD correctness: the sharded train step computes the SAME numbers as the
 single-device step — run in a subprocess with 4 forced host devices on a
 (data=2, model=2) mesh, qwen3-family smoke config, real data pipeline."""
-import os
-import pathlib
-import subprocess
-import sys
-import textwrap
 
-REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
-
-PROG = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+PROG = """
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
     from repro.configs import get
@@ -29,8 +20,8 @@ PROG = textwrap.dedent("""
     batches = [next(data) for _ in range(3)]
 
     def run(mesh_shape, axes, use_rules):
-        from repro.launch.mesh import use_mesh
-        mesh = jax.make_mesh(mesh_shape, axes)
+        from repro.launch.mesh import make_host_mesh, use_mesh
+        mesh = make_host_mesh(*mesh_shape)
         with use_mesh(mesh):
             rules = shd.make_rules(mesh)
             sharding_ctx.set_rules(
@@ -69,14 +60,8 @@ PROG = textwrap.dedent("""
     d = max(float(np.abs(a - b).max()) for a, b in zip(h1, h4))
     assert d < 2e-2, d   # bf16 params, fp32 math reordering across shards
     print("DIST_OK", l1, l4, d)
-""")
+"""
 
 
-def test_sharded_step_matches_single_device():
-    r = subprocess.run(
-        [sys.executable, "-c", PROG], capture_output=True, text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": os.environ.get("HOME", "/tmp"),
-             "JAX_PLATFORMS": "cpu"},
-        cwd=str(REPO_ROOT), timeout=600)
-    assert "DIST_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-3000:]
+def test_sharded_step_matches_single_device(forced_devices):
+    forced_devices(PROG, marker="DIST_OK", devices=4)

@@ -1,11 +1,5 @@
 """Fleet calibration engine: grid == per-subarray equivalence, fused Pallas
 kernel vs oracle, shard_map path, cache round-trip, fleet ECR/throughput."""
-import os
-import pathlib
-import subprocess
-import sys
-import textwrap
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -22,8 +16,6 @@ from repro.kernels.ref import calib_iter_ref
 from repro.pud.gemv import FleetPerfModel, PUDPerfModel
 from repro.pud.physics import PhysicsParams
 from repro.runtime.calib_cache import CalibrationTableCache
-
-REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 P = PhysicsParams()
 CFG = FleetConfig(n_channels=1, n_banks=2, n_subarrays=2, n_cols=256)
@@ -201,9 +193,7 @@ def test_fleet_throughput_and_perf_model():
     assert fleet.worst_subarray_macs_per_second < fleet.macs_per_second
 
 
-SHARD_PROG = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+SHARD_PROG = """
     import jax, numpy as np
     from repro.core.calibrate import CalibrationConfig
     from repro.core.fleet import FleetConfig, calibrate_fleet, \\
@@ -227,14 +217,8 @@ SHARD_PROG = textwrap.dedent("""
     hist = np.asarray(fused.mean_abs_bias)
     assert hist[-1] < hist[0]
     print("SHARD_OK", hist.tolist())
-""")
+"""
 
 
-def test_fleet_calibration_shard_map():
-    r = subprocess.run(
-        [sys.executable, "-c", SHARD_PROG], capture_output=True, text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": os.environ.get("HOME", "/tmp"),
-             "JAX_PLATFORMS": "cpu"},
-        cwd=str(REPO_ROOT), timeout=600)
-    assert "SHARD_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-3000:]
+def test_fleet_calibration_shard_map(forced_devices):
+    forced_devices(SHARD_PROG, marker="SHARD_OK", devices=4)

@@ -1,0 +1,123 @@
+"""Fleet session (host-side, no mesh needed): per-device state is fully
+independent, drift recalibration touches only the owning shard's table and
+placement, and the fleet monitor routes events to the shard that raised
+them."""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (CalibrationConfig, DriftConfig, DriftSimulator,
+                       FleetConfig, FleetDriftMonitor, PUDGemvConfig,
+                       PUDSession)
+from repro.models.params import init_params
+from repro.models.transformer import LMConfig, TransformerLM
+
+GRID = FleetConfig(n_channels=1, n_banks=1, n_subarrays=8, n_cols=1024)
+CAL = CalibrationConfig(n_iterations=4, n_samples=64)
+DRIFT_TEMP_C = 3000.0        # see tests/test_drift.py: certainty, not realism
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    """Wider than the arch smokes on purpose: every projection must span
+    >= 2 window blocks so both model shards of a 2-way split own columns
+    (single-block tensors park their second shard on pure padding, which
+    tests/test_sharded_placement.py covers separately)."""
+    model = TransformerLM(LMConfig(
+        name="fleet-smoke", n_layers=2, d_model=256, n_heads=4,
+        n_kv_heads=2, d_ff=512, vocab=512, head_dim=16, loss_chunk=32))
+    params = init_params(model.param_defs(), jax.random.key(0))
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def fleet(smoke):
+    """A calibrated 1x2 fleet (one lane, two model shards) with canaries
+    and a placed sharded pack — shared by the read-only tests; the
+    mutation test below recalibrates a subarray no other test reads."""
+    _, params = smoke
+    f = PUDSession.open_fleet("qwen3-1.7b", n_data=1, n_model=2, grid=GRID,
+                              calib=CAL, key=7, n_trials_ecr=128,
+                              backend="reference")
+    f.calibrate()
+    f.reserve_canaries(16)
+    f.pack(params, PUDGemvConfig(weight_bits=4), name="fleet-shared")
+    return f
+
+
+def test_fleet_devices_are_independent(fleet):
+    assert fleet.n_data == 1 and fleet.n_model == 2 and fleet.n_devices == 2
+    (s0, s1), = fleet.sessions
+    assert fleet.shard(0, 0) is s0 and fleet.shard(0, 1) is s1
+    assert s0.device_id != s1.device_id
+    # distinct key folds -> distinct manufactured offsets -> distinct tables
+    assert (np.asarray(s0.calibration.levels)
+            != np.asarray(s1.calibration.levels)).any()
+    # each shard planned its own slice under its own placement namespace
+    assert s0._placement is not None and s1._placement is not None
+    assert s0._placement is not s1._placement
+
+
+def test_pack_splits_every_projection_on_block_boundaries(fleet):
+    pm = fleet.packs[0]
+    widths = fleet.shard_widths
+    assert widths is not None and len(widths) == 2 and min(widths) > 0
+    for n in pm.packed_names:
+        st = pm.tensor(n)
+        assert len(st.shard_widths) == 2
+        assert all(w % st.block_cols == 0 for w in st.shard_widths)
+        assert st.planes.shape[-4] == 2          # stacked shard axis
+    assert pm.placed
+
+
+def test_fleet_monitor_routes_events_to_owning_shard(fleet):
+    s0, s1 = fleet.sessions[0]
+    sims = [DriftSimulator.for_session(s) for s in (s0, s1)]
+    mon = FleetDriftMonitor(fleet, sims,
+                            config=DriftConfig(probe_every=1))
+    # clean fleet: no critical events anywhere
+    assert not [e for e in mon.probe() if e.severity == "critical"]
+
+    sims[1].advance(temp_c=DRIFT_TEMP_C, subarrays=[2])
+    events = [e for e in mon.probe() if e.severity == "critical"]
+    assert events and {e.shard for e in events} == {1}
+    assert {e.subarray for e in events} == {2}
+
+    state0 = s0._state
+    pm = mon.recover(events[0])
+    assert s0._state is state0               # untouched neighbour
+    assert fleet.packs[0] is pm
+    rep = mon.report()
+    assert rep["data_lane"] == 0 and len(rep["shards"]) == 2
+
+
+def test_fleet_monitor_needs_one_device_per_shard(fleet):
+    sim = DriftSimulator.for_session(fleet.shard(0, 0))
+    with pytest.raises(ValueError):
+        FleetDriftMonitor(fleet, [sim])
+
+
+def test_recalibrate_shard_leaves_other_shard_untouched(fleet):
+    s0, s1 = fleet.sessions[0]
+    state0, plc0 = s0._state, s0._placement
+    levels1 = np.asarray(s1.calibration.levels).copy()
+    pack_before = fleet.packs[0]
+
+    sim = DriftSimulator.for_session(s1)
+    sim.advance(temp_c=DRIFT_TEMP_C, subarrays=[5])
+    pm = fleet.recalibrate_shard(1, [5], sim.sense_offsets(),
+                                 assumed_temp_c=DRIFT_TEMP_C)
+
+    # shard 0: state and placement are the very same objects — not re-read,
+    # not re-planned, not re-identified
+    assert s0._state is state0
+    assert s0._placement is plc0
+    # shard 1: only subarray 5's ladder moved
+    levels1b = np.asarray(s1.calibration.levels)
+    assert (levels1b[5] != levels1[5]).any()
+    for g in range(GRID.n_subarrays):
+        if g != 5:
+            np.testing.assert_array_equal(levels1b[g], levels1[g])
+    # the lane's pack was rebuilt and swapped in
+    assert fleet.packs[0] is pm and pm is not pack_before
+    assert pm.placed

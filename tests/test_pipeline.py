@@ -1,16 +1,8 @@
 """Pipeline parallelism: schedule correctness in a subprocess with forced
 multi-device CPU (the stage axis needs >= 2 real devices)."""
-import os
-import pathlib
-import subprocess
-import sys
-import textwrap
-
 import pytest
 
 from repro.runtime.pipeline import bubble_fraction, stage_split
-
-REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
 def test_bubble_fraction():
@@ -27,9 +19,7 @@ def test_stage_split_shapes():
     assert out["b"].shape == (4, 2, 5)
 
 
-PIPE_PROG = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+PIPE_PROG = """
     import jax, jax.numpy as jnp, numpy as np
     from repro.runtime.pipeline import pipelined_apply, stage_split
 
@@ -59,14 +49,8 @@ PIPE_PROG = textwrap.dedent("""
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
     print("PIPELINE_OK", float(jnp.abs(got - want).max()))
-""")
+"""
 
 
-def test_pipelined_apply_matches_sequential():
-    r = subprocess.run(
-        [sys.executable, "-c", PIPE_PROG], capture_output=True, text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": os.environ.get("HOME", "/tmp"),
-             "JAX_PLATFORMS": "cpu"},
-        cwd=str(REPO_ROOT), timeout=300)
-    assert "PIPELINE_OK" in r.stdout, r.stdout + r.stderr
+def test_pipelined_apply_matches_sequential(forced_devices):
+    forced_devices(PIPE_PROG, marker="PIPELINE_OK", devices=4, timeout=300)

@@ -1,0 +1,159 @@
+"""Shard-boundary invariant: model-shard column splits land on window-block
+boundaries (no placement window ever straddles two devices), the contract
+checker trips on every adversarial split, and the cross-shard perf
+aggregate prices imbalance the way the split creates it."""
+import numpy as np
+import pytest
+
+from repro.analysis import ContractViolation, contracts
+from repro.pud.gemv import FleetPerfAggregate, FleetPerfModel
+from repro.pud.packer import pack_linear_sharded
+from repro.pud.placement import (PLACE_BLOCK, PlacementError,
+                                 PlacementRequest, plan_placement,
+                                 shard_column_slices)
+
+
+# ---------------------------------------------------------------------------
+# shard_column_slices: block-aligned spans for divisible and ragged N.
+# ---------------------------------------------------------------------------
+
+
+def test_even_split_on_place_block():
+    spans, bc = shard_column_slices(1024, 4)
+    assert bc == PLACE_BLOCK
+    assert spans == ((0, 256), (256, 512), (512, 768), (768, 1024))
+    contracts.check_shard_slices(spans, 1024, bc)
+
+
+def test_non_divisible_n_uses_full_tensor_block_width():
+    # 384 has no 256 divisor: the unsharded allocator picks block_cols=192,
+    # and the shard split must respect the same width (2 blocks, 3 shards
+    # -> the last shard serves pure padding).
+    spans, bc = shard_column_slices(384, 3)
+    assert bc == 192
+    assert spans == ((0, 192), (192, 384), (384, 384))
+    contracts.check_shard_slices(spans, 384, bc)
+
+
+def test_remainder_blocks_go_to_earlier_shards():
+    spans, bc = shard_column_slices(1536, 4)
+    assert bc == PLACE_BLOCK                    # 6 blocks over 4 shards
+    widths = tuple(hi - lo for lo, hi in spans)
+    assert widths == (512, 512, 256, 256)
+    contracts.check_shard_slices(spans, 1536, bc)
+
+
+def test_more_shards_than_blocks_yields_zero_width_tails():
+    spans, bc = shard_column_slices(256, 4)
+    assert bc == 256
+    assert spans == ((0, 256), (256, 256), (256, 256), (256, 256))
+    contracts.check_shard_slices(spans, 256, bc)
+
+
+def test_rejects_nonpositive_inputs():
+    with pytest.raises(PlacementError):
+        shard_column_slices(0, 2)
+    with pytest.raises(PlacementError):
+        shard_column_slices(512, 0)
+
+
+# ---------------------------------------------------------------------------
+# check_shard_slices: every adversarial split trips "shard-straddle".
+# ---------------------------------------------------------------------------
+
+
+ADVERSARIAL = [
+    ("mid-block boundary", ((0, 200), (200, 512)), 512, 256),
+    ("gap between shards", ((0, 256), (512, 1024)), 1024, 256),
+    ("short coverage", ((0, 256), (256, 512)), 1024, 256),
+    ("overshoot", ((0, 256), (256, 1280)), 1024, 256),
+    ("negative span", ((0, 256), (256, 128)), 512, 256),
+    ("block does not tile n", ((0, 300), (300, 600)), 600, 256),
+]
+
+
+@pytest.mark.parametrize("name,spans,n,bc", ADVERSARIAL,
+                         ids=[a[0].replace(" ", "-") for a in ADVERSARIAL])
+def test_adversarial_split_trips_shard_straddle(name, spans, n, bc):
+    with pytest.raises(ContractViolation) as exc:
+        contracts.check_shard_slices(spans, n, bc)
+    assert exc.value.invariant == "shard-straddle", name
+    assert exc.value.kernel == "sharded_gemm"
+
+
+# ---------------------------------------------------------------------------
+# The planner rejects a forced block width that would straddle, and the
+# sharded packer's per-shard geometry matches the split it came from.
+# ---------------------------------------------------------------------------
+
+
+def test_forced_block_cols_must_divide_n_cols():
+    masks = np.zeros((4, 1024), bool)
+    bad = PlacementRequest("w", n_cols=384, block_cols=256)
+    with pytest.raises(PlacementError):
+        plan_placement(masks, [bad])
+    # the width shard_column_slices derives is accepted
+    _, bc = shard_column_slices(384, 2)
+    plan_placement(masks, [PlacementRequest("w", n_cols=192,
+                                            block_cols=bc)])
+
+
+def test_pack_linear_sharded_geometry_matches_split():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(64, 1536)).astype(np.float32)
+    st = pack_linear_sharded(w, 4, backend="reference")
+    spans, bc = shard_column_slices(1536, 4)
+    assert st.block_cols == bc
+    assert st.shard_widths == tuple(hi - lo for lo, hi in spans)
+    assert sum(st.shard_widths) == 1536
+    # common per-device width = the widest shard; planes/scale stack on S
+    n_max = max(st.shard_widths)
+    assert st.planes.shape[0] == 4 and st.planes.shape[-1] == n_max
+    assert st.scale.shape == (4, n_max)
+    # padding columns carry neutral scale so they decode to exact zeros
+    np.testing.assert_array_equal(
+        np.asarray(st.scale[2, st.shard_widths[2]:]), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# FleetPerfAggregate: the slowest/widest shard bounds the lane rate.
+# ---------------------------------------------------------------------------
+
+
+def _shard(ecr=0.03):
+    return FleetPerfModel.from_table([ecr, ecr])
+
+
+def test_even_split_scales_linearly():
+    agg = FleetPerfAggregate((_shard(), _shard()), n_data=2,
+                             shard_widths=(512, 512))
+    assert agg.n_devices == 4
+    assert agg.shard_fraction == pytest.approx(0.5)
+    f = 2.0e9
+    assert agg.tokens_per_second(f) == pytest.approx(
+        4 * _shard().tokens_per_second(f), rel=1e-9)
+    assert agg.scaling_efficiency(f) == pytest.approx(1.0, rel=1e-9)
+
+
+def test_imbalanced_split_prices_widest_shard():
+    agg = FleetPerfAggregate((_shard(), _shard()), n_data=1,
+                             shard_widths=(768, 256))
+    assert agg.shard_fraction == pytest.approx(0.75)
+    # the 0.75-share shard bounds the lane: 2 devices deliver 4/3x, not 2x
+    assert agg.scaling_efficiency(2.0e9) == pytest.approx(2 / 3, rel=1e-9)
+
+
+def test_zero_width_tail_shard_is_pure_overhead():
+    agg = FleetPerfAggregate((_shard(), _shard()), n_data=1,
+                             shard_widths=(256, 0))
+    assert agg.shard_fraction == pytest.approx(1.0)
+    assert agg.scaling_efficiency(2.0e9) == pytest.approx(0.5, rel=1e-9)
+
+
+def test_slowest_shard_binds_the_lane():
+    fast, slow = _shard(0.01), _shard(0.20)
+    agg = FleetPerfAggregate((fast, slow), n_data=1,
+                             shard_widths=(512, 512))
+    f = 2.0e9
+    assert agg.tokens_per_second(f) == pytest.approx(
+        slow.tokens_per_second(f * 0.5), rel=1e-9)

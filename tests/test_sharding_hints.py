@@ -1,16 +1,8 @@
 """Sharding-hint machinery: no-op without rules, exactness of activation
 head padding under a real (forced multi-device) mesh."""
-import os
-import pathlib
-import subprocess
-import sys
-import textwrap
-
 import jax.numpy as jnp
 
 from repro.models import sharding_ctx
-
-REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
 def test_hint_noop_without_rules():
@@ -36,9 +28,7 @@ def test_padded_head_count_with_rules():
         sharding_ctx.set_rules(None)
 
 
-PAD_PROG = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+PAD_PROG = """
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
     from repro.models import sharding_ctx
@@ -56,8 +46,8 @@ PAD_PROG = textwrap.dedent("""
     sharding_ctx.set_rules(None)
     ref, (rk, rv) = gqa_attention(params, cfg, x, positions)
 
-    from repro.launch.mesh import use_mesh
-    mesh = jax.make_mesh((1, 4), ("data", "model"))
+    from repro.launch.mesh import make_host_mesh, use_mesh
+    mesh = make_host_mesh(1, 4)
     with use_mesh(mesh):
         sharding_ctx.set_rules({"batch": "data", "heads": None,
                                 "heads_act": "model",
@@ -70,14 +60,8 @@ PAD_PROG = textwrap.dedent("""
                                rtol=2e-5, atol=2e-5)
     assert gk.shape[2] == cfg.n_kv_heads, gk.shape
     print("PAD_OK", float(jnp.abs(got - ref).max()))
-""")
+"""
 
 
-def test_head_padding_exact_on_mesh():
-    r = subprocess.run(
-        [sys.executable, "-c", PAD_PROG], capture_output=True, text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": os.environ.get("HOME", "/tmp"),
-             "JAX_PLATFORMS": "cpu"},
-        cwd=str(REPO_ROOT), timeout=300)
-    assert "PAD_OK" in r.stdout, r.stdout + r.stderr
+def test_head_padding_exact_on_mesh(forced_devices):
+    forced_devices(PAD_PROG, marker="PAD_OK", devices=4, timeout=300)
