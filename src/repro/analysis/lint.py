@@ -42,6 +42,14 @@ Rule catalog (docs/analysis.md mirrors this):
                               only by the ``launch/mesh.py`` factories, so
                               device-topology decisions live in one place;
                               call sites take a mesh as an argument.
+  no-prefill-on-decode-wave   chunk-scheduling helpers (decode-path
+                              functions with ``chunk`` in their name) may
+                              not call whole-request prefill — a whole
+                              prefill inside the decode wave stalls every
+                              decoding slot for the full prompt length,
+                              which is exactly what chunked prefill exists
+                              to prevent; chunk helpers advance via
+                              ``prefill_chunk`` only.
 """
 from __future__ import annotations
 
@@ -65,6 +73,14 @@ RECALIBRATION_ENTRYPOINTS = frozenset({
 
 #: Modules on the step-granular decode path (rule: no-recal-on-decode-path).
 DECODE_PATH_PREFIXES = ("repro/runtime/engine.py", "repro/models/")
+
+#: Whole-request prefill entrypoints (rule: no-prefill-on-decode-wave).
+#: Chunk-scheduling helpers advance admitted prompts one chunk at a time;
+#: reaching any of these from a chunk helper re-introduces the full-prompt
+#: stall the chunked scheduler exists to remove.
+WHOLE_PREFILL_ENTRYPOINTS = frozenset({
+    "prefill", "_prefill", "_prefill_fn",
+    "_prefill_bucketed", "_prefill_bucketed_fn"})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -270,6 +286,30 @@ def _check_decode_recal(tree: ast.AST, path: str):
                 yield Finding(
                     "no-recal-on-decode-path", path, node.lineno,
                     f"call to {tail!r}: {msg}")
+
+
+@rule("no-prefill-on-decode-wave",
+      "chunk scheduling helpers may not call whole-request prefill")
+def _check_chunk_prefill(tree: ast.AST, path: str):
+    if not _on_decode_path(path):
+        return
+    msg = ("whole-request prefill reached from a chunk-scheduling helper — "
+           "a full-prompt prefill inside the decode wave stalls every "
+           "decoding slot for the whole prompt; advance the slot with "
+           "prefill_chunk and let admission handle un-chunked requests")
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if "chunk" not in fn.name:
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            tail = _attr_chain(node.func).split(".")[-1]
+            if tail in WHOLE_PREFILL_ENTRYPOINTS:
+                yield Finding(
+                    "no-prefill-on-decode-wave", path, node.lineno,
+                    f"call to {tail!r} inside {fn.name!r}: {msg}")
 
 
 @rule("no-mesh-outside-launch-mesh",

@@ -46,7 +46,8 @@ from repro.runtime.calib_cache import CalibrationTableCache
 from repro.runtime.drift import (DriftConfig, DriftController, DriftDetector,
                                  DriftEvent, DriftMonitor, FleetDriftMonitor)
 from repro.runtime.engine import (Completion, FleetServingEngine, Request,
-                                  ServingEngine)
+                                  ServingEngine, SLOConfig)
+from repro.runtime.prefix_cache import PrefixCache
 from repro.runtime.session import (CalibrationState, PUDFleetSession,
                                    PUDSession)
 from repro.runtime.watchdog import Heartbeat, StepWatchdog
@@ -60,6 +61,7 @@ __all__ = [
     "shard_column_slices", "check_shard_slices",
     # batched serving
     "ServingEngine", "Request", "Completion",
+    "PrefixCache", "SLOConfig",
     "StepWatchdog", "Heartbeat",
     # drift monitoring + live recalibration
     "DriftMonitor", "DriftController", "DriftDetector", "DriftConfig",

@@ -94,6 +94,31 @@ def greedy_generate(model, params, tokens, gen: int, max_len: int,
     return jnp.concatenate(out, axis=1), jnp.stack(all_logits, axis=1)
 
 
+def _scheduler_kwargs(args) -> dict:
+    """Engine scheduler extensions from the CLI flags (all default-off)."""
+    return {
+        "chunk_prefill": args.chunk_prefill,
+        "prefix_cache": bool(args.prefix_cache),
+        "slo": args.slo_ms,
+    }
+
+
+def _print_scheduler_extras(sched: dict, indent: str = "    ") -> None:
+    """Prefix-cache / SLO telemetry lines (only when the features are on)."""
+    pc = sched.get("prefix_cache")
+    if pc:
+        print(f"{indent}prefix cache: {pc['hits']} hits / "
+              f"{pc['misses']} misses ({pc['hit_rate']:.0%}), "
+              f"{pc['entries']} entries ({pc['bytes'] / 1024:.0f} KiB), "
+              f"{pc['invalidations']} invalidations")
+    slo = sched.get("slo")
+    if slo:
+        print(f"{indent}slo: {slo['met']} met / {slo['missed']} missed "
+              f"(shed {slo['shed_on_admit']} at admission, "
+              f"{slo['shed_admitted']} in flight; "
+              f"modeled step {slo['step_ms']:.3f} ms)")
+
+
 def _monitored_serve(args, session, engine, model, params, requests,
                      tokens, max_len) -> int:
     """Serve ``requests`` under the drift monitor (--monitor).
@@ -251,7 +276,8 @@ def _sharded_serve(args, spec, model, params, tokens, ref_toks,
               f"({n_hit} cache hits, {len(trep['keys']) - n_hit} searched)")
 
     engine = fleet.serving_engine(model, max_len=max_len,
-                                  batch_size=args.batch_size)
+                                  batch_size=args.batch_size,
+                                  **_scheduler_kwargs(args))
     requests = [Request(request_id=i, tokens=tokens[i],
                         max_new_tokens=args.gen)
                 for i in range(args.batch)]
@@ -261,6 +287,7 @@ def _sharded_serve(args, spec, model, params, tokens, ref_toks,
           f"{sched['n_lanes']} lanes in {sched['steps']} steps "
           f"({sched['batch_size']} slots/lane, "
           f"{sched['generated_tokens']} tokens)")
+    _print_scheduler_extras(sched)
     agree = float(np.mean(
         [c.tokens == list(np.asarray(ref_toks[c.request_id]))
          for c in completions]))
@@ -288,6 +315,20 @@ def main(argv=None) -> int:
                          "ServingEngine (one request per batch row); "
                          "combine with --pud-gemv to feed it the packed "
                          "PUD path, alone it serves the bf16 tree")
+    ap.add_argument("--chunk-prefill", type=int, default=None, metavar="N",
+                    help="chunked prefill: admit prompts N tokens per step "
+                         "interleaved with decode waves (pow2-rounded; "
+                         "bit-identical to whole-request prefill)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="LRU reuse of completed prefills: repeated "
+                         "prompts skip prefill, shared system prompts "
+                         "resume after the cached prefix (invalidated on "
+                         "every drift hot swap)")
+    ap.add_argument("--slo-ms", type=float, default=None, metavar="X",
+                    help="SLO-aware admission with an X ms default "
+                         "deadline per request: earliest-deadline-first "
+                         "admission priced by the placement perf model, "
+                         "hopeless/expired requests shed")
     ap.add_argument("--batch-size", type=int, default=None,
                     help="engine decode slots; default = the session's "
                          "occupancy-derived optimal batch")
@@ -511,7 +552,8 @@ def main(argv=None) -> int:
         engine = ServingEngine(
             model, serve_params,
             session=session if args.pud_gemv else None,
-            max_len=max_len, batch_size=args.batch_size)
+            max_len=max_len, batch_size=args.batch_size,
+            **_scheduler_kwargs(args))
         requests = [Request(request_id=i, tokens=tokens[i],
                             max_new_tokens=args.gen)
                     for i in range(args.batch)]
@@ -525,6 +567,11 @@ def main(argv=None) -> int:
               f"({sched['batch_size']} slots, "
               f"occupancy {sched['slot_occupancy']:.1%}, "
               f"{sched['wall_tok_s']:.1f} tok/s CPU wall)")
+        if args.chunk_prefill:
+            print(f"    chunked prefill: {sched['prefill_chunks']} chunks "
+                  f"of {engine.chunk_prefill} tokens "
+                  f"({sched['chunk_traces']} compiled variants)")
+        _print_scheduler_extras(sched)
         # continuous batching must not change any request's tokens
         seq = ref_toks if not args.pud_gemv else toks
         agree = float(np.mean([c.tokens == list(np.asarray(seq[i]))

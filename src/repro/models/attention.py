@@ -182,6 +182,60 @@ def gqa_attention(p, cfg: AttnConfig, x, positions, kv_override=None):
     return out, cache_kv
 
 
+def gqa_prefill_chunk(p, cfg: AttnConfig, x, cache_k, cache_v, start,
+                      kv_len: int):
+    """Chunked-prefill attention: resume a prompt into an existing KV cache.
+
+    x: [B, C, D] — the chunk's hidden states for absolute positions
+    [start, start+C); cache_k/v: [B, Smax, KV, Dh] holding every earlier
+    chunk's keys/values at their absolute positions.  The chunk's k/v are
+    written at ``start`` (traced scalar) and attention runs over the first
+    ``kv_len`` cache rows (static: the prompt's pow2 bucket), with the
+    causal mask anchored at ``q_offset=start``.  Row ``p`` of the output
+    sees exactly the keys ``0..p`` a whole-bucket prefill would show it, so
+    chunked prefill is bit-identical to whole prefill row by row (the
+    masked-tail length is the same ``kv_len`` in both).
+
+    Returns (out [B,C,D], new_cache_k, new_cache_v).
+    """
+    b, c, _ = x.shape
+    positions = start + jnp.broadcast_to(jnp.arange(c), (b, c))
+    q = head_proj(p, "wq", x, cfg.n_heads, cfg.head_dim)
+    k_new = head_proj(p, "wk", x, cfg.n_kv_heads, cfg.head_dim)
+    v_new = head_proj(p, "wv", x, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k_new = rmsnorm(p["k_norm"], k_new)
+    q = rope(q, positions, cfg.rope_theta)
+    k_new = rope(k_new, positions, cfg.rope_theta)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_new.astype(cache_k.dtype), start, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_new.astype(cache_v.dtype), start, axis=1)
+    k = cache_k[:, :kv_len].astype(x.dtype)
+    v = cache_v[:, :kv_len].astype(x.dtype)
+    # Same activation-level head padding as gqa_attention (no-op without a
+    # model-sharded mesh context); per-head rows are independent, so padded
+    # heads never perturb real heads' values.
+    h_true = q.shape[2]
+    hp = padded_head_count(h_true)
+    if hp != h_true:
+        g = h_true // k.shape[2]
+        if g > 1:
+            k = jnp.repeat(k, g, axis=2)
+            v = jnp.repeat(v, g, axis=2)
+        pad = ((0, 0), (0, 0), (0, hp - h_true), (0, 0))
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    out = _flash(q, k, v, causal=True, kv_chunk=min(cfg.kv_chunk, kv_len),
+                 q_offset=start)
+    if hp != h_true:
+        out = out[:, :, :h_true]
+    out = merge_proj(p, "wo", out)
+    return out, cache_k, cache_v
+
+
 def encoder_kv(p, cfg: AttnConfig, memory):
     """Precompute cross-attention K/V from encoder output."""
     k = head_proj(p, "wk", memory, cfg.n_kv_heads, cfg.head_dim)
@@ -314,6 +368,51 @@ def mla_attention(p, cfg: MLAConfig, x, positions):
     out = out[..., : cfg.v_head_dim]
     out = merge_proj(p, "wo", out)
     return out, (c_kv, k_rope[:, :, 0, :])
+
+
+def mla_prefill_chunk(p, cfg: MLAConfig, x, cache_ckv, cache_kr, start,
+                      kv_len: int):
+    """Chunked-prefill MLA: resume a prompt into the latent KV cache.
+
+    x: [B, C, D] for absolute positions [start, start+C); cache_ckv:
+    [B, Smax, R]; cache_kr: [B, Smax, dr].  The chunk's latents land at
+    ``start`` and k_nope/v are re-expanded from the cached latents over the
+    first ``kv_len`` rows — the same up-projection a whole-bucket prefill
+    applies, so the rows are bit-identical (see gqa_prefill_chunk).
+
+    Returns (out [B,C,D], new_cache_ckv, new_cache_kr).
+    """
+    b, c, _ = x.shape
+    positions = start + jnp.broadcast_to(jnp.arange(c), (b, c))
+    q = head_proj(p, "wq", x, cfg.n_heads, cfg.qk_dim)
+    q_nope, q_rope = q[..., :cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    c_new = rmsnorm(p["kv_norm"], x @ p["wdkv"].astype(x.dtype))  # [B,C,R]
+    kr_new = rope((x @ p["wkr"].astype(x.dtype))[:, :, None, :], positions,
+                  cfg.rope_theta)[:, :, 0, :]                     # [B,C,dr]
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, c_new.astype(cache_ckv.dtype), start, axis=1)
+    cache_kr = jax.lax.dynamic_update_slice_in_dim(
+        cache_kr, kr_new.astype(cache_kr.dtype), start, axis=1)
+
+    ckv = cache_ckv[:, :kv_len].astype(x.dtype)
+    kr = cache_kr[:, :kv_len].astype(x.dtype)
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["wuk"].astype(x.dtype))
+    v = jnp.einsum("bsr,rhk->bshk", ckv, p["wuv"].astype(x.dtype))
+    h = cfg.n_heads
+    kr_b = kr[:, :, None, :]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_b, kr_b.shape[:2] + (h,) +
+                                  kr_b.shape[3:])], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    vpad = jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                       (0, cfg.qk_dim - cfg.v_head_dim)))
+    out = _flash(q_full, k, vpad, causal=True,
+                 kv_chunk=min(cfg.kv_chunk, kv_len), q_offset=start)
+    out = out[..., : cfg.v_head_dim]
+    out = merge_proj(p, "wo", out)
+    return out, cache_ckv, cache_kr
 
 
 def mla_decode(p, cfg: MLAConfig, x, cache_ckv, cache_kr, cur_len):

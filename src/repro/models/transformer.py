@@ -232,8 +232,26 @@ class TransformerLM:
         metrics = {"xent": loss, "aux": aux}
         return loss + cfg.aux_loss_weight * aux, metrics
 
-    def prefill(self, params, tokens, max_len: int | None = None):
-        """Process a full prompt; returns (last logits [B,V], cache)."""
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """Whether bucketed / chunked prefill is bit-exact for this config.
+
+        MoE routing is sequence-global (expert capacity is a function of
+        the sequence length and top-C token selection competes across all
+        positions), so padded or chunked prefill changes MoE outputs — MoE
+        models keep the exact-length whole-prompt path.
+        """
+        return not self.cfg.is_moe
+
+    def prefill(self, params, tokens, max_len: int | None = None,
+                last_idx=None):
+        """Process a full prompt; returns (last logits [B,V], cache).
+
+        ``last_idx``: optional (traced) index of the row to read logits
+        from — the true last prompt position when ``tokens`` is zero-padded
+        to a length bucket.  Defaults to the final row, matching the
+        unpadded behaviour.
+        """
         cfg = self.cfg
         b, s = tokens.shape
         max_len = max_len or s
@@ -253,7 +271,72 @@ class TransformerLM:
                 k, v = kv
                 pad = ((0, 0), (0, 0), (0, max_len - s), (0, 0), (0, 0))
                 cache[name] = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
-        return logits_last(params["unembed"], h[:, -1]), cache
+        if last_idx is None:
+            h_last = h[:, -1]
+        else:
+            h_last = jax.lax.dynamic_slice_in_dim(
+                h, last_idx, 1, axis=1)[:, 0]
+        return logits_last(params["unembed"], h_last), cache
+
+    def prefill_chunk(self, params, tokens, cache, start, *, kv_len: int,
+                      last_idx=None):
+        """Resume a prompt into an existing KV cache: one prefill chunk.
+
+        tokens: [B, C] — prompt positions [start, start+C); ``cache`` is a
+        full decode-cache pytree (``cache_defs`` layout, leaves
+        [L, B, Smax, ...]) holding earlier chunks at their absolute
+        positions.  ``start`` is traced (one jit variant per (C, kv_len),
+        not per offset); ``kv_len`` is static — attention reads the first
+        ``kv_len`` cache rows, the prompt's pow2 length bucket, so every
+        row is bit-identical to a whole-bucket prefill (see
+        attention.gqa_prefill_chunk).  ``last_idx``: chunk-local index of
+        the final prompt token; when given, returns its logits row
+        (otherwise the chunk's last row).
+
+        Returns (logits [B, V], updated cache).  MoE configs are rejected
+        — see ``supports_chunked_prefill``.
+        """
+        cfg = self.cfg
+        if not self.supports_chunked_prefill:
+            raise NotImplementedError(
+                "chunked prefill is not bit-exact for MoE configs "
+                "(sequence-global router capacity); use whole-prompt "
+                "prefill")
+        h = self._embed_tokens(params, tokens)
+        new_cache = {}
+        for gi, (kind, count) in enumerate(cfg.groups()):
+            name = f"layers_{gi}_{kind}"
+
+            def body(h, xs, kind=kind):
+                lp, lcache = xs
+                hn = rmsnorm(lp["ln1"], h,
+                             zero_centered=cfg.zero_centered_norm)
+                if cfg.attention == "mla":
+                    a, ckv, kr = attn_mod.mla_prefill_chunk(
+                        lp["attn"], cfg.mla_config(), hn, lcache["ckv"],
+                        lcache["kr"], start, kv_len)
+                    upd = {"ckv": ckv, "kr": kr}
+                else:
+                    a, k, v = attn_mod.gqa_prefill_chunk(
+                        lp["attn"], cfg.attn_config(), hn, lcache["k"],
+                        lcache["v"], start, kv_len)
+                    upd = {"k": k, "v": v}
+                h = h + a
+                hn = rmsnorm(lp["ln2"], h,
+                             zero_centered=cfg.zero_centered_norm)
+                f, _ = self._mix(kind, lp["mixer"], hn)
+                return h + f, upd
+
+            h, upd = jax.lax.scan(body, h, (params[name], cache[name]))
+            new_cache[name] = upd
+        h = rmsnorm(params["final_norm"], h,
+                    zero_centered=cfg.zero_centered_norm)
+        if last_idx is None:
+            h_last = h[:, -1]
+        else:
+            h_last = jax.lax.dynamic_slice_in_dim(
+                h, last_idx, 1, axis=1)[:, 0]
+        return logits_last(params["unembed"], h_last), new_cache
 
     def decode_step(self, params, cache, tokens, cur_len):
         """tokens: [B, 1]; cur_len: current cache fill — a scalar int, or a

@@ -194,6 +194,11 @@ class PUDPerfModel:
     def speedup_vs(self, baseline: "PUDPerfModel") -> float:
         return self.macs_per_second / baseline.macs_per_second
 
+    def step_seconds(self, flops_per_token: float, batch: int = 1) -> float:
+        """Modeled wall seconds of one batched decode wave (``batch``
+        tokens emitted per step; no batching gain on a single device)."""
+        return max(1, int(batch)) / self.tokens_per_second(flops_per_token)
+
 
 @dataclasses.dataclass(frozen=True)
 class FleetPerfModel:
@@ -357,6 +362,13 @@ class FleetPerfModel:
         opt = self.n_replicas * self.operand_slots
         return min(opt, max_batch) if max_batch else opt
 
+    def step_seconds(self, flops_per_token: float, batch: int = 1) -> float:
+        """Modeled wall seconds of one batched decode wave: the engine's
+        SLO admission prices a step as ``batch`` tokens at the batched
+        aggregate rate (runtime/engine.py's virtual clock)."""
+        b = max(1, int(batch))
+        return b / self.batched_tokens_per_second(flops_per_token, b)
+
 
 @dataclasses.dataclass(frozen=True)
 class FleetPerfAggregate:
@@ -418,6 +430,14 @@ class FleetPerfAggregate:
                 flops_per_token * self.shard_fraction, batch)
             for m in self._working_shards())
         return self.n_data * lane
+
+    def step_seconds(self, flops_per_token: float, batch: int = 1) -> float:
+        """Modeled seconds of one decode wave on a single lane (the slowest
+        shard bounds it; lanes step independently)."""
+        b = max(1, int(batch))
+        per_lane = self.batched_tokens_per_second(flops_per_token, b) \
+            / self.n_data
+        return b / per_lane
 
     def scaling_efficiency(self, flops_per_token: float,
                            batch: int = 1) -> float:

@@ -386,4 +386,10 @@ class DriftController:
             "min_tokens_per_step": (min(self.tokens_per_step)
                                     if self.tokens_per_step else 0),
         })
+        # Every hot swap drops the engine's prefix cache (a KV prefix
+        # computed under the pre-recalibration pack is stale); surface how
+        # many entries each recovery cost so operators see the trade.
+        eng_rep = self.engine.scheduler_report()
+        if "prefix_cache" in eng_rep:
+            rep["prefix_cache"] = eng_rep["prefix_cache"]
         return rep

@@ -6,16 +6,38 @@ serve loop that decodes one request at a time leaves them idle between
 requests.  This engine turns the single-vector decode path into a
 multi-request system:
 
-  * **Requests** enter a FIFO queue (``submit``); each is one prompt plus a
-    token budget.
+  * **Requests** enter a queue (``submit``); each is one prompt plus a
+    token budget and an optional latency deadline.
   * **Slots** — the engine owns a fixed-size padded batch of ``batch_size``
     decode slots and one KV-cache pytree sized ``[L, batch_size, max_len,
     ...]``; every slot holds at most one in-flight request.
   * **Continuous batching** — admission and eviction happen at *step*
     granularity: before every decode step, free slots are filled from the
-    queue (per-request prefill, cache scattered into the slot's batch
-    lane); after it, finished requests are evicted and their slots freed
+    queue; after it, finished requests are evicted and their slots freed
     immediately — no waiting for the whole batch to drain.
+  * **Bucketed prefill** — prompt lengths are padded to the next power of
+    two before the jitted prefill (zero-pad at the tail; the causal mask
+    keeps pads invisible to real positions and the logits row is read at
+    the true last token), so 20 ragged prompts compile O(log max_len)
+    prefill variants instead of 20.
+  * **Chunked prefill** (``chunk_prefill=N``) — prefill is split into
+    fixed-size chunks that interleave with decode waves: a slot spends
+    several steps in the *prefilling* phase (one chunk per step, resumed
+    into a private KV cache via ``model.prefill_chunk``) before its first
+    token, so one long prompt no longer stalls every decode slot in the
+    batch.  Chunked slots finish bit-identically to whole-request prefill
+    (chunk rows see exactly the same kv rows/mask-tail as the whole pass).
+  * **Prefix cache** (``prefix_cache=True``) — completed prefills are
+    stored in an LRU keyed on (params version, prompt-token hash); a
+    repeated prompt skips prefill entirely (full hit) and a repeated
+    system prompt resumes chunked prefill after the shared prefix
+    (partial hit).  The cache is invalidated on every ``stage_params``
+    hot swap, so a stale prefix after drift recalibration is impossible.
+  * **SLO-aware admission** (``slo=``) — admission is priced by the
+    placement perf model (``FleetPerfModel.step_seconds``): requests
+    admit in earliest-deadline-first order, hopeless ones shed at
+    admission, and expired in-flight ones shed mid-decode; completions
+    carry ``slo_met``.
   * **Per-slot positions** — one jitted decode step serves all slots at
     once with a [B] vector of cache lengths (models/attention.py's
     per-slot decode path), so requests admitted at different times decode
@@ -25,7 +47,10 @@ Bit-exactness: every per-slot computation (per-row activation quantization,
 the integer bit-plane kernel, per-row attention masks, rmsnorm) is
 independent of the other batch lanes, so the tokens a request gets from a
 batched engine are bit-identical to running it alone — enforced across
-backends and layouts by tests/test_engine.py.
+backends, layouts and scheduling modes by tests/test_engine.py and
+tests/test_chunked_prefill.py.  MoE models are the exception (router
+capacity is sequence-global): they keep the legacy exact-length
+whole-prompt prefill (``model.supports_chunked_prefill``).
 
 Batch-size selection: with a calibrated + placed ``PUDSession``, the
 default ``batch_size`` comes from the placement-derived ``FleetPerfModel``
@@ -43,18 +68,38 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .prefix_cache import PrefixCache
 from .watchdog import StepWatchdog
 
 DEFAULT_MAX_BATCH = 32
 
+#: Fallback modeled decode-step wall time when no perf model is available
+#: (SLO virtual clock only; never used for measurement).
+DEFAULT_STEP_MS = 5.0
+
+#: run() raises after this many consecutive steps with queued/active work
+#: but zero progress (a prefill_budget smaller than the chunk size is the
+#: one configuration that can starve forever).
+_STALL_LIMIT = 8
+
+
+def _next_pow2(n: int) -> int:
+    b = 1
+    while b < n:
+        b <<= 1
+    return b
+
 
 @dataclasses.dataclass
 class Request:
-    """One generation request: a prompt and a token budget."""
+    """One generation request: a prompt, a token budget, and optionally a
+    latency deadline (milliseconds from submit, on the engine's modeled
+    clock) for SLO-aware admission."""
 
     request_id: int
     tokens: Any                   # [S] int prompt tokens (array-like)
     max_new_tokens: int
+    deadline_ms: float | None = None
 
     @property
     def prompt_len(self) -> int:
@@ -71,6 +116,38 @@ class Completion:
     admitted_step: int            # engine step index at admission
     finished_step: int            # engine step index after the last token
     logits: np.ndarray | None = None   # [gen, V] when collect_logits
+    slo_met: bool | None = None   # None when the request had no deadline
+    shed: bool = False            # dropped by the SLO policy / shed_request
+
+
+@dataclasses.dataclass
+class SLOConfig:
+    """Admission policy knobs for deadline-carrying requests.
+
+    ``step_time_ms`` overrides the modeled per-step wall time (the virtual
+    clock the policy prices admission with); by default it comes from the
+    session's placement perf model (``step_seconds`` at the engine batch
+    size) and falls back to ``DEFAULT_STEP_MS``.  A deterministic modeled
+    clock keeps the policy reproducible in tests and independent of host
+    jitter.
+    """
+
+    default_deadline_ms: float | None = None  # applied when a request has none
+    step_time_ms: float | None = None         # virtual-clock override
+    shed_on_admit: bool = True                # shed hopeless requests at admit
+    shed_admitted: bool = True                # evict expired in-flight requests
+
+
+@dataclasses.dataclass
+class _PrefillState:
+    """Per-slot chunked-prefill progress (phase == "prefill")."""
+
+    tokens: np.ndarray            # [bucket] prompt zero-padded to its bucket
+    prompt_len: int
+    bucket: int                   # pow2 prefill length (kv rows, static)
+    chunk: int                    # chunk length (divides bucket)
+    pos: int                      # positions < pos are already in the cache
+    cache: Any                    # private batch-1 KV pytree [L,1,max_len,..]
 
 
 @dataclasses.dataclass
@@ -79,6 +156,9 @@ class _Slot:
     admitted_step: int
     generated: list[int]
     logits: list[np.ndarray]
+    phase: str = "decode"         # "prefill" | "decode"
+    pf: _PrefillState | None = None
+    deadline_vms: float | None = None   # virtual-clock deadline
 
 
 class ServingEngine:
@@ -87,13 +167,31 @@ class ServingEngine:
     ``params`` is the serving tree (``PackedModel.params`` for the PUD path
     or a raw bf16 tree); ``session`` is the ``PUDSession`` whose packed
     model is being served — it contributes the default batch size (from
-    placement occupancy) and the DRAM-side rate model for ``perf_report``.
-    The engine itself is execution-agnostic: the PUD-vs-bf16 choice already
-    happened at pack time.
+    placement occupancy) and the DRAM-side rate model for ``perf_report``
+    and SLO pricing.  The engine itself is execution-agnostic: the
+    PUD-vs-bf16 choice already happened at pack time.
 
     The model must expose ``prefill(params, tokens, max_len=)`` and a
     ``decode_step(params, cache, tokens, cur_len)`` that accepts a [B]
     vector ``cur_len`` (transformer-family models; see models/attention).
+    Bucketed and chunked prefill additionally require
+    ``supports_chunked_prefill`` / ``prefill_chunk`` / ``cache_defs``
+    (TransformerLM); models without them keep the legacy exact-length
+    whole-prompt prefill.
+
+    Scheduler extensions (all off by default — the default configuration
+    behaves exactly like the step-granular FIFO engine):
+
+    ``chunk_prefill``     chunk length in tokens (rounded up to a power of
+                          two); prompts prefill one chunk per step,
+                          interleaved with decode waves.
+    ``prefill_budget``    max prefill tokens per step across slots (None =
+                          one chunk per prefilling slot per step).
+    ``prefix_cache``      True (build a default ``PrefixCache``) or a
+                          configured instance; reuses completed prefills.
+    ``slo``               ``SLOConfig``, or a float shorthand for
+                          ``SLOConfig(default_deadline_ms=...)``; enables
+                          EDF admission + shedding.
     """
 
     def __init__(self, model, params, *, max_len: int,
@@ -101,7 +199,11 @@ class ServingEngine:
                  max_batch: int = DEFAULT_MAX_BATCH,
                  collect_logits: bool = False,
                  watchdog: StepWatchdog | None = None,
-                 heartbeat=None):
+                 heartbeat=None,
+                 chunk_prefill: int | None = None,
+                 prefill_budget: int | None = None,
+                 prefix_cache: bool | PrefixCache = False,
+                 slo: SLOConfig | float | None = None):
         if batch_size is None:
             batch_size = self._default_batch_size(session, max_batch)
         if batch_size < 1:
@@ -113,6 +215,32 @@ class ServingEngine:
         self.max_len = int(max_len)
         self.collect_logits = collect_logits
 
+        # Bucketed/chunked prefill require chunk-resumable models; MoE
+        # configs (sequence-global router capacity) and models without the
+        # protocol stay on the legacy exact-length path.
+        self._bucketed = bool(getattr(model, "supports_chunked_prefill",
+                                      False))
+        if chunk_prefill is not None:
+            if not self._bucketed:
+                raise ValueError(
+                    "chunk_prefill requires a model with bit-exact chunked "
+                    "prefill (supports_chunked_prefill); MoE routing is "
+                    "sequence-global")
+            if chunk_prefill < 1:
+                raise ValueError(
+                    f"chunk_prefill must be >= 1, got {chunk_prefill}")
+            chunk_prefill = min(_next_pow2(int(chunk_prefill)), self.max_len)
+        self.chunk_prefill = chunk_prefill
+        self.prefill_budget = prefill_budget
+        if prefix_cache is True:
+            prefix_cache = PrefixCache()
+        elif prefix_cache is False:
+            prefix_cache = None
+        self._prefix_cache = prefix_cache
+        if isinstance(slo, (int, float)):
+            slo = SLOConfig(default_deadline_ms=float(slo))
+        self._slo = slo
+
         self._queue: collections.deque[Request] = collections.deque()
         self._slots: list[_Slot | None] = [None] * self.batch_size
         self._cache = None                       # allocated on first admit
@@ -123,6 +251,28 @@ class ServingEngine:
         self._step_idx = 0
         self._active_slot_steps = 0              # sum of live slots per step
         self._decode_wall_s = 0.0
+
+        # SLO virtual clock: deterministic modeled milliseconds, advanced by
+        # one modeled step time per scheduling step.
+        self._vtime_ms = 0.0
+        self._step_ms = self._resolve_step_ms()
+        self._deadlines: dict[int, float | None] = {}
+        self._slo_stats = {"shed_on_admit": 0, "shed_admitted": 0,
+                           "met": 0, "missed": 0}
+        self._last_step_worked = False
+
+        # Params identity for prefix-cache keys: bumped on every hot swap,
+        # so entries computed under a pre-recalibration pack can never be
+        # served afterwards (the swap also drops them outright).
+        self._params_version = 0
+        self._prefix_invalidated_entries = 0
+
+        # jit trace counters (incremented inside the traced bodies, so they
+        # tick once per compiled variant, not once per call)
+        self._prefill_traces = 0
+        self._chunk_traces = 0
+        self._prefill_chunks = 0                 # chunk calls executed
+        self._prefilled_tokens = 0               # kv rows actually computed
 
         # Step telemetry: every decode step is bracketed by a StepWatchdog
         # (EMA step time, straggler flags, optional hang callback) and
@@ -149,8 +299,14 @@ class ServingEngine:
 
         # The cache argument is donated: the engine owns the single
         # [L, B, max_len, ...] KV pytree and rebinds it after every call,
-        # so XLA updates it in place instead of copying it per token.
+        # so XLA updates it in place instead of copying it per token.  The
+        # chunk step likewise donates the slot's private prefill cache.
         self._prefill = jax.jit(self._prefill_fn, static_argnames=("s",))
+        self._prefill_bucketed = jax.jit(self._prefill_bucketed_fn,
+                                         static_argnames=("sb",))
+        self._chunk = jax.jit(self._chunk_fn,
+                              static_argnames=("c", "kv_len"),
+                              donate_argnums=(1,))
         self._insert = jax.jit(self._insert_fn, donate_argnums=(0,))
         self._step = jax.jit(self._step_fn, donate_argnums=(1,))
 
@@ -165,12 +321,51 @@ class ServingEngine:
                 return max(1, pm.optimal_batch_size(max_batch))
         return max(1, min(4, max_batch))
 
+    def _resolve_step_ms(self) -> float:
+        """Modeled decode-step milliseconds for the SLO virtual clock."""
+        if self._slo is not None and self._slo.step_time_ms is not None:
+            return float(self._slo.step_time_ms)
+        if self.session is not None:
+            pm = (self.session.placement_perf_model()
+                  or self.session.tuned_perf_model())
+            if pm is not None and hasattr(pm, "step_seconds"):
+                try:
+                    fpt = self.session.flops_per_token()
+                except Exception:
+                    fpt = None
+                if fpt:
+                    return pm.step_seconds(fpt, self.batch_size) * 1e3
+        return DEFAULT_STEP_MS
+
+    def _bucket(self, s: int) -> int:
+        """pow2 prompt-length bucket, clamped to the cache length."""
+        return min(self.max_len, _next_pow2(max(1, s)))
+
     # -- jitted inner functions ---------------------------------------------
 
     def _prefill_fn(self, params, tokens, s):
         del s  # static: distinct prompt lengths trace separately
+        self._prefill_traces += 1      # python side effect: trace-time only
         logits, cache = self.model.prefill(params, tokens,
                                            max_len=self.max_len)
+        return logits, cache
+
+    def _prefill_bucketed_fn(self, params, tokens, last, sb):
+        """Whole prefill over a pow2-padded prompt; logits read at the
+        traced true-last-token row, so every length in a bucket shares one
+        compiled variant."""
+        del sb  # static: one trace per bucket (shape already implies it)
+        self._prefill_traces += 1      # python side effect: trace-time only
+        logits, cache = self.model.prefill(params, tokens,
+                                           max_len=self.max_len,
+                                           last_idx=last)
+        return logits, cache
+
+    def _chunk_fn(self, params, cache, tokens, start, last, c, kv_len):
+        del c  # static chunk length (tokens carries the shape)
+        self._chunk_traces += 1        # python side effect: trace-time only
+        logits, cache = self.model.prefill_chunk(
+            params, tokens, cache, start, kv_len=kv_len, last_idx=last)
         return logits, cache
 
     def _insert_fn(self, cache, new_cache, slot):
@@ -198,6 +393,11 @@ class ServingEngine:
                 f"{request.max_new_tokens} exceeds max_len {self.max_len}")
         if request.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        deadline = request.deadline_ms
+        if deadline is None and self._slo is not None:
+            deadline = self._slo.default_deadline_ms
+        self._deadlines[request.request_id] = (
+            None if deadline is None else self._vtime_ms + float(deadline))
         self._queue.append(request)
 
     def submit_all(self, requests) -> None:
@@ -216,6 +416,11 @@ class ServingEngine:
     def free_slots(self) -> list[int]:
         return [i for i, s in enumerate(self._slots) if s is None]
 
+    @property
+    def prefill_trace_count(self) -> int:
+        """Compiled prefill variants (whole buckets + chunk shapes)."""
+        return self._prefill_traces + self._chunk_traces
+
     def _zero_cache_like(self, cache1):
         """Full-batch cache pytree from a batch-1 prefill cache."""
         b = self.batch_size
@@ -223,44 +428,328 @@ class ServingEngine:
             lambda c: jnp.zeros(c.shape[:1] + (b,) + c.shape[2:], c.dtype),
             cache1)
 
+    def _zero_cache1(self):
+        """Fresh batch-1 KV pytree for a chunked-prefill slot."""
+        defs = self.model.cache_defs(1, self.max_len)
+        return jax.tree.map(lambda d: jnp.zeros(d.shape, d.dtype), defs)
+
+    @staticmethod
+    def _trim_cache1(cache1, length: int):
+        """First ``length`` seq rows of a batch-1 cache (leaf axis 2)."""
+        return jax.tree.map(lambda c: c[:, :, :length], cache1)
+
+    def _pad_cache1(self, cache1):
+        """Zero-pad a trimmed batch-1 cache back to ``max_len`` seq rows."""
+        def pad(c):
+            w = [(0, 0)] * c.ndim
+            w[2] = (0, self.max_len - c.shape[2])
+            return jnp.pad(c, w)
+        return jax.tree.map(pad, cache1)
+
+    # -- prefix cache --------------------------------------------------------
+
+    def _candidate_lengths(self, s: int) -> list[int]:
+        """Reusable prefix lengths for a prompt of ``s`` tokens: the whole
+        prompt, then chunk-aligned proper prefixes, longest first (partial
+        reuse requires the chunk path to resume the suffix)."""
+        lengths = [s]
+        if self.chunk_prefill is not None:
+            c = self.chunk_prefill
+            lengths += [k for k in range((s - 1) // c * c, 0, -c)]
+        return lengths
+
+    def prefix_probe(self, tokens) -> int:
+        """Longest cached prefix covering ``tokens`` (0 without a cache).
+
+        Non-mutating — ``FleetServingEngine`` uses it to pick a lane by
+        cache affinity before falling back to round-robin.
+        """
+        if self._prefix_cache is None:
+            return 0
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        return self._prefix_cache.probe(
+            self._params_version, tokens,
+            self._candidate_lengths(int(tokens.shape[0])))
+
+    def _prefix_insert(self, tokens_np: np.ndarray, cache1, logits_row):
+        """Store the completed prefill: the full prompt (with its logits
+        row) plus every chunk-aligned proper prefix, all trimmed to exact
+        token counts so bucket-padding garbage can never be reused."""
+        if self._prefix_cache is None:
+            return
+        s = int(tokens_np.shape[0])
+        v = self._params_version
+        self._prefix_cache.insert(v, tokens_np, self._trim_cache1(cache1, s),
+                                  logits_row)
+        if self.chunk_prefill is not None:
+            for length in range((s - 1) // self.chunk_prefill
+                                * self.chunk_prefill, 0,
+                                -self.chunk_prefill):
+                self._prefix_cache.insert(
+                    v, tokens_np[:length],
+                    self._trim_cache1(cache1, length), None)
+
+    # -- admission -----------------------------------------------------------
+
+    def _estimate_steps(self, req: Request, resume_from: int = 0) -> int:
+        """Modeled scheduling steps to finish ``req`` from admission."""
+        if self.chunk_prefill is not None:
+            remaining = max(0, req.prompt_len - resume_from)
+            prefill_steps = -(-remaining // self.chunk_prefill)
+        else:
+            prefill_steps = 1
+        return prefill_steps + req.max_new_tokens - 1
+
+    def _shed_completion(self, req: Request, slot: int = -1,
+                         generated=None, logits=None) -> None:
+        self._completions.append(Completion(
+            request_id=req.request_id,
+            tokens=list(generated or []),
+            slot=slot,
+            admitted_step=self._step_idx,
+            finished_step=self._step_idx,
+            logits=logits,
+            slo_met=False,
+            shed=True))
+        self._slo_stats["missed"] += 1
+
+    def _admission_order(self) -> list[Request]:
+        """Queue in admission order: FIFO, or earliest-deadline-first with
+        a stable FIFO tie-break when the SLO policy is on (no-deadline
+        requests sort last — they are the ones being *held* while tighter
+        deadlines jump ahead)."""
+        q = list(self._queue)
+        if self._slo is None:
+            return q
+        def key(pair):
+            i, r = pair
+            d = self._deadlines.get(r.request_id)
+            return (d if d is not None else float("inf"), i)
+        return [r for _, r in sorted(enumerate(q), key=key)]
+
     def _admit(self) -> int:
-        """Fill free slots from the queue (FIFO). Returns #admitted."""
+        """Fill free slots from the queue. Returns #admitted.
+
+        Per candidate (in admission order): shed if its deadline is
+        already unreachable under the modeled step time (``SLOConfig.
+        shed_on_admit``), reuse a cached prefix when one covers the
+        prompt, otherwise prefill — whole-bucket immediately, or chunked
+        across the following steps when ``chunk_prefill`` is set.
+        """
+        free = self.free_slots
+        if not free or not self._queue:
+            return 0
+        candidates = self._admission_order()
+        taken: list[Request] = []      # leaving the queue: admitted or shed
         admitted = 0
-        for slot in self.free_slots:
-            if not self._queue:
+        ci = 0
+        for slot in free:
+            while ci < len(candidates):
+                req = candidates[ci]
+                ci += 1
+                taken.append(req)
+                if self._slo is not None and self._slo.shed_on_admit:
+                    deadline = self._deadlines.get(req.request_id)
+                    resume = self._probe_resume_point(req)
+                    eta = (self._vtime_ms
+                           + self._estimate_steps(req, resume) * self._step_ms)
+                    if deadline is not None and eta > deadline:
+                        self._slo_stats["shed_on_admit"] += 1
+                        self._shed_completion(req)
+                        continue
+                self._admit_slot(slot, req)
+                admitted += 1
                 break
-            req = self._queue.popleft()
-            tokens = jnp.asarray(np.asarray(req.tokens), jnp.int32)[None, :]
-            logits, cache1 = self._prefill(self.params, tokens,
-                                           tokens.shape[1])
-            if self._cache is None:
-                self._cache = self._zero_cache_like(cache1)
-            self._cache = self._insert(self._cache, cache1, slot)
-            first = int(jnp.argmax(logits, axis=-1)[0])
-            st = _Slot(request=req, admitted_step=self._step_idx,
-                       generated=[first], logits=[])
-            if self.collect_logits:
-                st.logits.append(np.asarray(logits[0]))
-            self._slots[slot] = st
-            self._tokens[slot, 0] = first
-            self._lens[slot] = req.prompt_len
-            admitted += 1
-            if len(st.generated) >= req.max_new_tokens:
-                # degenerate budget: the prefill token already finishes it
-                self._evict(slot)
+        if taken:
+            # identity-based removal: Request holds array prompts, so the
+            # dataclass __eq__ deque.remove would use is unsafe
+            taken_ids = {id(r) for r in taken}
+            self._queue = collections.deque(
+                r for r in self._queue if id(r) not in taken_ids)
         return admitted
 
-    def _evict(self, slot: int) -> None:
+    def _probe_resume_point(self, req: Request) -> int:
+        if self._prefix_cache is None:
+            return 0
+        return self.prefix_probe(np.asarray(req.tokens, np.int32))
+
+    def _admit_slot(self, slot: int, req: Request) -> None:
+        tokens_np = np.ascontiguousarray(
+            np.asarray(req.tokens, np.int32).reshape(-1))
+        s = req.prompt_len
+        entry = None
+        if self._prefix_cache is not None:
+            entry = self._prefix_cache.lookup(
+                self._params_version, tokens_np, self._candidate_lengths(s))
+
+        if entry is not None and entry.n_tokens == s and \
+                entry.logits is not None:
+            # full hit: the stored cache + logits replace prefill outright
+            cache1 = self._pad_cache1(entry.cache)
+            self._start_decode(slot, req, cache1,
+                               np.asarray(entry.logits).reshape(-1))
+            return
+
+        if self.chunk_prefill is not None:
+            # chunked path: enter the prefilling phase; a partial hit seeds
+            # the private cache and resumes after the shared prefix
+            sb = self._bucket(s)
+            chunk = min(self.chunk_prefill, sb)
+            padded = np.zeros((sb,), np.int32)
+            padded[:s] = tokens_np
+            resume = 0
+            cache1 = self._zero_cache1()
+            if entry is not None and entry.n_tokens < s:
+                resume = entry.n_tokens
+                cache1 = self._pad_cache1(entry.cache)
+            st = _Slot(request=req, admitted_step=self._step_idx,
+                       generated=[], logits=[], phase="prefill",
+                       pf=_PrefillState(tokens=padded, prompt_len=s,
+                                        bucket=sb, chunk=chunk, pos=resume,
+                                        cache=cache1),
+                       deadline_vms=self._deadlines.get(req.request_id))
+            self._slots[slot] = st
+            return
+
+        # whole prefill: pow2-bucketed for chunk-capable models, legacy
+        # exact-length otherwise (MoE / non-transformer protocols)
+        if self._bucketed:
+            sb = self._bucket(s)
+            padded = np.zeros((1, sb), np.int32)
+            padded[0, :s] = tokens_np
+            logits, cache1 = self._prefill_bucketed(
+                self.params, jnp.asarray(padded),
+                jnp.asarray(s - 1, jnp.int32), sb)
+            self._prefilled_tokens += sb
+        else:
+            tokens = jnp.asarray(tokens_np)[None, :]
+            logits, cache1 = self._prefill(self.params, tokens,
+                                           tokens.shape[1])
+            self._prefilled_tokens += s
+        logits_row = np.asarray(logits[0])
+        self._prefix_insert(tokens_np, cache1, logits_row)
+        self._start_decode(slot, req, cache1, logits_row)
+
+    def _start_decode(self, slot: int, req: Request, cache1,
+                      logits_row: np.ndarray) -> None:
+        """Install a completed prefill into a batch lane and begin decode."""
+        if self._cache is None:
+            self._cache = self._zero_cache_like(cache1)
+        self._cache = self._insert(self._cache, cache1, slot)
+        first = int(np.argmax(logits_row))
         st = self._slots[slot]
+        if st is None:                 # whole-prefill / full-hit admission
+            st = _Slot(request=req, admitted_step=self._step_idx,
+                       generated=[], logits=[],
+                       deadline_vms=self._deadlines.get(req.request_id))
+            self._slots[slot] = st
+        st.phase = "decode"
+        st.pf = None
+        st.generated.append(first)
+        if self.collect_logits:
+            st.logits.append(np.asarray(logits_row))
+        self._tokens[slot, 0] = first
+        self._lens[slot] = req.prompt_len
+        if len(st.generated) >= req.max_new_tokens:
+            # degenerate budget: the prefill token already finishes it
+            self._evict(slot)
+
+    # -- chunked prefill -----------------------------------------------------
+
+    def _advance_chunks(self) -> int:
+        """Run at most one prefill chunk per prefilling slot, bounded by
+        ``prefill_budget`` tokens per step. Returns tokens prefilled."""
+        if self.chunk_prefill is None:
+            return 0
+        budget = self.prefill_budget
+        progressed = 0
+        for slot, st in enumerate(self._slots):
+            if st is None or st.phase != "prefill":
+                continue
+            pf = st.pf
+            c = pf.chunk
+            if budget is not None and budget - progressed < c:
+                continue               # zero-budget chunk: hold, no progress
+            start = pf.pos
+            chunk_tokens = jnp.asarray(
+                pf.tokens[start:start + c][None, :])
+            is_last = start + c >= pf.prompt_len
+            last_local = (pf.prompt_len - 1 - start) if is_last else (c - 1)
+            logits, pf.cache = self._chunk(
+                self.params, pf.cache, chunk_tokens,
+                jnp.asarray(start, jnp.int32),
+                jnp.asarray(last_local, jnp.int32), c, pf.bucket)
+            pf.pos = start + c
+            progressed += c
+            self._prefill_chunks += 1
+            self._prefilled_tokens += c
+            if is_last:
+                tokens_np = pf.tokens[:pf.prompt_len]
+                logits_row = np.asarray(logits[0])
+                self._prefix_insert(tokens_np, pf.cache, logits_row)
+                self._start_decode(slot, st.request, pf.cache, logits_row)
+        return progressed
+
+    # -- eviction / shedding -------------------------------------------------
+
+    def _evict(self, slot: int, shed: bool = False) -> None:
+        st = self._slots[slot]
+        deadline = st.deadline_vms
+        slo_met: bool | None = None
+        if shed:
+            slo_met = False
+            self._slo_stats["missed"] += 1
+        elif deadline is not None:
+            slo_met = self._vtime_ms <= deadline
+            self._slo_stats["met" if slo_met else "missed"] += 1
         self._completions.append(Completion(
             request_id=st.request.request_id,
             tokens=list(st.generated),
             slot=slot,
             admitted_step=st.admitted_step,
             finished_step=self._step_idx,
-            logits=(np.stack(st.logits) if st.logits else None)))
+            logits=(np.stack(st.logits) if st.logits else None),
+            slo_met=slo_met,
+            shed=shed))
         self._slots[slot] = None
         self._lens[slot] = 0
+
+    def _shed_expired(self) -> int:
+        """Evict in-flight requests whose deadline has already passed on
+        the virtual clock (``SLOConfig.shed_admitted``); a mid-prefill
+        shed simply discards the slot's private chunk cache."""
+        if self._slo is None or not self._slo.shed_admitted:
+            return 0
+        shed = 0
+        for slot, st in enumerate(self._slots):
+            if st is None or st.deadline_vms is None:
+                continue
+            if self._vtime_ms > st.deadline_vms:
+                self._slo_stats["shed_admitted"] += 1
+                self._evict(slot, shed=True)
+                shed += 1
+        return shed
+
+    def shed_request(self, request_id: int) -> bool:
+        """Drop a request wherever it is — queued, prefilling, or decoding.
+
+        Returns True when found.  An in-flight request completes with its
+        partial tokens and ``shed=True``; a prefilling slot's private
+        cache is discarded (nothing was inserted into the batch yet).
+        """
+        for req in self._queue:
+            if req.request_id == request_id:
+                self._queue = collections.deque(
+                    r for r in self._queue if r is not req)
+                self._shed_completion(req)
+                return True
+        for slot, st in enumerate(self._slots):
+            if st is not None and st.request.request_id == request_id:
+                self._evict(slot, shed=True)
+                return True
+        return False
+
+    # -- params hot swap -----------------------------------------------------
 
     def stage_params(self, params) -> None:
         """Stage a replacement serving tree for a between-steps hot swap.
@@ -269,7 +758,9 @@ class ServingEngine:
         the top of the next ``step()``, before admission, so every request
         (in-flight and newly admitted) sees a consistent pack and no step
         is ever skipped.  Staging again before the swap replaces the
-        previously staged tree (last writer wins).
+        previously staged tree (last writer wins).  The swap bumps the
+        params version and drops every prefix-cache entry — a KV prefix
+        computed under the old pack is stale the moment the new one lands.
         """
         self._staged_params = params
 
@@ -277,42 +768,61 @@ class ServingEngine:
     def swap_pending(self) -> bool:
         return self._staged_params is not None
 
+    # -- step loop -----------------------------------------------------------
+
     def step(self) -> list[Completion]:
-        """Admit, run one batched decode step, evict finished requests.
+        """One scheduling step: swap staged params, shed expired requests,
+        admit, advance prefill chunks, run one batched decode wave over
+        decoding slots, evict finished requests.
 
         Returns the requests that finished on this step.
         """
+        done_before = len(self._completions)
         if self._staged_params is not None:
             self.params = self._staged_params
             self._staged_params = None
             self._swap_steps.append(self._step_idx)
+            self._params_version += 1
+            if self._prefix_cache is not None:
+                self._prefix_invalidated_entries += \
+                    self._prefix_cache.invalidate()
+        self._shed_expired()
         self._admit()
-        live = [i for i, s in enumerate(self._slots) if s is not None]
-        if not live:
-            return []
-        self._active_slot_steps += len(live)
-        self.watchdog.start_step(self._step_idx)
-        t0 = time.time()
-        nxt, logits, self._cache = self._step(
-            self.params, self._cache, jnp.asarray(self._tokens),
-            jnp.asarray(self._lens))
-        nxt = np.asarray(nxt)
-        self._decode_wall_s += time.time() - t0
-        self.watchdog.end_step()
-        self._step_idx += 1
-        done_before = len(self._completions)
-        logits_np = np.asarray(logits) if self.collect_logits else None
-        for i in live:
-            st = self._slots[i]
-            st.generated.append(int(nxt[i, 0]))
-            if self.collect_logits:
-                st.logits.append(logits_np[i])
-            self._tokens[i, 0] = nxt[i, 0]
-            self._lens[i] += 1
-            if len(st.generated) >= st.request.max_new_tokens:
-                self._evict(i)
+        chunked = self._advance_chunks()
+        live = [i for i, s in enumerate(self._slots)
+                if s is not None and s.phase == "decode"]
+        if live:
+            self._active_slot_steps += len(live)
+            self.watchdog.start_step(self._step_idx)
+            t0 = time.time()
+            nxt, logits, self._cache = self._step(
+                self.params, self._cache, jnp.asarray(self._tokens),
+                jnp.asarray(self._lens))
+            nxt = np.asarray(nxt)
+            self._decode_wall_s += time.time() - t0
+            self.watchdog.end_step()
+            self._step_idx += 1
+            logits_np = np.asarray(logits) if self.collect_logits else None
+            for i in live:
+                st = self._slots[i]
+                st.generated.append(int(nxt[i, 0]))
+                if self.collect_logits:
+                    st.logits.append(logits_np[i])
+                self._tokens[i, 0] = nxt[i, 0]
+                self._lens[i] += 1
+        worked = bool(live) or chunked > 0 or \
+            len(self._completions) > done_before
+        if worked:
+            self._vtime_ms += self._step_ms
+        if live:
+            for i in live:
+                st = self._slots[i]
+                if st is not None and \
+                        len(st.generated) >= st.request.max_new_tokens:
+                    self._evict(i)
+        self._last_step_worked = worked
         # beat after evictions so a supervisor reads end-of-step state
-        if self.heartbeat is not None:
+        if worked and self.heartbeat is not None:
             self.heartbeat.beat(self._step_idx, active=self.n_active,
                                 completed=len(self._completions))
         return self._completions[done_before:]
@@ -320,23 +830,35 @@ class ServingEngine:
     def run(self, requests=None) -> list[Completion]:
         """Drain the queue (plus ``requests``, if given) to completion.
 
-        Returns all completions sorted by request_id.
+        Returns all completions sorted by request_id.  Raises when the
+        scheduler stalls (queued/active work but no progress for
+        ``_STALL_LIMIT`` consecutive steps — e.g. a ``prefill_budget``
+        smaller than the chunk size).
         """
         if requests is not None:
             self.submit_all(requests)
+        stalls = 0
         while self._queue or self.n_active:
             self.step()
+            stalls = 0 if self._last_step_worked else stalls + 1
+            if stalls >= _STALL_LIMIT:
+                raise RuntimeError(
+                    f"scheduler stalled: {self.n_pending} pending / "
+                    f"{self.n_active} active but no progress for "
+                    f"{stalls} steps (prefill_budget "
+                    f"{self.prefill_budget} < chunk {self.chunk_prefill}?)")
         return sorted(self._completions, key=lambda c: c.request_id)
 
     # -- reporting -----------------------------------------------------------
 
     def scheduler_report(self) -> dict:
-        """Scheduler counters: slot occupancy, steps, measured decode rate."""
+        """Scheduler counters: slot occupancy, steps, measured decode rate,
+        prefill trace/chunk counters, prefix-cache and SLO telemetry."""
         steps = self._step_idx
         gen_tokens = sum(len(c.tokens) for c in self._completions)
         occ = (self._active_slot_steps / (steps * self.batch_size)
                if steps else 0.0)
-        return {
+        rep = {
             "batch_size": self.batch_size,
             "steps": steps,
             "completed": len(self._completions),
@@ -352,7 +874,18 @@ class ServingEngine:
             "hangs": self._hangs,
             "swaps": len(self._swap_steps),
             "swap_steps": list(self._swap_steps),
+            "prefill_traces": self._prefill_traces,
+            "chunk_traces": self._chunk_traces,
+            "prefill_chunks": self._prefill_chunks,
+            "prefilled_tokens": self._prefilled_tokens,
         }
+        if self._prefix_cache is not None:
+            pc = self._prefix_cache.stats()
+            pc["invalidated_entries"] = self._prefix_invalidated_entries
+            rep["prefix_cache"] = pc
+        if self._slo is not None:
+            rep["slo"] = dict(self._slo_stats, step_ms=self._step_ms)
+        return rep
 
     def perf_report(self, flops_per_token: float | None = None) -> dict:
         """Scheduler counters + the session's batch-aware DRAM-side rates."""
@@ -367,14 +900,21 @@ class FleetServingEngine:
     """Data-parallel fleet of ``ServingEngine``s over per-lane sharded packs.
 
     One inner engine per "data"-axis lane of a ``PUDFleetSession``;
-    requests partition round-robin at submit time and every lane keeps the
-    single-engine semantics — continuous batching, per-request bit-exact
-    decode — so a request's tokens (and logits) are identical to running
-    it through a single-device ``ServingEngine``.  The model-parallel
-    dimension lives *inside* each lane's params: every packed projection
-    is a ``ShardedPackedTensor`` executing via ``shard_map`` over the
-    mesh's "model" axis (``kernels.ops.pud_matmul_sharded``), so a lane's
-    decode step is one jitted program spanning its model shards.
+    requests partition by prefix-cache affinity (the lane whose LRU holds
+    the longest matching prefix wins — repeated system prompts keep
+    landing where their KV already lives) with round-robin as the
+    fallback, and every lane keeps the single-engine semantics —
+    continuous batching, per-request bit-exact decode — so a request's
+    tokens (and logits) are identical to running it through a
+    single-device ``ServingEngine``.  Scheduler extensions
+    (``chunk_prefill`` / ``prefix_cache`` / ``slo``) pass through to every
+    lane; ``prefix_cache=True`` builds one *per-lane* cache (entries hold
+    lane-sharded KV pytrees, so they must not cross lanes).  The
+    model-parallel dimension lives *inside* each lane's params: every
+    packed projection is a ``ShardedPackedTensor`` executing via
+    ``shard_map`` over the mesh's "model" axis
+    (``kernels.ops.pud_matmul_sharded``), so a lane's decode step is one
+    jitted program spanning its model shards.
     """
 
     def __init__(self, model, lane_params, *, max_len: int,
@@ -387,6 +927,11 @@ class FleetServingEngine:
             sessions = [row[0] for row in fleet.sessions]
         if sessions is None:
             sessions = [None] * len(lane_params)
+        if isinstance(kw.get("prefix_cache"), PrefixCache) and \
+                len(lane_params) > 1:
+            raise ValueError(
+                "a shared PrefixCache cannot span lanes (entries hold "
+                "lane-local KV); pass prefix_cache=True for per-lane caches")
         self.fleet = fleet
         self.lanes = [
             ServingEngine(model, p, session=s, max_len=max_len,
@@ -411,11 +956,19 @@ class FleetServingEngine:
         return sum(lane.n_active for lane in self.lanes)
 
     def submit(self, request: Request) -> int:
-        """Round-robin the request onto a lane; returns the lane index."""
-        lane = self._next_lane
-        self.lanes[lane].submit(request)
-        self._next_lane = (lane + 1) % len(self.lanes)
-        return lane
+        """Place the request on the lane with the longest cached prefix of
+        its prompt (cache affinity), else round-robin; returns the lane
+        index."""
+        best, best_len = None, 0
+        for i, lane in enumerate(self.lanes):
+            n = lane.prefix_probe(np.asarray(request.tokens, np.int32))
+            if n > best_len:
+                best, best_len = i, n
+        if best is None:
+            best = self._next_lane
+            self._next_lane = (best + 1) % len(self.lanes)
+        self.lanes[best].submit(request)
+        return best
 
     def submit_all(self, requests) -> None:
         for r in requests:
@@ -447,7 +1000,7 @@ class FleetServingEngine:
     def scheduler_report(self) -> dict:
         """Fleet-merged counters plus the per-lane reports."""
         reps = [lane.scheduler_report() for lane in self.lanes]
-        return {
+        rep = {
             "n_lanes": len(self.lanes),
             "batch_size": self.batch_size,
             "steps": max(r["steps"] for r in reps),
@@ -459,6 +1012,22 @@ class FleetServingEngine:
                                / len(reps)),
             "lanes": reps,
         }
+        pcs = [r["prefix_cache"] for r in reps if "prefix_cache" in r]
+        if pcs:
+            hits = sum(p["hits"] for p in pcs)
+            misses = sum(p["misses"] for p in pcs)
+            rep["prefix_cache"] = {
+                "entries": sum(p["entries"] for p in pcs),
+                "bytes": sum(p["bytes"] for p in pcs),
+                "hits": hits,
+                "misses": misses,
+                "hit_rate": (hits / (hits + misses)
+                             if hits + misses else 0.0),
+                "inserts": sum(p["inserts"] for p in pcs),
+                "evictions": sum(p["evictions"] for p in pcs),
+                "invalidations": sum(p["invalidations"] for p in pcs),
+            }
+        return rep
 
     def perf_report(self, flops_per_token: float | None = None) -> dict:
         """Merged scheduler counters + the fleet's aggregate rate model."""

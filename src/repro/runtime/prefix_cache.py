@@ -1,0 +1,213 @@
+"""PrefixCache: LRU reuse of prefill KV state across requests.
+
+Serving traffic is heavy on repeated prefixes — the same system prompt
+leads hundreds of requests — and prefill is the expensive phase (O(S)
+full-width matmuls per layer vs O(1) for a decode step).  This cache lets
+the engine skip that work: after a prompt's prefill completes, its KV
+pytree (trimmed to the *exact* token count, so no bucket-padding garbage
+can ever leak into a reader) is stored under
+
+    (params_version, sha1(prompt_tokens), n_tokens)
+
+and later requests reuse it two ways:
+
+  * **full hit** — an entry covering the entire new prompt: the engine
+    scatters the stored cache into a batch lane and starts decoding with
+    zero prefill work.
+  * **partial hit** — an entry covering a chunk-aligned proper prefix
+    (the shared system prompt): the engine seeds the slot's prefill state
+    from it and chunked prefill resumes at ``start=len(entry)``, paying
+    only for the distinct suffix.
+
+Correctness guards:
+
+  * ``params_version`` is bumped by the engine on every ``stage_params``
+    hot swap, and ``invalidate()`` drops all entries — a stale prefix
+    computed under a pre-drift-recalibration pack is unreachable.
+  * every lookup re-verifies the stored token array against the query
+    prefix (hash collisions and longer-cached-than-query prompts both
+    fail closed to a miss).
+  * entries below ``min_tokens`` are not stored — reusing a 2-token
+    prefix costs more in bookkeeping than the prefill it saves.
+
+Bit-exactness: a stored entry holds exactly the rows a whole-bucket
+prefill produced for those positions; resuming from them goes through the
+same chunked-prefill path as a cold prompt, so tokens and logits are
+bit-identical to a cache-miss run (tests/test_chunked_prefill.py).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+from typing import Any
+
+import jax
+import numpy as np
+
+#: Prefixes shorter than this are never cached (bookkeeping > savings).
+DEFAULT_MIN_TOKENS = 4
+
+#: Default entry capacity; smoke-scale KV pytrees are KBs each.
+DEFAULT_CAPACITY = 32
+
+
+def _token_key(tokens: np.ndarray) -> str:
+    return hashlib.sha1(np.ascontiguousarray(tokens, np.int32).tobytes()
+                        ).hexdigest()
+
+
+def _nbytes(cache: Any) -> int:
+    return sum(int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(cache))
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    """One cached prefix: the KV pytree plus reuse metadata.
+
+    ``cache`` leaves are [L, 1, n_tokens, ...] — trimmed to the exact
+    prefix length.  ``logits`` is the last-position logits row ([V]) and
+    is only present for full-prompt entries (a partial prefix's logits
+    are useless: the resumed chunk recomputes the real last position).
+    """
+
+    tokens: np.ndarray            # [n_tokens] int32, for exact verification
+    cache: Any                    # KV pytree, seq axis trimmed to n_tokens
+    logits: np.ndarray | None
+    nbytes: int
+
+    @property
+    def n_tokens(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+class PrefixCache:
+    """LRU over ``PrefixEntry``s keyed on (params version, token hash, len).
+
+    Not thread-safe; the engine calls it from its scheduling loop only.
+    """
+
+    def __init__(self, capacity: int = DEFAULT_CAPACITY,
+                 min_tokens: int = DEFAULT_MIN_TOKENS,
+                 max_bytes: int | None = None):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self.min_tokens = int(min_tokens)
+        self.max_bytes = max_bytes
+        self._entries: collections.OrderedDict[tuple, PrefixEntry] = \
+            collections.OrderedDict()
+        self._bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.inserts = 0
+        self.evictions = 0
+        self.invalidations = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # -- lookup --------------------------------------------------------------
+
+    def _get(self, version: int, tokens: np.ndarray,
+             length: int) -> PrefixEntry | None:
+        """Verified fetch of the entry covering ``tokens[:length]``."""
+        if length < self.min_tokens or length > tokens.shape[0]:
+            return None
+        prefix = np.ascontiguousarray(tokens[:length], np.int32)
+        key = (version, _token_key(prefix), length)
+        entry = self._entries.get(key)
+        if entry is None:
+            return None
+        # fail closed on hash collision / stale shape
+        if entry.n_tokens != length or \
+                not np.array_equal(entry.tokens, prefix):
+            return None
+        return entry
+
+    def lookup(self, version: int, tokens, lengths) -> PrefixEntry | None:
+        """Longest verified entry covering a prefix of ``tokens``.
+
+        ``lengths``: candidate prefix lengths to try, best first (the
+        engine passes [full prompt, then chunk-aligned lengths
+        descending]).  Counts one hit or one miss per call and refreshes
+        LRU recency on hit.
+        """
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        for length in lengths:
+            entry = self._get(version, tokens, int(length))
+            if entry is not None:
+                key = (version, _token_key(entry.tokens), entry.n_tokens)
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return entry
+        self.misses += 1
+        return None
+
+    def probe(self, version: int, tokens, lengths) -> int:
+        """Longest covered prefix length without touching LRU state or
+        hit/miss counters — the fleet's lane-affinity check."""
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        for length in lengths:
+            if self._get(version, tokens, int(length)) is not None:
+                return int(length)
+        return 0
+
+    # -- insert / evict ------------------------------------------------------
+
+    def insert(self, version: int, tokens, cache,
+               logits: np.ndarray | None = None) -> bool:
+        """Store a prefix; returns False when below ``min_tokens`` or
+        already present (first writer wins — the values are identical by
+        bit-exactness, so refreshing buys nothing)."""
+        tokens = np.ascontiguousarray(
+            np.asarray(tokens, np.int32).reshape(-1))
+        n = int(tokens.shape[0])
+        if n < self.min_tokens:
+            return False
+        key = (version, _token_key(tokens), n)
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            return False
+        entry = PrefixEntry(
+            tokens=tokens, cache=cache,
+            logits=None if logits is None else np.asarray(logits),
+            nbytes=_nbytes(cache))
+        self._entries[key] = entry
+        self._bytes += entry.nbytes
+        self.inserts += 1
+        self._shrink()
+        return True
+
+    def _shrink(self) -> None:
+        while len(self._entries) > self.capacity or (
+                self.max_bytes is not None and self._bytes > self.max_bytes
+                and len(self._entries) > 1):
+            _, old = self._entries.popitem(last=False)
+            self._bytes -= old.nbytes
+            self.evictions += 1
+
+    def invalidate(self) -> int:
+        """Drop every entry (params hot swap); returns #dropped."""
+        n = len(self._entries)
+        self._entries.clear()
+        self._bytes = 0
+        if n:
+            self.invalidations += 1
+        return n
+
+    # -- telemetry -----------------------------------------------------------
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {
+            "entries": len(self._entries),
+            "bytes": self._bytes,
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": (self.hits / total) if total else 0.0,
+            "inserts": self.inserts,
+            "evictions": self.evictions,
+            "invalidations": self.invalidations,
+        }

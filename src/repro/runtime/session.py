@@ -646,15 +646,27 @@ class PUDSession:
         return 1
 
     def serving_engine(self, model, *, max_len: int,
-                       batch_size: int | None = None, **kw):
+                       batch_size: int | None = None,
+                       chunk_prefill: int | None = None,
+                       prefix_cache=False, slo=None, **kw):
         """A continuous-batching ``ServingEngine`` over this session's
         packed model (``pack`` must have run).  ``batch_size`` defaults to
-        ``optimal_batch_size()``."""
+        ``optimal_batch_size()``.
+
+        Scheduler extensions (see ``runtime/engine.py``): ``chunk_prefill``
+        interleaves fixed-size prefill chunks with decode waves,
+        ``prefix_cache`` reuses completed prefills across requests
+        (invalidated on every drift hot swap), and ``slo`` enables
+        deadline-aware admission priced by this session's placement perf
+        model (``step_seconds``).
+        """
         from repro.runtime.engine import ServingEngine
         if self._packed is None:
             raise RuntimeError("no packed model: call session.pack() first")
         return ServingEngine(model, self._packed.params, session=self,
-                             max_len=max_len, batch_size=batch_size, **kw)
+                             max_len=max_len, batch_size=batch_size,
+                             chunk_prefill=chunk_prefill,
+                             prefix_cache=prefix_cache, slo=slo, **kw)
 
     def perf_report(self, flops_per_token: float | None = None,
                     batch_size: int | None = None) -> dict:
@@ -1006,15 +1018,23 @@ class PUDFleetSession:
     # -- execution + reporting -----------------------------------------------
 
     def serving_engine(self, model, *, max_len: int,
-                       batch_size: int | None = None, **kw):
+                       batch_size: int | None = None,
+                       chunk_prefill: int | None = None,
+                       prefix_cache=False, slo=None, **kw):
         """A ``FleetServingEngine``: one continuous-batching lane per
-        "data"-axis row, tensor parallelism inside each lane's packs."""
+        "data"-axis row, tensor parallelism inside each lane's packs.
+
+        ``chunk_prefill`` / ``prefix_cache`` / ``slo`` pass through to
+        every lane (``prefix_cache=True`` builds one per-lane LRU, and
+        submit routes by cache affinity before round-robin)."""
         from repro.runtime.engine import FleetServingEngine
         if self._packs is None:
             raise RuntimeError("no packed fleet: call pack() first")
         return FleetServingEngine(
             model, [pm.params for pm in self._packs], fleet=self,
-            max_len=max_len, batch_size=batch_size, **kw)
+            max_len=max_len, batch_size=batch_size,
+            chunk_prefill=chunk_prefill, prefix_cache=prefix_cache,
+            slo=slo, **kw)
 
     def fleet_perf_model(self) -> FleetPerfAggregate:
         """Aggregate Eq.-1 rate model: the slowest device of each model

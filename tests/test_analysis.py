@@ -78,6 +78,14 @@ FIXTURES = [
         from jax.sharding import Mesh
         mesh = Mesh(devices, ("data", "model"))
         """),
+    ("no-prefill-on-decode-wave", "src/repro/runtime/engine.py", """
+        def _advance_chunks(self):
+            logits, cache = self._prefill_fn(params, tokens, last)
+        """),
+    ("no-prefill-on-decode-wave", "src/repro/runtime/engine.py", """
+        def _chunk_step(self, slot):
+            out = model.prefill(params, tokens)
+        """),
 ]
 
 
@@ -118,6 +126,17 @@ def test_rules_are_path_scoped():
         # mesh construction is legal only in the launch/mesh.py factories
         ("src/repro/launch/mesh.py",
          'import jax\nmesh = jax.make_mesh((2, 2), ("data", "model"))'),
+        # whole-request prefill is fine from admission (not a chunk helper)
+        ("src/repro/runtime/engine.py",
+         "def _admit_slot(self, req):\n"
+         "    out = self._prefill_bucketed(p, t, last, sb)"),
+        # chunk helpers advance via prefill_chunk — that is the point
+        ("src/repro/runtime/engine.py",
+         "def _advance_chunks(self):\n"
+         "    out = model.prefill_chunk(p, t, cache, start)"),
+        # whole prefill named 'prefill' off the decode path is not our rule
+        ("src/repro/launch/serve.py",
+         "def warm_chunks(engine):\n    engine.model.prefill(p, t)"),
         # importing Mesh for a type annotation is fine — only calls count
         (LIB, "from jax.sharding import Mesh\ndef f(m: Mesh): return m"),
     ]

@@ -1,0 +1,430 @@
+"""Chunked prefill + prefix cache + SLO admission: the scheduler
+extensions must be invisible in the outputs — tokens AND logits
+bit-identical to the whole-request engine — across backends and layouts,
+with bounded compile counts, correct prefix reuse/invalidation, and
+deterministic SLO shedding."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (CalibrationConfig, FleetConfig, PrefixCache,
+                       PUDGemvConfig, PUDSession, Request, ServingEngine,
+                       SLOConfig, backend_names)
+from repro.models.transformer import TransformerLM
+from repro.models.params import init_params
+from repro.configs import get
+from repro.runtime.engine import FleetServingEngine
+
+MAX_LEN = 32
+GEN = 4
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    spec = get("qwen3-1.7b")
+    model = spec.make_smoke()
+    params = init_params(model.param_defs(), jax.random.key(0))
+    return model, params
+
+
+def _prompts(model, lens, key=1):
+    k = jax.random.key(key)
+    return [np.asarray(jax.random.randint(
+        jax.random.fold_in(k, i), (s,), 0, model.cfg.vocab, jnp.int32))
+        for i, s in enumerate(lens)]
+
+
+def _requests(prompts, gen=GEN):
+    return [Request(request_id=i, tokens=p, max_new_tokens=gen)
+            for i, p in enumerate(prompts)]
+
+
+def _assert_same(comps_a, comps_b):
+    assert [c.request_id for c in comps_a] == [c.request_id for c in comps_b]
+    for a, b in zip(comps_a, comps_b):
+        assert a.tokens == b.tokens, a.request_id
+        if a.logits is not None and b.logits is not None:
+            np.testing.assert_array_equal(a.logits, b.logits,
+                                          err_msg=str(a.request_id))
+
+
+def _session(backend="pallas", calibrate=True):
+    s = PUDSession.open(
+        "qwen3-1.7b",
+        grid=FleetConfig(n_channels=1, n_banks=1, n_subarrays=8,
+                         n_cols=1024),
+        calib=CalibrationConfig(n_iterations=4, n_samples=64),
+        key=7, n_trials_ecr=128, backend=backend)
+    if calibrate:
+        s.calibrate()
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Bit-exactness: chunked + cached == whole-request, raw / placed / logical
+# ---------------------------------------------------------------------------
+
+def test_chunked_cached_equals_whole_raw(smoke):
+    """Ragged prompts through the chunked+prefix engine produce the same
+    tokens and logits as the whole-request engine, bit for bit."""
+    model, params = smoke
+    prompts = _prompts(model, [5, 8, 11, 4, 16, 9, 3])
+    whole = ServingEngine(model, params, max_len=MAX_LEN, batch_size=3,
+                          collect_logits=True)
+    chunked = ServingEngine(model, params, max_len=MAX_LEN, batch_size=3,
+                            collect_logits=True, chunk_prefill=4,
+                            prefix_cache=True)
+    _assert_same(whole.run(_requests(prompts)),
+                 chunked.run(_requests(prompts)))
+    rep = chunked.scheduler_report()
+    assert rep["prefill_chunks"] > 0          # the chunk path actually ran
+    assert rep["prefix_cache"]["inserts"] > 0
+
+
+@pytest.mark.parametrize("backend", sorted(backend_names()))
+def test_chunked_cached_equals_whole_placed(smoke, backend):
+    """Placed physical layout, every backend: the scheduling mode must not
+    change a single bit of the PUD decode."""
+    model, params = smoke
+    session = _session(backend=backend)
+    packed = session.pack(params, PUDGemvConfig(weight_bits=4),
+                          name=f"chunk-{backend}")
+    assert packed.placed
+    prompts = _prompts(model, [4, 9, 6])
+    whole = ServingEngine(model, packed.params, session=session,
+                          max_len=MAX_LEN, batch_size=2, collect_logits=True)
+    chunked = ServingEngine(model, packed.params, session=session,
+                            max_len=MAX_LEN, batch_size=2,
+                            collect_logits=True, chunk_prefill=4,
+                            prefix_cache=True)
+    _assert_same(whole.run(_requests(prompts)),
+                 chunked.run(_requests(prompts)))
+
+
+def test_chunked_cached_equals_whole_logical(smoke):
+    model, params = smoke
+    session = _session(calibrate=False)
+    packed = session.pack(params, PUDGemvConfig(weight_bits=4))
+    assert not packed.placed
+    prompts = _prompts(model, [7, 12, 5])
+    whole = ServingEngine(model, packed.params, session=session,
+                          max_len=MAX_LEN, batch_size=2)
+    chunked = ServingEngine(model, packed.params, session=session,
+                            max_len=MAX_LEN, batch_size=2, chunk_prefill=8,
+                            prefix_cache=True)
+    _assert_same(whole.run(_requests(prompts)),
+                 chunked.run(_requests(prompts)))
+
+
+def test_chunked_mla_dense(smoke):
+    """The MLA chunk path (latent cache re-expansion) is bit-exact too.
+    No registry arch is dense MLA, so strip the MoE off the deepseek
+    smoke config (MoE itself is sequence-global and stays un-chunked)."""
+    cfg = dataclasses.replace(get("deepseek-v2-lite-16b").make_smoke().cfg,
+                              n_experts=0)
+    model = TransformerLM(cfg)
+    assert model.supports_chunked_prefill
+    params = init_params(model.param_defs(), jax.random.key(2))
+    prompts = _prompts(model, [5, 11, 8], key=3)
+    whole = ServingEngine(model, params, max_len=MAX_LEN, batch_size=2,
+                          collect_logits=True)
+    chunked = ServingEngine(model, params, max_len=MAX_LEN, batch_size=2,
+                            collect_logits=True, chunk_prefill=4,
+                            prefix_cache=True)
+    _assert_same(whole.run(_requests(prompts)),
+                 chunked.run(_requests(prompts)))
+
+
+def test_moe_rejects_chunk_prefill(smoke):
+    moe = get("deepseek-v2-lite-16b").make_smoke()
+    assert not moe.supports_chunked_prefill
+    params = init_params(moe.param_defs(), jax.random.key(0))
+    with pytest.raises(ValueError, match="sequence-global"):
+        ServingEngine(moe, params, max_len=MAX_LEN, chunk_prefill=4)
+
+
+# ---------------------------------------------------------------------------
+# Compile-count satellite: ragged prompts share pow2 buckets
+# ---------------------------------------------------------------------------
+
+def test_bounded_prefill_compiles_across_ragged_prompts(smoke):
+    """20 ragged prompt lengths compile O(log max_len) prefill variants,
+    not one per length (the static-s recompilation blowup)."""
+    model, params = smoke
+    rng = np.random.default_rng(0)
+    lens = [int(x) for x in rng.integers(2, MAX_LEN - GEN, size=20)]
+    assert len(set(lens)) > 6                 # genuinely ragged
+    eng = ServingEngine(model, params, max_len=MAX_LEN, batch_size=4)
+    eng.run(_requests(_prompts(model, lens)))
+    # buckets <= {2,4,8,16,32}: one whole-prefill trace per bucket
+    assert eng.prefill_trace_count <= 5, eng.scheduler_report()
+
+    chunked = ServingEngine(model, params, max_len=MAX_LEN, batch_size=4,
+                            chunk_prefill=8)
+    chunked.run(_requests(_prompts(model, lens)))
+    # chunk traces: one per (chunk, bucket) pair actually exercised
+    assert chunked.prefill_trace_count <= 6, chunked.scheduler_report()
+    _assert_same(sorted(eng._completions, key=lambda c: c.request_id),
+                 sorted(chunked._completions, key=lambda c: c.request_id))
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache: full hit, partial hit, boundary + invalidation cases
+# ---------------------------------------------------------------------------
+
+def test_prefix_full_hit_bit_exact(smoke):
+    model, params = smoke
+    [p] = _prompts(model, [9])
+    eng = ServingEngine(model, params, max_len=MAX_LEN, batch_size=1,
+                        collect_logits=True, chunk_prefill=4,
+                        prefix_cache=True)
+    a = eng.run([Request(0, p, GEN)])
+    chunks_before = eng.scheduler_report()["prefill_chunks"]
+    b = eng.run([Request(1, p, GEN)])
+    st = eng.scheduler_report()
+    assert st["prefix_cache"]["hits"] >= 1
+    # the repeat ran zero prefill chunks: the stored cache+logits replaced it
+    assert st["prefill_chunks"] == chunks_before
+    assert a[0].tokens == b[0].tokens
+    np.testing.assert_array_equal(a[0].logits, b[0].logits)
+
+
+def test_prefix_partial_hit_resumes_bit_exact(smoke):
+    """A shared system prompt hits a chunk-aligned stored prefix; the
+    resumed suffix must finish bit-identically to a cold engine."""
+    model, params = smoke
+    rng = np.random.default_rng(5)
+    sysp = rng.integers(0, model.cfg.vocab, size=12).astype(np.int32)
+    pa = np.concatenate([sysp, rng.integers(0, model.cfg.vocab,
+                                            size=7).astype(np.int32)])
+    pb = np.concatenate([sysp, rng.integers(0, model.cfg.vocab,
+                                            size=5).astype(np.int32)])
+    eng = ServingEngine(model, params, max_len=MAX_LEN, batch_size=1,
+                        collect_logits=True, chunk_prefill=4,
+                        prefix_cache=True)
+    eng.run([Request(0, pa, GEN)])
+    hits0 = eng.scheduler_report()["prefix_cache"]["hits"]
+    got = [c for c in eng.run([Request(1, pb, GEN)]) if c.request_id == 1]
+    assert eng.scheduler_report()["prefix_cache"]["hits"] > hits0
+    cold = ServingEngine(model, params, max_len=MAX_LEN, batch_size=1,
+                         collect_logits=True, chunk_prefill=4)
+    ref = cold.run([Request(1, pb, GEN)])
+    _assert_same(ref, got)
+
+
+def test_prefix_longer_than_prompt_not_misused(smoke):
+    """Caching a 12-token prompt must not poison a 6-token prompt that is
+    its prefix: only stored entries *shorter or equal* to the query can be
+    reused (the chunk-aligned sub-prefix), never the longer cache with
+    extra live rows."""
+    model, params = smoke
+    [long_p] = _prompts(model, [12], key=9)
+    short_p = long_p[:6]
+    eng = ServingEngine(model, params, max_len=MAX_LEN, batch_size=1,
+                        collect_logits=True, chunk_prefill=4,
+                        prefix_cache=True)
+    eng.run([Request(0, long_p, GEN)])
+    got = [c for c in eng.run([Request(1, short_p, GEN)])
+           if c.request_id == 1]
+    assert eng.scheduler_report()["prefix_cache"]["hits"] >= 1
+    cold = ServingEngine(model, params, max_len=MAX_LEN, batch_size=1,
+                         collect_logits=True)
+    _assert_same(cold.run([Request(1, short_p, GEN)]), got)
+
+
+def test_stage_params_invalidates_prefix_cache(smoke):
+    model, params = smoke
+    [p] = _prompts(model, [8])
+    eng = ServingEngine(model, params, max_len=MAX_LEN, batch_size=1,
+                        chunk_prefill=4, prefix_cache=True)
+    eng.run([Request(0, p, GEN)])
+    assert eng.scheduler_report()["prefix_cache"]["entries"] > 0
+    eng.stage_params(params)                  # hot swap (same tree is fine)
+    eng.run([Request(1, p, GEN)])
+    st = eng.scheduler_report()["prefix_cache"]
+    assert st["invalidations"] == 1
+    assert st["invalidated_entries"] > 0
+    assert st["hits"] == 0                    # post-swap lookups all missed
+
+
+def test_prefix_cache_lru_eviction_while_serving(smoke):
+    """A capacity-2 LRU keeps serving correctly while evicting: entries
+    rotate out under pressure yet every completion stays bit-exact."""
+    model, params = smoke
+    prompts = _prompts(model, [6, 9, 12, 7], key=11)
+    pc = PrefixCache(capacity=2)
+    eng = ServingEngine(model, params, max_len=MAX_LEN, batch_size=2,
+                        collect_logits=True, chunk_prefill=4,
+                        prefix_cache=pc)
+    got = eng.run(_requests(prompts))
+    st = eng.scheduler_report()["prefix_cache"]
+    assert st["evictions"] > 0 and st["entries"] <= 2
+    whole = ServingEngine(model, params, max_len=MAX_LEN, batch_size=2,
+                          collect_logits=True)
+    _assert_same(whole.run(_requests(prompts)), got)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler edge cases: shed mid-prefill, zero budget, degenerate chunks
+# ---------------------------------------------------------------------------
+
+def test_shed_while_prefilling(smoke):
+    """Evicting a slot in the *prefilling* phase discards its private
+    chunk cache without corrupting the neighbours' decode."""
+    model, params = smoke
+    prompts = _prompts(model, [16, 6], key=13)
+    eng = ServingEngine(model, params, max_len=MAX_LEN, batch_size=2,
+                        collect_logits=True, chunk_prefill=4,
+                        prefix_cache=True)
+    eng.submit_all(_requests(prompts))
+    eng.step()                                # both admitted, one chunk in
+    assert any(s is not None and s.phase == "prefill" for s in eng._slots)
+    assert eng.shed_request(0)                # still mid-prefill
+    comps = eng.run()
+    shed = [c for c in comps if c.request_id == 0][0]
+    assert shed.shed and shed.slo_met is False and shed.tokens == []
+    survivor = [c for c in comps if c.request_id == 1][0]
+    cold = ServingEngine(model, params, max_len=MAX_LEN, batch_size=1,
+                         collect_logits=True)
+    _assert_same(cold.run([Request(1, prompts[1], GEN)]), [survivor])
+
+
+def test_shed_queued_request(smoke):
+    model, params = smoke
+    prompts = _prompts(model, [6, 6], key=14)
+    eng = ServingEngine(model, params, max_len=MAX_LEN, batch_size=1,
+                        chunk_prefill=4)
+    eng.submit_all(_requests(prompts))
+    assert eng.shed_request(1)                # never admitted
+    assert not eng.shed_request(99)
+    comps = eng.run()
+    assert [c.request_id for c in comps] == [0, 1]
+    assert comps[1].shed and comps[1].tokens == []
+    assert len(comps[0].tokens) == GEN
+
+
+def test_zero_budget_holds_then_completes(smoke):
+    """prefill_budget=0 parks prefilling slots with zero progress (and
+    run() refuses to spin forever); restoring the budget completes the
+    held request bit-exactly."""
+    model, params = smoke
+    [p] = _prompts(model, [10], key=15)
+    eng = ServingEngine(model, params, max_len=MAX_LEN, batch_size=1,
+                        collect_logits=True, chunk_prefill=4,
+                        prefill_budget=0)
+    eng.submit(Request(0, p, GEN))
+    eng.step()
+    st = eng._slots[0]
+    assert st is not None and st.phase == "prefill" and st.pf.pos == 0
+    with pytest.raises(RuntimeError, match="stalled"):
+        eng.run()
+    eng.prefill_budget = None                 # lift the hold
+    got = eng.run()
+    cold = ServingEngine(model, params, max_len=MAX_LEN, batch_size=1,
+                         collect_logits=True)
+    _assert_same(cold.run([Request(0, p, GEN)]), got)
+
+
+def test_chunk_larger_than_prompt_degenerates_to_whole(smoke):
+    """chunk >= bucket: exactly one chunk per prompt, still bit-exact."""
+    model, params = smoke
+    prompts = _prompts(model, [3, 6], key=16)
+    eng = ServingEngine(model, params, max_len=MAX_LEN, batch_size=2,
+                        collect_logits=True, chunk_prefill=MAX_LEN)
+    got = eng.run(_requests(prompts))
+    assert eng.scheduler_report()["prefill_chunks"] == 2
+    whole = ServingEngine(model, params, max_len=MAX_LEN, batch_size=2,
+                          collect_logits=True)
+    _assert_same(whole.run(_requests(prompts)), got)
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware admission
+# ---------------------------------------------------------------------------
+
+def test_slo_shed_on_admit_and_met(smoke):
+    model, params = smoke
+    prompts = _prompts(model, [6, 8], key=17)
+    eng = ServingEngine(model, params, max_len=MAX_LEN, batch_size=2,
+                        slo=SLOConfig(step_time_ms=10.0))
+    eng.submit(Request(0, prompts[0], GEN, deadline_ms=1000.0))
+    eng.submit(Request(1, prompts[1], GEN, deadline_ms=0.5))  # hopeless
+    comps = eng.run()
+    assert comps[1].shed and comps[1].slo_met is False
+    assert comps[1].tokens == []              # shed before any compute
+    assert comps[0].slo_met is True and len(comps[0].tokens) == GEN
+    slo = eng.scheduler_report()["slo"]
+    assert slo["shed_on_admit"] == 1 and slo["met"] == 1
+    assert slo["step_ms"] == 10.0
+
+
+def test_slo_sheds_admitted_request_mid_decode(smoke):
+    """With admission-time shedding off, a hopeless deadline is admitted
+    anyway and then shed mid-flight by the virtual-clock expiry check."""
+    model, params = smoke
+    [p] = _prompts(model, [6], key=18)
+    eng = ServingEngine(model, params, max_len=MAX_LEN, batch_size=1,
+                        slo=SLOConfig(step_time_ms=10.0,
+                                      shed_on_admit=False))
+    eng.submit(Request(0, p, 8, deadline_ms=15.0))   # ~2 steps of budget
+    comps = eng.run()
+    assert comps[0].shed and comps[0].slo_met is False
+    assert 0 < len(comps[0].tokens) < 8       # partial progress kept
+    assert eng.scheduler_report()["slo"]["shed_admitted"] == 1
+
+
+def test_slo_edf_admission_order(smoke):
+    """Tight deadlines jump the queue: EDF admits the later-submitted but
+    tighter request first when only one slot is free."""
+    model, params = smoke
+    prompts = _prompts(model, [4, 4, 4], key=19)
+    eng = ServingEngine(model, params, max_len=MAX_LEN, batch_size=1,
+                        slo=SLOConfig(step_time_ms=1.0))
+    eng.submit(Request(0, prompts[0], GEN, deadline_ms=10_000.0))
+    eng.submit(Request(1, prompts[1], GEN, deadline_ms=10_000.0))
+    eng.submit(Request(2, prompts[2], GEN, deadline_ms=50.0))
+    comps = eng.run()
+    by_id = {c.request_id: c for c in comps}
+    assert by_id[2].admitted_step <= by_id[1].admitted_step
+    assert all(not c.shed for c in comps)
+
+
+def test_no_deadline_means_slo_met_none(smoke):
+    model, params = smoke
+    [p] = _prompts(model, [6], key=20)
+    eng = ServingEngine(model, params, max_len=MAX_LEN, batch_size=1)
+    comps = eng.run([Request(0, p, GEN)])
+    assert comps[0].slo_met is None and not comps[0].shed
+
+
+# ---------------------------------------------------------------------------
+# Fleet: per-lane caches + affinity routing (no mesh required)
+# ---------------------------------------------------------------------------
+
+def test_fleet_prefix_affinity_routes_to_warm_lane(smoke):
+    model, params = smoke
+    [p, q] = _prompts(model, [10, 7], key=21)
+    fleet = FleetServingEngine(model, [params, params], max_len=MAX_LEN,
+                               batch_size=2, chunk_prefill=4,
+                               prefix_cache=True)
+    lane_a = fleet.submit(Request(0, p, GEN))
+    fleet.run()
+    lane_b = fleet.submit(Request(1, p, GEN))     # repeat -> warm lane
+    lane_c = fleet.submit(Request(2, q, GEN))     # cold -> round-robin
+    comps = fleet.run()
+    assert lane_a == lane_b
+    assert comps[0].tokens == comps[1].tokens
+    rep = fleet.scheduler_report()
+    assert rep["prefix_cache"]["hits"] >= 1
+    assert len(rep["lanes"]) == 2
+    assert lane_c in (0, 1)
+
+
+def test_fleet_rejects_shared_prefix_cache_instance(smoke):
+    model, params = smoke
+    with pytest.raises(ValueError, match="per-lane"):
+        FleetServingEngine(model, [params, params], max_len=MAX_LEN,
+                           prefix_cache=PrefixCache())
